@@ -1,0 +1,81 @@
+"""Paper Tables 3, 4 and 7 analogues.
+
+Table 3 — per-tuple processing time T under varying NUMA distance
+          (measured = DES round-trip; estimated = Formula 2 model).
+Table 4 — model accuracy: estimated vs measured throughput for the RLAS
+          plan of each application (paper rel. errors: 0.08/0.14/0.02/0.06).
+Table 7 — compression ratio r: throughput vs optimization runtime.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ExecutionGraph, evaluate, rlas_optimize, server_a
+from repro.streaming.apps import ALL_APPS, word_count
+from repro.streaming.simulator import des_simulate, fluid_solve
+
+from .common import des_measure, emit, optimized_plan
+
+
+def table3_rma():
+    """Measured vs estimated T for WC splitter/counter at socket distances."""
+    m = server_a()
+    app = word_count()
+    pairs = [("splitter", "parser"), ("counter", "splitter")]
+    dists = [("S0-S0", 0, 0), ("S0-S1", 0, 1), ("S0-S3", 0, 3),
+             ("S0-S4", 0, 4), ("S0-S7", 0, 7)]
+    for op, producer in pairs:
+        spec = app.graph.operators[op]
+        for label, si, sj in dists:
+            tf = m.fetch_time(si, sj, spec.tuple_bytes)
+            est_ns = spec.exec_ns + tf * 1e9
+            # measured: run the whole app on the DES with `op` placed at
+            # distance (si, sj) from its producer; derive ns/tuple from the
+            # unit's observed busy time
+            sub = ExecutionGraph(app.graph, {n: 1 for n in
+                                             app.graph.operators})
+            placement = [si] * sub.n_units
+            idx = {r.op: i for i, r in enumerate(sub.replicas)}
+            placement[idx[op]] = sj
+            t0 = time.time()
+            des = des_simulate(sub, m, placement, input_rate=3e5,
+                               batch=64, horizon=0.004)
+            wall = (time.time() - t0) * 1e6
+            i = idx[op]
+            meas_ns = (des.busy_s[i] / max(des.unit_tuples[i], 1)) * 1e9
+            rel = abs(meas_ns - est_ns) / max(meas_ns, 1e-9)
+            emit(f"table3/{op}/{label}", wall,
+                 f"meas_ns={meas_ns:.1f};est_ns={est_ns:.1f};"
+                 f"rel={rel:.3f}")
+
+
+def table4_accuracy():
+    for name in ALL_APPS:
+        app, machine, res, wall = optimized_plan(name, "server_a")
+        est = res.R
+        t0 = time.time()
+        des = des_measure(app, machine, res)
+        wall_m = (time.time() - t0) * 1e6
+        rel = abs(des.R - est) / max(des.R, 1e-9)
+        emit(f"table4/{name}", wall_m,
+             f"meas={des.R:.3e};est={est:.3e};rel_err={rel:.3f}")
+
+
+def table7_compress():
+    for r in [1, 3, 5, 10, 15]:
+        t0 = time.time()
+        app, machine, res, _ = optimized_plan("wc", "server_a", compress=r)
+        wall = (time.time() - t0) * 1e6
+        emit(f"table7/r={r}", wall, f"R={res.R:.3e};opt_s={wall/1e6:.2f}")
+
+
+def main():
+    table3_rma()
+    table4_accuracy()
+    table7_compress()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: CSV row protocol + cached RLAS plans.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``us_per_call`` is
+the optimizer/simulator wall time per invocation, ``derived`` the
+benchmark-specific metric (throughput, relative error, speedup...).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+from repro.core import (ExecutionGraph, MachineSpec, evaluate, rlas_optimize,
+                        server_a, server_b, subset)
+from repro.streaming.apps import ALL_APPS
+from repro.streaming.simulator import fluid_solve, measure_capacity
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@functools.lru_cache(maxsize=64)
+def optimized_plan(app_name: str, machine_name: str, n_sockets: int = 8,
+                   compress: int = 5, tf_mode: str = "relative"):
+    """RLAS plan for (app, machine) with the paper's settings (r=5)."""
+    app = ALL_APPS[app_name]()
+    machine = {"server_a": server_a, "server_b": server_b}[machine_name]()
+    if n_sockets < machine.n_sockets:
+        machine = subset(machine, n_sockets)
+    t0 = time.time()
+    res = rlas_optimize(app.graph, machine, input_rate=None,
+                        compress_ratio=compress, bestfit=True,
+                        max_nodes=5000, tf_mode=tf_mode)
+    wall = time.time() - t0
+    return app, machine, res, wall
+
+
+def des_measure(app, machine, res, horizon: float = 0.008, seed: int = 0):
+    """Measured throughput of an optimized plan on the DES."""
+    return measure_capacity(res.graph, machine, res.placement.placement,
+                            horizon=horizon, seed=seed)

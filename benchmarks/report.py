@@ -1,0 +1,81 @@
+"""Render the roofline table + hillclimb comparisons into EXPERIMENTS.md.
+
+Replaces the <!-- ROOFLINE_TABLE --> marker with a markdown table built from
+the dry-run JSONLs.  Idempotent: re-running regenerates the table between
+the marker and the following blank-line-delimited fence.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+from .roofline import load, terms
+
+
+def roofline_markdown(paths) -> str:
+    by_key = {}
+    skips = []
+    for path in paths:                      # later files override earlier
+        if not os.path.exists(path):
+            continue
+        for rec in load(path):
+            if rec["status"] != "ok":
+                skips.append(rec)
+                continue
+            t = terms(rec)
+            if t:
+                by_key[(t["arch"], t["shape"], t["mesh"])] = t
+    rows = sorted(by_key.values(),
+                  key=lambda t: (t["arch"], t["shape"], t["mesh"]))
+    lines = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | "
+        "dominant | useful | roofline frac | param GiB/dev | opt GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for t in rows:
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['mesh']} "
+            f"| {t['t_compute']:.3e} | {t['t_memory']:.3e} "
+            f"| {t['t_collective']:.3e} | {t['dominant']} "
+            f"| {t['useful_ratio']:.2f} | **{t['roofline_frac']:.3f}** "
+            f"| {t['param_gib']:.2f} | {t['opt_gib']:.2f} |")
+    seen = set()
+    for rec in skips:
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        reason = rec["reason"].splitlines()[0][:70]
+        lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                     f"| — | — | — | {rec['status']} | — | — | — | — |")
+    return "\n".join(lines)
+
+
+def inject(md_path: str = "EXPERIMENTS.md",
+           marker: str = "<!-- ROOFLINE_TABLE -->",
+           paths=("results/dryrun_baseline.jsonl",
+                  "results/dryrun_hillclimb.jsonl",
+                  "results/dryrun_hillclimb2.jsonl",
+                  "results/dryrun_hillclimb3.jsonl",
+                  "results/dryrun_hillclimb4.jsonl",
+                  "results/dryrun_hillclimb5.jsonl")):
+    table = roofline_markdown(paths)
+    text = open(md_path).read()
+    begin = f"{marker}\n<!-- BEGIN GENERATED -->"
+    end = "<!-- END GENERATED -->"
+    block = f"{begin}\n{table}\n{end}"
+    if begin in text:
+        text = re.sub(re.escape(begin) + r".*?" + re.escape(end), block,
+                      text, flags=re.S)
+    else:
+        text = text.replace(marker, block)
+    open(md_path, "w").write(text)
+    print(f"injected {table.count(chr(10)) + 1} lines into {md_path}")
+
+
+if __name__ == "__main__":
+    inject(*sys.argv[1:])

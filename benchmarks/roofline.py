@@ -1,0 +1,140 @@
+"""Roofline derivation from the dry-run sweep (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, all in seconds per step:
+
+  compute    = per-device HLO FLOPs / (197 TFLOP/s bf16)
+  memory     = per-device HLO bytes accessed / (819 GB/s HBM)
+  collective = per-device collective payload bytes / (50 GB/s ICI link)
+
+FLOPs/bytes are scan-corrected (launch/dryrun.py docstring); sLSTM's analytic
+extra is global, so it is divided by the device count here.  MODEL_FLOPS is
+6·N_active·tokens (train), 2·N_active·tokens (prefill) or 2·N_active·batch
+(decode); the ratio MODEL_FLOPS / (HLO FLOPs x devices) exposes
+remat/dispatch/replication waste.  The "roofline fraction" score is
+T_ideal / max(term): the fraction of the compute roofline this lowering
+would attain if the dominant term were perfectly overlapped with nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": (4096 * 256, "train"),
+    "prefill_32k": (32768 * 32, "prefill"),
+    "decode_32k": (128, "decode"),
+    "long_500k": (1, "decode"),
+}
+
+
+def _analytic_hbm_bytes(rec: Dict, n_dev: int) -> float:
+    """Per-device HBM traffic model (the CPU backend's "bytes accessed"
+    counts every unfused intermediate — useless as a TPU memory term).
+
+    train:   params read fwd+bwd + grad write + opt state r/w
+             + activation traffic (read+write per layer, x2 for remat)
+    prefill: params read + activation traffic
+    decode:  params read + full KV-cache/state read + cache write
+    """
+    from repro.configs import get
+    cfg = get(rec["arch"])
+    tokens, kind = SHAPE_TOKENS[rec["shape"]]
+    p = rec["param_bytes_per_device"]
+    o = rec.get("opt_bytes_per_device", 0.0)
+    act_rw = 4                                # read+write, fwd + remat-bwd
+    acts = tokens / n_dev * cfg.d_model * 2 * cfg.n_layers * act_rw
+    if kind == "train":
+        return 3 * p + 2 * o + acts
+    if kind == "prefill":
+        return p + acts / 2
+    cache = rec.get("cache_bytes_per_device", 0.0)
+    return p + cache * 1.05
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if rec["status"] != "ok":
+        return None
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    flops_dev = rec["flops"] + rec.get("extra_flops", 0.0) / n_dev
+    t_compute = flops_dev / PEAK
+    t_memory = _analytic_hbm_bytes(rec, n_dev) / HBM
+    t_memory_hlo = rec["bytes_accessed"] / HBM      # unfused upper bound
+    coll = rec.get("coll") or {}
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+    t_coll = coll_bytes / LINK
+    tokens, kind = SHAPE_TOKENS[rec["shape"]]
+    mult = {"train": 6, "prefill": 2, "decode": 2}[kind]
+    model_flops = mult * rec["n_active"] * tokens
+    t_ideal = model_flops / (n_dev * PEAK)
+    tmax = max(t_compute, t_memory, t_coll, 1e-30)
+    dom = {t_compute: "compute", t_memory: "memory",
+           t_coll: "collective"}[tmax]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "t_memory_hlo": t_memory_hlo,
+        "dominant": dom, "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops_dev * n_dev, 1e-30),
+        "roofline_frac": t_ideal / tmax,
+        "peak_gib": rec["peak_bytes_per_device"] / 2**30,
+        "param_gib": rec["param_bytes_per_device"] / 2**30,
+        "opt_gib": rec.get("opt_bytes_per_device", 0.0) / 2**30,
+        "cache_gib": rec.get("cache_bytes_per_device", 0.0) / 2**30,
+        "coll_count": coll.get("count", 0),
+    }
+
+
+def load(path: str) -> List[Dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(recs.values())
+
+
+def main(path: str = "results/dryrun_baseline.jsonl",
+         out_csv: str = "results/roofline.csv"):
+    if not os.path.exists(path):
+        print(f"roofline,0.0,skipped_no_dryrun_results({path})")
+        return
+    rows = []
+    skips = []
+    for rec in sorted(load(path), key=lambda r: (r["arch"], r["shape"],
+                                                 r["mesh"])):
+        if rec["status"] == "skipped":
+            skips.append(rec)
+            continue
+        t = terms(rec)
+        if t is None:
+            continue
+        rows.append(t)
+        frac = t["roofline_frac"]
+        print(f"roofline/{t['arch']}/{t['shape']}/{t['mesh']},0.0,"
+              f"dom={t['dominant']};frac={frac:.3f};"
+              f"useful={t['useful_ratio']:.3f};"
+              f"tc={t['t_compute']:.3e};tm={t['t_memory']:.3e};"
+              f"tx={t['t_collective']:.3e}")
+    for rec in skips:
+        print(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']},0.0,"
+              f"skipped:{rec['reason'][:60]}")
+    if rows and out_csv:
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+        keys = list(rows[0].keys())
+        with open(out_csv, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for t in rows:
+                f.write(",".join(str(t[k]) for k in keys) + "\n")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,40 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the TPU roofline table derived from the dry-run sweep.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slowest sections (monte-carlo, runtime)")
+    ap.add_argument("--dryrun-jsonl", default="results/dryrun_baseline.jsonl")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from . import bench_tables, bench_figures, roofline
+    bench_tables.table3_rma()
+    bench_tables.table4_accuracy()
+    bench_tables.table7_compress()
+    bench_figures.fig7_latency()
+    bench_figures.fig9_scalability()
+    bench_figures.fig10_gap_to_ideal()
+    bench_figures.fig12_fixed_capability()
+    bench_figures.fig13_placement_strategies()
+    if not args.quick:
+        bench_figures.fig14_monte_carlo()
+        bench_figures.fig16_factor_analysis()
+    roofline.main(args.dryrun_jsonl)
+    print(f"total,{(time.time() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

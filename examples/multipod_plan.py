@@ -1,0 +1,31 @@
+"""RLAS as a multi-pod auto-planner (DESIGN.md §2): decide DP-vs-PP across
+pods from the paper's performance model, then simulate losing a pod and
+re-plan (elastic scaling, paper §5.3).
+
+  PYTHONPATH=src python examples/multipod_plan.py [--arch granite_3_2b]
+"""
+import argparse
+
+from repro.configs import get
+from repro.core.autoshard import plan_stages
+from repro.launch.elastic import simulate_pod_failure
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite_3_2b")
+args = ap.parse_args()
+cfg = get(args.arch)
+
+plan = plan_stages(cfg, n_pods=2, chips_per_pod=256)
+print(f"== {cfg.name} on 2 pods x 256 chips ==")
+print(f"stage -> pod: {plan.assignment}")
+print(f"replication (chips per stage): {plan.parallelism}")
+print(f"pipeline crosses pods: {plan.crosses_pods} "
+      f"(False = RLAS chose DP-across-pods, collocating the pipeline)")
+print(f"modeled throughput: {plan.throughput:.2f} microbatches/s")
+
+before, after = simulate_pod_failure(cfg, 2, 1)
+print(f"\n== pod failure: 2 pods -> 1 pod ==")
+print(f"throughput {before.est_throughput:.2f} -> {after.est_throughput:.2f}"
+      f" microbatches/s ({after.est_throughput/before.est_throughput:.0%})")
+print("restore path: ckpt.restore(..., shardings=<new mesh>) reshards the "
+      "last committed checkpoint onto the surviving pods.")

@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b [moe]: 128 experts top-8.
+94L d_model=4096 64H (GQA kv=4) d_ff(expert)=1536 vocab=151936
+[hf:Qwen/Qwen3-30B-A3B scaled per assignment; hf].
+Full attention -> long_500k skipped."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936, period=(("attn", "moe"),),
+    n_experts=128, top_k=8, d_expert=1536, rope_theta=1_000_000.0)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab=256, period=(("attn", "moe"),),
+    n_experts=8, top_k=2, d_expert=64, dtype="float32")

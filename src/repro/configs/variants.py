@@ -1,0 +1,97 @@
+"""Hillclimb variant configs (EXPERIMENTS.md §Perf).
+
+Each variant is one hypothesis -> change step against a baseline cell; the
+dry-run sweep accepts them as ``--arch <variant>``.  Baseline configs are
+never mutated — both rows stay reportable side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .h2o_danube_1_8b import CONFIG as _danube
+from .qwen3_moe_235b_a22b import CONFIG as _qwen3
+from .smollm_360m import CONFIG as _smollm
+
+# H1 (smollm train/prefill, worst roofline fraction): 15 q-heads / 5 kv-heads
+# don't divide the 16-way model axis -> GSPMD all-gathers K/V and replicates
+# the quadratic attention einsums over the TP axis.  Pad to TPU-friendly
+# 16 q / 8 kv heads (arch variant: +2.3% params, GQA group 3 -> 2).
+smollm_360m_padheads = dataclasses.replace(
+    _smollm, name="smollm-360m+padheads", n_heads=16, n_kv_heads=8,
+    head_dim=64)
+
+# H2 (danube prefill_32k, most collective-bound): the big all-gathers are the
+# FSDP-free layer-boundary activation gathers plus kv-head gathers; larger
+# attention chunks cut the number of collective-bearing boundary ops, and
+# q_chunk=2048 halves the block-boundary overhead of the blockwise loop.
+h2o_danube_1_8b_bigchunk = dataclasses.replace(
+    _danube, name="h2o-danube-1.8b+bigchunk", q_chunk=2048, kv_chunk=2048)
+
+# H3 (qwen3 train, MoE dispatch = the paper's cross-socket shuffle analogue):
+# drop the capacity factor to 1.0 (expert FLOPs scale linearly with it) and
+# keep dispatch sharded hierarchically.  Overflow drops rise slightly (the
+# standard throughput/quality trade, recorded in DESIGN.md).
+qwen3_moe_235b_a22b_cap1 = dataclasses.replace(
+    _qwen3, name="qwen3-moe-235b-a22b+cap1", capacity_factor=1.0)
+
+# H1 iteration 2: after head padding the gradient all-reduce of replicated
+# params dominates; FSDP over 'data' converts it into per-layer weight
+# all-gathers + a reduce-scatter of stacked grads.
+smollm_360m_padheads_fsdp = dataclasses.replace(
+    smollm_360m_padheads, name="smollm-360m+padheads+fsdp", force_fsdp=True)
+
+# H1 iteration 3 (iteration 2 refuted): the residual collectives are TP
+# activation psums; a 371M model doesn't need TP at all on 256 chips.
+# Pure DP = batch over both mesh axes, params replicated -- the paper's
+# "right-size the resources" insight (Server B underutilization, SS6.4).
+smollm_360m_padheads_dp = dataclasses.replace(
+    smollm_360m_padheads, name="smollm-360m+padheads+puredp", pure_dp=True)
+
+# H2 (danube prefill_32k): per-layer TP activation all-reduces (2 x 671MB
+# f32) dwarf the kv gathers.  danube is 1.8B -> weights fit replicated;
+# context parallelism (sequence over 'model', batch over 'data') removes the
+# TP psums entirely and leaves only the small K/V gathers.
+h2o_danube_1_8b_seqp = dataclasses.replace(
+    _danube, name="h2o-danube-1.8b+seqp", pure_dp=True, seq_shard=True)
+
+# H3 iteration 2: grouped local dispatch — align capacity slots with the 16
+# data shards so dispatch moves tokens only across the expert axis
+# (all-to-all shaped) instead of all-gathering every token everywhere.
+qwen3_moe_235b_a22b_cap1_grouped = dataclasses.replace(
+    qwen3_moe_235b_a22b_cap1, name="qwen3-moe-235b-a22b+cap1+grouped",
+    moe_dispatch_groups=16)
+
+# H3 iteration 3: the combine scatter accumulates in f32; top-k<=8 partial
+# sums tolerate bf16 accumulation (standard practice) and halve the
+# dispatch-side traffic that still dominates after grouping.
+qwen3_moe_235b_a22b_cg_bf16 = dataclasses.replace(
+    qwen3_moe_235b_a22b_cap1_grouped,
+    name="qwen3-moe-235b-a22b+cap1+grouped+bf16c",
+    moe_combine_dtype="bfloat16")
+
+# H1 generalization: every sub-1B train cell shows the TP-overkill
+# signature; pure DP applies wherever params + opt state fit replicated.
+from .xlstm_125m import CONFIG as _xlstm
+from .whisper_small import CONFIG as _whisper
+xlstm_125m_puredp = dataclasses.replace(
+    _xlstm, name="xlstm-125m+puredp", pure_dp=True)
+whisper_small_puredp = dataclasses.replace(
+    _whisper, name="whisper-small+puredp", pure_dp=True)
+
+VARIANTS = {
+    "xlstm_125m_puredp": xlstm_125m_puredp,
+    "whisper_small_puredp": whisper_small_puredp,
+    "qwen3_moe_235b_a22b_cg_bf16": qwen3_moe_235b_a22b_cg_bf16,
+    "qwen3_moe_235b_a22b_cap1_grouped": qwen3_moe_235b_a22b_cap1_grouped,
+    "h2o_danube_1_8b_seqp": h2o_danube_1_8b_seqp,
+    "smollm_360m_padheads_dp": smollm_360m_padheads_dp,
+    "smollm_360m_padheads_fsdp": smollm_360m_padheads_fsdp,
+    "smollm_360m_padheads": smollm_360m_padheads,
+    "h2o_danube_1_8b_bigchunk": h2o_danube_1_8b_bigchunk,
+    "qwen3_moe_235b_a22b_cap1": qwen3_moe_235b_a22b_cap1,
+}
+
+# display names ("smollm-360m+padheads+puredp") must resolve too
+for _cfg in list(VARIANTS.values()):
+    _key = _cfg.name.replace("-", "_").replace(".", "_").replace("+", "_")
+    VARIANTS.setdefault(_key, _cfg)

@@ -1,0 +1,189 @@
+"""Operator graphs (paper §2.2).
+
+A :class:`LogicalGraph` is the application DAG: vertices are continuously
+running operators, edges are streams.  Replication expands it into an
+:class:`ExecutionGraph` whose vertices are *replicas* (the schedulable unit —
+"we refer a replica of an operator simply as an operator", §3.1).  Shuffle
+partitioning connects every producer replica to every consumer replica with
+the producer's output split evenly.
+
+The *compress-graph* heuristic (§4, heuristic 3) groups up to ``ratio``
+replicas of one logical operator into a single schedulable unit whose capacity
+and resource demand scale with the group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """Profiled operator specification (paper Table 1, "operator specific").
+
+    ``exec_ns``  — T^e, average execution+emit time per input tuple (ns).
+    ``tuple_bytes`` — N, average size of one *input* tuple fetched from the
+                   producer (bytes).
+    ``mem_bytes``  — M, memory traffic per processed tuple (bytes) charged
+                   against the local-bandwidth budget B.
+    ``selectivity`` — output tuples emitted per input tuple processed.
+    """
+
+    name: str
+    exec_ns: float
+    tuple_bytes: float = 64.0
+    mem_bytes: float = 64.0
+    selectivity: float = 1.0
+    is_spout: bool = False
+
+    @property
+    def exec_s(self) -> float:
+        return self.exec_ns * 1e-9
+
+
+@dataclasses.dataclass
+class LogicalGraph:
+    """Application DAG over logical operators.
+
+    ``edge_selectivity`` optionally overrides the producer's default
+    selectivity per (producer, consumer) stream — LR's operators emit
+    multiple output streams with distinct selectivities (paper Table 8).
+    """
+
+    operators: Dict[str, OperatorSpec]
+    edges: List[Tuple[str, str]]                 # (producer, consumer)
+    edge_selectivity: Dict[Tuple[str, str], float] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        names = set(self.operators)
+        for u, v in self.edges:
+            assert u in names and v in names, f"unknown edge {u}->{v}"
+        self._check_acyclic()
+
+    def sel(self, u: str, v: str) -> float:
+        return self.edge_selectivity.get((u, v), self.operators[u].selectivity)
+
+    def _check_acyclic(self) -> None:
+        order = self.topo_order()
+        assert len(order) == len(self.operators), "graph has a cycle"
+
+    def producers(self, name: str) -> List[str]:
+        return [u for u, v in self.edges if v == name]
+
+    def consumers(self, name: str) -> List[str]:
+        return [v for u, v in self.edges if u == name]
+
+    def spouts(self) -> List[str]:
+        return [n for n, op in self.operators.items() if op.is_spout]
+
+    def sinks(self) -> List[str]:
+        cons = {u for u, _ in self.edges}
+        return [n for n in self.operators if n not in cons]
+
+    def topo_order(self) -> List[str]:
+        indeg = {n: 0 for n in self.operators}
+        for _, v in self.edges:
+            indeg[v] += 1
+        frontier = sorted(n for n, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while frontier:
+            n = frontier.pop(0)
+            order.append(n)
+            for c in self.consumers(n):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    frontier.append(c)
+            frontier.sort()
+        return order
+
+
+@dataclasses.dataclass(frozen=True)
+class Replica:
+    """One schedulable unit: ``group`` replicas of ``op`` scheduled together."""
+
+    op: str                    # logical operator name
+    index: int                 # replica-group index within the operator
+    group: int                 # number of fused replicas (compression, >=1)
+    spec: OperatorSpec
+
+    @property
+    def uid(self) -> str:
+        return f"{self.op}#{self.index}"
+
+
+class ExecutionGraph:
+    """Replica-level DAG produced from (logical graph, replication levels).
+
+    ``parallelism[name]`` is the replication level of each logical operator.
+    ``compress_ratio`` fuses up to that many replicas into one unit
+    (heuristic 3); the last unit of an operator may be smaller.
+    """
+
+    def __init__(self, logical: LogicalGraph, parallelism: Dict[str, int],
+                 compress_ratio: int = 1):
+        assert compress_ratio >= 1
+        self.logical = logical
+        self.parallelism = dict(parallelism)
+        self.compress_ratio = compress_ratio
+        self.replicas: List[Replica] = []
+        self._by_op: Dict[str, List[int]] = {}
+        for name in logical.topo_order():
+            k = self.parallelism.get(name, 1)
+            assert k >= 1
+            groups = _split_groups(k, compress_ratio)
+            idxs = []
+            for gi, gsize in enumerate(groups):
+                idxs.append(len(self.replicas))
+                self.replicas.append(
+                    Replica(name, gi, gsize, logical.operators[name]))
+            self._by_op[name] = idxs
+        # Replica-level edges: producer unit u routes sel(u,v) output tuples
+        # per processed input, split over consumer units by group weight
+        # (shuffle partitioning).  Edge weight = sel * group_v / k_v, i.e. the
+        # tuples arriving at unit v per tuple *processed* by unit u.
+        self.edges: List[Tuple[int, int, float]] = []   # (u, v, weight)
+        self.in_edges: Dict[int, List[Tuple[int, float]]] = {
+            i: [] for i in range(len(self.replicas))}
+        self.out_edges: Dict[int, List[Tuple[int, float]]] = {
+            i: [] for i in range(len(self.replicas))}
+        for pu, cv in logical.edges:
+            k_c = self.parallelism.get(cv, 1)
+            sel = logical.sel(pu, cv)
+            for ui in self._by_op[pu]:
+                for vi in self._by_op[cv]:
+                    w = sel * self.replicas[vi].group / k_c
+                    self.edges.append((ui, vi, w))
+                    self.in_edges[vi].append((ui, w))
+                    self.out_edges[ui].append((vi, w))
+
+    # -- convenience ------------------------------------------------------
+    def units_of(self, op: str) -> List[int]:
+        return self._by_op[op]
+
+    @property
+    def n_units(self) -> int:
+        return len(self.replicas)
+
+    def total_threads(self) -> int:
+        return sum(r.group for r in self.replicas)
+
+    def topo_unit_order(self) -> List[int]:
+        order: List[int] = []
+        for name in self.logical.topo_order():
+            order.extend(self._by_op[name])
+        return order
+
+    def sink_units(self) -> List[int]:
+        return [i for name in self.logical.sinks() for i in self._by_op[name]]
+
+    def spout_units(self) -> List[int]:
+        return [i for name in self.logical.spouts() for i in self._by_op[name]]
+
+
+def _split_groups(k: int, ratio: int) -> List[int]:
+    """Split k replicas into ceil(k/ratio) units of size <= ratio."""
+    n_units = math.ceil(k / ratio)
+    base, rem = divmod(k, n_units)
+    return [base + (1 if i < rem else 0) for i in range(n_units)]

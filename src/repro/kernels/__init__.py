@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the model zoo's compute hot-spots.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling;
+ops.py is the dispatching wrapper (pallas | blockwise-jnp | ref); ref.py the
+pure-jnp oracle. Kernels validate in interpret=True mode on CPU.
+"""
+from . import ops, ref

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the *semantic references*: small, obviously-correct, memory-naive.
+Pallas kernels and the memory-bounded jnp fallbacks in :mod:`.ops` are tested
+against these with ``assert_allclose`` over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def _mask(sq: int, skv: int, causal: bool, window: Optional[int],
+          offset: int) -> jax.Array:
+    """(sq, skv) boolean mask. ``offset`` = absolute position of q row 0
+    minus that of kv row 0 (for caches/prefill continuation)."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: Optional[int] = None,
+                  offset: int = 0, scale: Optional[float] = None) -> jax.Array:
+    """Naive attention. q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); GQA via
+    head-group broadcast. Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    m = _mask(sq, skv, causal, window, offset)
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: Optional[jax.Array] = None,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, Hq, D); k/v: (B, Hkv, S, D); ``length``: (B,) valid cache length
+    (the new token sits at position length-1). Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s)[None]
+    if length is None:
+        length = jnp.full((b,), s, jnp.int32)
+    valid = kpos < length[:, None]
+    if window is not None:
+        valid &= kpos > (length[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def mamba_scan_ref(u: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: jax.Array,
+                   h0: Optional[jax.Array] = None):
+    """Selective state-space scan (Mamba), sequential reference.
+
+    u/dt: (Bt, T, d_in); A: (d_in, N); B/C: (Bt, T, N); D: (d_in,).
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t ;  y_t = C_t . h_t + D u_t
+    Returns (y (Bt, T, d_in), h_T (Bt, d_in, N)).
+    """
+    bt, t, d_in = u.shape
+    n = A.shape[1]
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((bt, d_in, n), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+    ys = []
+    for i in range(t):
+        da = jnp.exp(dtf[:, i, :, None] * Af[None])          # (Bt, d_in, N)
+        db = dtf[:, i, :, None] * Bf[:, i, None, :]          # (Bt, d_in, N)
+        h = da * h + db * uf[:, i, :, None]
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, i]) + D * uf[:, i]
+        ys.append(y)
+    return jnp.stack(ys, 1).astype(u.dtype), h

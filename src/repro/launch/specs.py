@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape_name)`` returns the batch pytree for train/prefill
+cells or the (cache, tokens, pos) pytree for decode cells, shaped per the
+assigned input-shape table.  ``cell_plan`` decides applicability (long_500k
+needs sub-quadratic attention; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_api
+from repro.models.config import ModelConfig
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic family)
+LONG_OK_FAMILIES = {"ssm", "hybrid"}
+
+
+def long_ok(cfg: ModelConfig) -> bool:
+    return cfg.family in LONG_OK_FAMILIES or cfg.window is not None
+
+
+def cell_plan(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if runnable, else a skip reason string."""
+    if shape_name == "long_500k" and not long_ok(cfg):
+        return ("pure full-attention arch: unwindowed 524288-token cache is "
+                "the disallowed quadratic-family case (DESIGN.md §4)")
+    return None
+
+
+def _sd(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict:
+    if cfg.family == "vlm":
+        return {"embeds": _sd((batch, seq, cfg.d_model), jnp.float32),
+                "labels": _sd((batch, seq)),
+                "mask": _sd((batch, seq), jnp.float32)}
+    if cfg.family == "audio":
+        return {"frames": _sd((batch, cfg.encoder_seq, cfg.d_model),
+                              jnp.float32),
+                "inputs": _sd((batch, seq)),
+                "labels": _sd((batch, seq))}
+    return {"inputs": _sd((batch, seq)), "labels": _sd((batch, seq))}
+
+
+def decode_input_specs(cfg: ModelConfig, seq: int, batch: int):
+    """(cache_specs, tokens, pos) for one serve_step."""
+    api = model_api(cfg)
+    if cfg.is_encdec:
+        from repro.models import encdec
+        cache = jax.eval_shape(
+            lambda: encdec.init_cache(cfg, batch, max_len=seq))
+    else:
+        cache = jax.eval_shape(
+            lambda: api.init_cache(cfg, batch, max_len=seq))
+    return cache, _sd((batch,)), _sd((), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    seq, batch, kind = SHAPES[shape_name]
+    if kind in ("train", "prefill"):
+        return train_batch_specs(cfg, seq, batch)
+    return decode_input_specs(cfg, seq, batch)

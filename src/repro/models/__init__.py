@@ -1,0 +1,32 @@
+"""Model zoo: one composable block system covering all assigned archs.
+
+``model_api(cfg)`` returns the family-appropriate (init, loss_fn, cache_fn,
+decode_fn) tuple so the launcher/trainer never branches on architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax.numpy as jnp
+
+from . import encdec, frontends, transformer
+from .config import ModelConfig
+
+
+class ModelAPI(NamedTuple):
+    init: Callable          # (key, cfg) -> params
+    loss: Callable          # (params, batch, cfg) -> (loss, metrics)
+    init_cache: Callable    # (cfg, batch, max_len[, ...]) -> cache
+    decode_step: Callable   # (params, cache, tokens, pos, cfg) -> (logits, cache)
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        return ModelAPI(encdec.init, encdec.lm_loss, encdec.init_cache,
+                        encdec.decode_step)
+    return ModelAPI(transformer.init, transformer.lm_loss,
+                    transformer.init_cache, transformer.decode_step)
+
+
+__all__ = ["ModelConfig", "ModelAPI", "model_api", "transformer", "encdec",
+           "frontends"]

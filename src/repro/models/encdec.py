@@ -1,0 +1,183 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed per the brief).
+
+``input_specs`` provides precomputed frame embeddings (B, enc_seq, D) — the
+conv1d+GELU frontend is a stub.  The encoder is a bidirectional transformer
+with learned positions; the decoder adds causal self-attention (KV cache) and
+cross-attention over encoder states (K/V precomputed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .module import dense_init, embed_init, stack_init
+from .transformer import _chunked_ce, _dtype, logits_fn
+
+Params = Dict[str, Any]
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(k1, cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(k2, cfg, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.rmsnorm_init(cfg.d_model),
+            "self": L.attn_init(k1, cfg, dtype),
+            "ln_x": L.rmsnorm_init(cfg.d_model),
+            "cross": L.attn_init(k2, cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(k3, cfg, dtype)}
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "enc_pos": (jax.random.normal(ks[1], (cfg.encoder_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(ks[2], (cfg.max_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "encoder": stack_init(lambda k: _enc_block_init(k, cfg, dtype),
+                              ks[3], cfg.encoder_layers),
+        "decoder": stack_init(lambda k: _dec_block_init(k, cfg, dtype),
+                              ks[4], cfg.n_layers),
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    # decoder head is tied to the embedding (Whisper style)
+
+
+def encode(params, frames, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, enc_seq, D) stub embeddings -> encoder states."""
+    x = frames.astype(_dtype(cfg)) + params["enc_pos"][None]
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, bp):
+        h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        x = x + L.attn_apply(bp["attn"], h, cfg, positions, causal=False,
+                             use_rope=False)
+        h = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(bp["mlp"], h)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:   # unrolled: exact costs in the dry-run (no enc-dec scan correction)
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def cross_kv(params, enc_states, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross K/V: (L, B, Hkv, S_enc, hd) x2."""
+    b, s, d = enc_states.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def one(bp):
+        k = (enc_states @ bp["cross"]["wk"]).reshape(b, s, hkv, hd)
+        v = (enc_states @ bp["cross"]["wv"]).reshape(b, s, hkv, hd)
+        return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def decode_train(params, enc_states, tokens, cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder pass. tokens: (B, S). Returns hidden (B,S,D)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:s][None]
+    positions = jnp.arange(s)
+    ckv = cross_kv(params, enc_states, cfg)
+
+    def body(x, xs):
+        bp, (ck, cv) = xs
+        h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        x = x + L.attn_apply(bp["self"], h, cfg, positions, causal=True,
+                             use_rope=False)
+        h = L.rmsnorm(x, bp["ln_x"], cfg.norm_eps)
+        x = x + L.cross_attn_apply(bp["cross"], h, (ck, cv), cfg)
+        h = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(bp["mlp"], h)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, (params["decoder"], ckv))
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        (params["decoder"], ckv)))
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    """batch: {'frames': (B,enc_seq,D), 'inputs': (B,S), 'labels': (B,S)}."""
+    enc = encode(params, batch["frames"], cfg)
+    h = decode_train(params, enc, batch["inputs"], cfg)
+    mask = batch.get("mask",
+                     jnp.ones_like(batch["labels"], jnp.float32))
+    tot, cnt = _chunked_ce(params, h, batch["labels"], mask, cfg)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"ce": loss, "tokens": cnt}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_states=None, params=None) -> Params:
+    """Self-attn ring caches + (optionally precomputed) cross K/V."""
+    dtype = _dtype(cfg)
+    one = L.attn_make_cache(cfg, batch, max_len, dtype)
+    cache: Params = {
+        "self": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.n_layers,) + a.shape), one)}
+    if enc_states is not None:
+        cache["cross"] = cross_kv(params, enc_states, cfg)
+    else:
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        cache["cross"] = (
+            jnp.zeros((cfg.n_layers, batch, hkv, cfg.encoder_seq, hd), dtype),
+            jnp.zeros((cfg.n_layers, batch, hkv, cfg.encoder_seq, hd), dtype))
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """tokens: (B,). Returns (logits (B,V), new_cache)."""
+    x = params["embed"][tokens] + jax.lax.dynamic_index_in_dim(
+        params["dec_pos"], pos, keepdims=False)
+
+    def body(x, xs):
+        bp, sc, ck, cv = xs
+        h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        mx, sc = L.attn_decode(bp["self"], h, sc, pos, cfg, use_rope=False)
+        x = x + mx
+        h = L.rmsnorm(x, bp["ln_x"], cfg.norm_eps)
+        q = (h @ bp["cross"]["wq"]).reshape(
+            x.shape[0], cfg.n_heads, cfg.hd)
+        from repro.kernels import ops
+        ca = ops.decode_attention(q, ck, cv, impl=cfg.attn_impl)
+        x = x + ca.reshape(x.shape[0], -1) @ bp["cross"]["wo"]
+        h = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(bp["mlp"], h)
+        return x, sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"],
+                  cache["cross"][0], cache["cross"][1]))
+    new_cache = {"self": new_self, "cross": cache["cross"]}
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T
+    return (x @ w).astype(jnp.float32), new_cache

@@ -1,0 +1,35 @@
+"""Stub modality frontends (per the brief: backbone only; ``input_specs``
+provides precomputed frame/patch embeddings).
+
+These generate *synthetic* frontend outputs with the right shapes/dtypes for
+smoke tests and the end-to-end examples; the dry-run consumes
+ShapeDtypeStructs of the same shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def audio_frames(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    """Whisper stub: post-conv frame embeddings (B, enc_seq, D)."""
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+
+
+def image_patches(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    """LLaVA anyres stub: projected patch embeddings (B, img_tokens, D).
+
+    Real LLaVA-NeXT tiles the image (anyres) into up to 5 crops of 576
+    patches; ``cfg.img_tokens`` carries the flattened count.
+    """
+    return jax.random.normal(
+        key, (batch, cfg.img_tokens, cfg.d_model), jnp.float32) * 0.02
+
+
+def fuse_vlm_inputs(params, patches, tokens, cfg: ModelConfig) -> jax.Array:
+    """[img patches; text embeds] -> (B, img_tokens + text_len, D)."""
+    text = params["embed"][tokens]
+    return jnp.concatenate([patches.astype(text.dtype), text], axis=1)

@@ -1,0 +1,48 @@
+"""Minimal functional parameter utilities (no flax dependency).
+
+Parameters are nested dicts of jnp arrays.  Layer stacks used under
+``lax.scan`` hold *stacked* parameters (leading axis = repeat count), built by
+vmapping the single-layer initializer over per-repeat PRNG keys.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float = None,
+               dtype=jnp.bfloat16) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_init(init_fn: Callable[[jax.Array], Params], key, n: int) -> Params:
+    """Stack n independent inits along a new leading axis (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_floats(tree: Params, dtype) -> Params:
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(c, tree)

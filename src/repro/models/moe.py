@@ -1,0 +1,140 @@
+"""Top-k mixture-of-experts with sorted capacity dispatch.
+
+Dispatch is gather-based (sort token-copies by expert, slice each expert's
+capacity window), NOT one-hot-einsum based: the compiled FLOPs are then
+``top_k * capacity_factor`` times the dense-equivalent expert FLOPs — an
+honest roofline — instead of the T*E*C dispatch-einsum blow-up.  Under GSPMD
+with experts sharded over the ``model`` axis the gathers lower to
+all-to-all/all-gather collectives, the analogue of the paper's cross-socket
+data shuffle.
+
+Tokens beyond an expert's capacity are dropped (standard capacity-factor
+semantics); the router adds a switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import partitioning as part
+from .config import ModelConfig
+from .module import dense_init
+from .layers import mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    d, e, h = cfg.d_model, cfg.n_experts, cfg.d_expert
+    params = {
+        "router": dense_init(ks[0], d, e, scale=0.02, dtype=jnp.float32),
+        "experts": {
+            "gate": dense_init(ks[1], d, e * h, dtype=dtype).reshape(d, e, h)
+                    .transpose(1, 0, 2),                        # (E, D, H)
+            "up": dense_init(ks[2], d, e * h, dtype=dtype).reshape(d, e, h)
+                  .transpose(1, 0, 2),
+            "down": dense_init(ks[3], e * h, d,
+                               scale=h ** -0.5 / (2 * cfg.n_layers) ** 0.5,
+                               dtype=dtype).reshape(e, h, d),
+        },
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = mlp_init(
+            jax.random.fold_in(key, 7), cfg, dtype,
+            d_ff=cfg.n_shared_experts * cfg.d_expert)
+    return params
+
+
+def _dispatch_group(xf, probs, k, e, cap):
+    """Sorted capacity dispatch for one token group.
+
+    xf: (Tg, D); probs: (Tg, E).  Returns (xg (E,cap,D), tok (E,cap),
+    wgt (E,cap)) with ``tok`` indices local to the group."""
+    t = xf.shape[0]
+    top_p, top_idx = jax.lax.top_k(probs, k)                    # (Tg, k)
+    top_w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_idx.reshape(-1)                                # (Tg*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    sizes = jnp.bincount(se, length=e)                          # (E,)
+    starts = jnp.cumsum(sizes) - sizes
+    win = starts[:, None] + jnp.arange(cap)[None]               # (E, cap)
+    valid = (jnp.arange(cap)[None] < jnp.minimum(sizes, cap)[:, None])
+    win = jnp.clip(win, 0, t * k - 1)
+    tok = st_[win]                                              # (E, cap)
+    wgt = jnp.where(valid, sw[win], 0.0)
+    xg = xf[tok] * valid[..., None].astype(xf.dtype)            # (E, cap, D)
+    return xg, tok, wgt
+
+
+def moe_apply(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    ``cfg.moe_dispatch_groups`` > 1 enables *grouped local dispatch*: tokens
+    are routed within data-shard-aligned groups, so the dispatch gather moves
+    each group's tokens only across the expert (model) axis — all-to-all
+    shaped traffic — instead of all-gathering every token to every shard
+    (EXPERIMENTS.md §Perf H3).  Capacity is per (expert, group), preserving
+    total expert FLOPs."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    g = max(1, cfg.moe_dispatch_groups)
+    assert t % g == 0, (t, g)
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # switch-style load balance loss
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32),
+                           axis=0)
+    frac_probs = probs.mean(axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_weight
+
+    cap = int(max(1, -(-t * k * cfg.capacity_factor // (e * g))))
+    xg, tok, wgt = jax.vmap(
+        lambda xfg, pg: _dispatch_group(xfg, pg, k, e, cap)
+    )(xf.reshape(g, t // g, d), probs.reshape(g, t // g, e))
+    # xg: (G, E, cap, D) — groups over the batch axes, experts over 'model':
+    # hierarchical EP (without the batch-axes sharding the expert FLOPs
+    # inflate by the DP degree — observed 16x on qwen3).
+    if g > 1:
+        xg = part.constrain(xg, "BATCH", "model", None, None)
+        h = jax.nn.silu(jnp.einsum("gecd,edh->gech", xg,
+                                   p["experts"]["gate"])) \
+            * jnp.einsum("gecd,edh->gech", xg, p["experts"]["up"])
+        h = part.constrain(h, "BATCH", "model", None, None)
+        out = jnp.einsum("gech,ehd->gecd", h, p["experts"]["down"])
+        out = part.constrain(out, "BATCH", "model", None, None)
+    else:
+        xg1 = part.constrain(xg[0], "model", "BATCH", None)
+        h = jax.nn.silu(jnp.einsum("ecd,edh->ech", xg1,
+                                   p["experts"]["gate"])) \
+            * jnp.einsum("ecd,edh->ech", xg1, p["experts"]["up"])
+        h = part.constrain(h, "model", "BATCH", None)
+        out = jnp.einsum("ech,ehd->ecd", h, p["experts"]["down"])
+        out = part.constrain(out, "model", "BATCH", None)[None]
+
+    # combine: per-group scatter-add back to the group's tokens (token-
+    # sharded — unconstrained GSPMD tends to replicate this over the model
+    # axis, costing TP-degree x activation memory)
+    acc_dt = jnp.bfloat16 if cfg.moe_combine_dtype == "bfloat16" \
+        else jnp.float32
+
+    def combine(out_g, tok_g, wgt_g):
+        yg = jnp.zeros((t // g, d), acc_dt)
+        return yg.at[tok_g.reshape(-1)].add(
+            (out_g * wgt_g[..., None]).reshape(-1, d).astype(acc_dt))
+
+    y = jax.vmap(combine)(out, tok, wgt)                        # (G, T/G, D)
+    y = part.constrain(y.reshape(t, d), "BATCH", None)
+    y = y.astype(x.dtype)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xf)
+    return y.reshape(b, s, d), aux

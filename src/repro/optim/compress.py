@@ -1,0 +1,90 @@
+"""Gradient compression for the slow (cross-pod DCN) axis.
+
+Int8 quantization with per-bucket scales and stochastic rounding (unbiased:
+E[dequant(quant(g))] = g), plus the *jumbo-tuple* analogue for gradients —
+bucketing all leaves into one flat buffer so the cross-pod exchange is a
+single large transfer instead of hundreds of small ones (paper §5.2: one
+queue insertion per jumbo tuple, headers deduplicated).
+
+Exchange pattern (see launch docs): within a pod, gradients reduce over ICI
+in bf16; across pods the quantized int8 buffer is all-gathered (s8 on the
+wire = 4x less DCN traffic than f32) and summed locally after dequantization.
+``shard_map``-based ``cross_pod_allreduce_int8`` expresses this; on a mesh
+without a 'pod' axis it degrades to identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array, key: jax.Array,
+                  stochastic: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    if stochastic:
+        noise = jax.random.uniform(key, x.shape, jnp.float32) - 0.5
+        y = y + noise
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def flatten_bucket(tree: Any) -> Tuple[jax.Array, Any]:
+    """Jumbo-tuple bucketing: concat all leaves into one f32 buffer."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves])
+    return flat, meta
+
+
+def unflatten_bucket(flat: jax.Array, meta) -> Any:
+    treedef, shapes = meta
+    out = []
+    off = 0
+    for shape, dtype in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cross_pod_allreduce_int8(grads: Any, mesh, key: jax.Array,
+                             pod_axis: str = "pod") -> Any:
+    """All-reduce gradients across pods with int8 wire format.
+
+    Protocol per shard_map instance: (1) quantize the local (already
+    ICI-reduced) gradient bucket to int8 with a stochastic-rounding scale,
+    (2) all_gather the int8 buffer + scales over the pod axis (s8 on the
+    DCN), (3) dequantize-and-mean locally."""
+    if pod_axis not in mesh.axis_names:
+        return grads
+    flat, meta = flatten_bucket(grads)
+    other_axes = tuple(a for a in mesh.axis_names if a != pod_axis)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P()), out_specs=P(),
+        check_vma=False)
+    def exchange(buf, k):
+        q, scale = quantize_int8(buf, k)
+        qs = jax.lax.all_gather(q, pod_axis)            # (n_pods, N) int8
+        ss = jax.lax.all_gather(scale, pod_axis)        # (n_pods,)
+        deq = (qs.astype(jnp.float32) * ss[:, None]).mean(axis=0)
+        return deq
+
+    reduced = exchange(flat, key)
+    return unflatten_bucket(reduced, meta)

@@ -1,0 +1,226 @@
+"""Real threaded mini-runtime (paper §5 / Appendix A, shared-memory design).
+
+Executes a :class:`StreamingApp` for real on the host CPU: every replica is a
+thread (task = executor + partition controller), tuples are numpy batches
+passed *by reference* through bounded queues (backpressure via blocking put),
+and outputs are accumulated into **jumbo tuples** — one queue insertion per
+``batch`` tuples with a single shared header (timestamp), amortising queue
+overhead exactly as §5.2 describes.  ``jumbo=False`` degrades to per-tuple
+insertion for the Fig. 16 factor analysis.
+
+This runtime validates streaming *semantics* (WC really counts words); the
+NUMA placement effects are exercised through the simulator instead (this
+container has a single socket — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .apps import StreamingApp
+
+_POISON = object()
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    duration: float
+    sink_tuples: int
+    spout_tuples: int
+    throughput: float               # sink tuples/sec
+    latency_p50: float
+    latency_p99: float
+    states: Dict[str, List[dict]]   # per-operator replica states (counts etc.)
+
+
+class _Task(threading.Thread):
+    """One replica: pulls jumbo tuples, runs the kernel, partitions output."""
+
+    def __init__(self, name, kernel, in_q, outs, batch, jumbo, state,
+                 expected_poisons, lat_sink=None):
+        super().__init__(daemon=True, name=name)
+        self.kernel = kernel
+        self.in_q = in_q
+        self.outs = outs            # list (per output stream) of lists of
+                                    # (queue, strategy, index, k)
+        self.batch = batch
+        self.jumbo = jumbo
+        self.state = state
+        self.expected_poisons = expected_poisons
+        self.lat_sink = lat_sink
+        self._buf: Dict[int, List[Tuple[np.ndarray, float]]] = {}
+        self._rr = 0
+
+    def _flush(self, stream, consumer_idx, arr, t0):
+        q, _, _, _ = self.outs[stream][consumer_idx]
+        q.put((arr, t0))
+
+    def _emit(self, stream, arr, t0):
+        if arr is None or len(arr) == 0:
+            return
+        consumers = self.outs[stream]
+        if not consumers:
+            return
+        strategy = consumers[0][1]
+        k = len(consumers)
+        if strategy == "key":
+            keys = (arr if arr.ndim == 1 else arr[:, 0]).astype(np.int64)
+            for i in range(k):
+                part = arr[keys % k == i]
+                if len(part):
+                    self._emit_to(stream, i, part, t0)
+        else:                        # shuffle: whole jumbo round-robin
+            self._emit_to(stream, self._rr % k, arr, t0)
+            self._rr += 1
+
+    def _emit_to(self, stream, i, arr, t0):
+        if not self.jumbo:
+            for row in arr:          # per-tuple insertion (no jumbo)
+                self._flush(stream, i, np.asarray([row]), t0)
+            return
+        key = (stream, i)
+        buf = self._buf.setdefault(key, [])
+        buf.append((arr, t0))
+        total = sum(len(a) for a, _ in buf)
+        if total >= self.batch:
+            merged = np.concatenate([a for a, _ in buf])
+            self._flush(stream, i, merged, buf[0][1])
+            buf.clear()
+
+    def run(self):
+        poisons = 0
+        while True:
+            item = self.in_q.get()
+            if item is _POISON:
+                poisons += 1
+                if poisons < self.expected_poisons:
+                    continue         # wait for every producer replica to end
+                # drain buffers, propagate poison once per consumer queue
+                for (stream, i), buf in self._buf.items():
+                    if buf:
+                        merged = np.concatenate([a for a, _ in buf])
+                        self._flush(stream, i, merged, buf[0][1])
+                self._buf.clear()
+                for consumers in self.outs:
+                    for q, _, _, _ in consumers:
+                        q.put(_POISON)
+                return
+            arr, t0 = item
+            if self.lat_sink is not None:
+                self.lat_sink.append(time.perf_counter() - t0)
+            out = self.kernel(arr, self.state)
+            for stream, oarr in enumerate(out):
+                self._emit(stream, oarr, t0)
+
+
+def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
+            batch: int = 256, duration: float = 1.0, jumbo: bool = True,
+            queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
+            seed: int = 0) -> RuntimeResult:
+    """Execute ``app`` for ``duration`` seconds and return measured stats."""
+    lg = app.graph
+    parallelism = dict(parallelism or {})
+    for name in lg.operators:
+        parallelism.setdefault(name, 1)
+    partition = dict(partition or {})
+    partition.setdefault("counter", "key")      # WC keyed counting
+
+    # one input queue per non-spout replica
+    in_qs: Dict[Tuple[str, int], queue.Queue] = {}
+    for name in lg.operators:
+        if not lg.operators[name].is_spout:
+            for i in range(parallelism[name]):
+                in_qs[(name, i)] = queue.Queue(maxsize=queue_cap)
+
+    states: Dict[str, List[dict]] = {
+        name: [dict() for _ in range(parallelism[name])]
+        for name in lg.operators}
+    latencies: List[float] = []
+
+    tasks: List[_Task] = []
+    for name, spec in lg.operators.items():
+        if spec.is_spout:
+            continue
+        cons_ops = lg.consumers(name)
+        n_producer_units = sum(parallelism[p] for p in lg.producers(name))
+        for i in range(parallelism[name]):
+            outs = []
+            for stream, cop in enumerate(cons_ops):
+                strat = partition.get(cop, "shuffle")
+                outs.append([(in_qs[(cop, j)], strat, j, parallelism[cop])
+                             for j in range(parallelism[cop])])
+            is_sink = not cons_ops
+            t = _Task(f"{name}#{i}", app.kernels[name], in_qs[(name, i)],
+                      outs, batch, jumbo, states[name][i],
+                      expected_poisons=max(n_producer_units, 1),
+                      lat_sink=latencies if is_sink else None)
+            tasks.append(t)
+
+    stop = threading.Event()
+    spout_counts = [0]
+    count_lock = threading.Lock()
+    spout_threads = []
+    for name, spec in lg.operators.items():
+        if not spec.is_spout:
+            continue
+        cons_ops = lg.consumers(name)
+        for i in range(parallelism[name]):
+
+            def spout_loop(name=name, cons_ops=cons_ops, i=i):
+                rr = 0
+                b = 0
+                while not stop.is_set():
+                    arr = app.make_source(batch, seed + 7919 * i + b)
+                    b += 1
+                    t0 = time.perf_counter()
+                    delivered = False
+                    for cop in cons_ops:
+                        k = parallelism[cop]
+                        q = in_qs[(cop, rr % k)]
+                        while not stop.is_set():          # backpressure
+                            try:
+                                q.put((arr, t0), timeout=0.02)
+                                delivered = True
+                                break
+                            except queue.Full:
+                                continue
+                    if delivered:
+                        with count_lock:
+                            spout_counts[0] += len(arr)
+                    rr += 1
+                for cop in cons_ops:
+                    for j in range(parallelism[cop]):
+                        in_qs[(cop, j)].put(_POISON)
+
+            th = threading.Thread(target=spout_loop, daemon=True)
+            spout_threads.append(th)
+
+    for t in tasks:
+        t.start()
+    t_start = time.perf_counter()
+    for th in spout_threads:
+        th.start()
+    time.sleep(duration)
+    stop.set()
+    for th in spout_threads:
+        th.join(timeout=5.0)
+    for t in tasks:
+        t.join(timeout=5.0)
+    wall = time.perf_counter() - t_start
+
+    sink_ops = lg.sinks()
+    sink_tuples = sum(st.get("seen", 0)
+                      for op in sink_ops for st in states[op])
+    lat = np.array(latencies) if latencies else np.array([0.0])
+    return RuntimeResult(
+        duration=wall, sink_tuples=int(sink_tuples),
+        spout_tuples=int(spout_counts[0]),
+        throughput=sink_tuples / max(wall, 1e-9),
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p99=float(np.percentile(lat, 99)),
+        states=states)

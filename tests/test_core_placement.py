@@ -1,0 +1,186 @@
+"""B&B placement: optimality vs brute force, heuristics, bound validity."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ExecutionGraph, LogicalGraph, OperatorSpec, bnb_place,
+                        brute_force_place, evaluate, server_a, server_b,
+                        subset)
+from repro.core.baselines import ff_place, random_plan, rr_place
+from repro.core.perfmodel import UNPLACED
+from repro.core.placement import _Search
+
+
+def chain_graph(n_ops: int, te: float = 100.0, nbytes: float = 256.0,
+                spout_te: float = 400.0, mem: float = 64.0) -> LogicalGraph:
+    ops = {"spout": OperatorSpec("spout", spout_te, nbytes, mem,
+                                 is_spout=True)}
+    edges = []
+    prev = "spout"
+    for i in range(n_ops):
+        name = f"op{i}"
+        ops[name] = OperatorSpec(name, te, nbytes, mem)
+        edges.append((prev, name))
+        prev = name
+    return LogicalGraph(ops, edges)
+
+
+@st.composite
+def random_dag(draw):
+    """Small random layered DAGs with random profiles."""
+    n = draw(st.integers(2, 5))
+    ops = {"spout": OperatorSpec(
+        "spout", draw(st.floats(50, 2000)), is_spout=True)}
+    edges = []
+    names = ["spout"]
+    for i in range(n):
+        name = f"op{i}"
+        te = draw(st.floats(20, 3000))
+        nbytes = draw(st.sampled_from([64.0, 256.0, 1024.0, 4096.0]))
+        sel = draw(st.sampled_from([0.5, 1.0, 2.0]))
+        ops[name] = OperatorSpec(name, te, nbytes, nbytes, sel)
+        k = draw(st.integers(1, min(2, len(names))))
+        prods = draw(st.permutations(names))[:k]
+        for p in prods:
+            edges.append((p, name))
+        names.append(name)
+    return LogicalGraph(ops, edges)
+
+
+def tiny_machine(n_sockets=3, cores=2):
+    base = subset(server_a(), n_sockets)
+    import dataclasses
+    return dataclasses.replace(base, cores_per_socket=cores,
+                               name=f"tiny{n_sockets}x{cores}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_dag())
+def test_bnb_matches_brute_force(lg):
+    """Exhaustive B&B (bestfit off, no infeasible pruning) is optimal."""
+    m = tiny_machine()
+    g = ExecutionGraph(lg, {name: 1 for name in lg.operators})
+    bf = brute_force_place(g, m, input_rate=None)
+    bb = bnb_place(g, m, input_rate=None, bestfit=False)
+    assert bb.R == pytest.approx(bf.R, rel=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_dag())
+def test_bound_dominates_all_completions(lg):
+    """The bounding function is a true upper bound on any completion."""
+    m = tiny_machine(n_sockets=2, cores=4)
+    g = ExecutionGraph(lg, {name: 1 for name in lg.operators})
+    n = g.n_units
+    order = g.topo_unit_order()
+    search = _Search(g, m, None, False, 10**9, None)
+    # place a random prefix, bound it, then check every completion
+    rng = np.random.default_rng(0)
+    depth = int(rng.integers(0, n))
+    from repro.core.placement import _State
+    stt = _State(n, m)
+    for d in range(depth):
+        search._apply(stt, order[d], int(rng.integers(m.n_sockets)))
+    bound = search._bound(stt, depth)
+    import itertools
+    for tail in itertools.product(range(m.n_sockets), repeat=n - depth):
+        placement = list(stt.placement)
+        for d, s in zip(range(depth, n), tail):
+            placement[order[d]] = s
+        ev = evaluate(g, m, placement, None, mix="weighted")
+        assert ev.R <= bound * (1 + 1e-9)
+
+
+def test_bnb_prefers_collocation_for_fetch_heavy_ops():
+    m = server_a()
+    lg = chain_graph(2, te=100.0, nbytes=4096.0, spout_te=150.0)
+    g = ExecutionGraph(lg, {n: 1 for n in lg.operators})
+    res = bnb_place(g, m, input_rate=None)
+    # fetch cost dwarfs exec cost -> everything lands on one socket
+    assert len(set(res.placement)) == 1
+    assert res.feasible
+
+
+def test_bnb_spreads_when_cores_run_out():
+    m = tiny_machine(n_sockets=2, cores=2)
+    lg = chain_graph(3, te=100.0, nbytes=64.0, spout_te=100.0)
+    g = ExecutionGraph(lg, {n: 1 for n in lg.operators})
+    res = bnb_place(g, m, input_rate=None)
+    assert res.feasible
+    assert len(set(res.placement)) == 2          # 4 busy units, 2 cores/socket
+
+
+def test_bestfit_fast_and_close():
+    m = server_a()
+    lg = chain_graph(4, te=200.0, nbytes=1024.0)
+    g = ExecutionGraph(lg, {n: 1 for n in lg.operators})
+    exact = bnb_place(g, m, input_rate=None, bestfit=False)
+    fast = bnb_place(g, m, input_rate=None, bestfit=True)
+    assert fast.nodes_explored <= exact.nodes_explored
+    assert fast.R >= 0.8 * exact.R
+
+
+def test_rlas_beats_ff_and_rr_on_numa_sensitive_graph():
+    """Heterogeneous tuple sizes + tight cores: WHICH edge crosses matters.
+
+    The chain must split across sockets (2 cores each).  Edges into A/B/D
+    carry fat tuples (expensive to fetch remotely); the edge into C is thin.
+    RLAS cuts at C; distance-blind strategies usually cut a fat edge.
+    """
+    m = tiny_machine(n_sockets=4, cores=2)
+    fat, thin = 8192.0, 64.0
+    ops = {
+        "spout": OperatorSpec("spout", 450.0, 64.0, 64.0, is_spout=True),
+        "A": OperatorSpec("A", 150.0, fat, 64.0),
+        "B": OperatorSpec("B", 150.0, fat, 64.0),
+        "C": OperatorSpec("C", 150.0, thin, 64.0),
+        "D": OperatorSpec("D", 150.0, fat, 64.0),
+    }
+    lg = LogicalGraph(ops, [("spout", "A"), ("A", "B"), ("B", "C"),
+                            ("C", "D")])
+    g = ExecutionGraph(lg, {n: 1 for n in ops})
+    rlas = bnb_place(g, m, input_rate=None)
+    ff = ff_place(g, m, input_rate=None)
+    rr = rr_place(g, m, input_rate=None)
+    assert rlas.feasible
+    # the only good plan cuts at the thin edge: {spout,A,B} | {C,D}
+    pl = dict(zip(["spout", "A", "B", "C", "D"], rlas.placement))
+    crossing = [(u, v) for u, v in lg.edges if pl[u] != pl[v]]
+    assert crossing == [("B", "C")]
+    # distance-blind strategies cut a fat edge -> order-of-magnitude worse
+    assert rlas.R > rr.R * 10
+    assert rlas.R > ff.R * 10
+
+
+def test_symmetry_collapse_reduces_nodes():
+    m = server_a()
+    lg = chain_graph(3)
+    g = ExecutionGraph(lg, {n: 1 for n in lg.operators})
+    res = bnb_place(g, m, input_rate=None)
+    # without collapse the root alone would branch 8 ways; with collapse the
+    # whole search on a symmetric machine stays tiny
+    assert res.nodes_explored < 2000
+
+
+def test_infeasible_instance_reports_failure():
+    m = tiny_machine(n_sockets=1, cores=1)
+    lg = chain_graph(3)                          # 4 busy units on 1 core
+    g = ExecutionGraph(lg, {n: 1 for n in lg.operators})
+    res = bnb_place(g, m, input_rate=None)
+    assert not res.feasible
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_dag(), st.integers(0, 10_000))
+def test_random_plans_never_beat_exact_bnb(lg, seed):
+    """Monte-Carlo property (paper Fig. 14) on tiny instances."""
+    m = tiny_machine(n_sockets=2, cores=3)
+    g = ExecutionGraph(lg, {name: 1 for name in lg.operators})
+    bb = bnb_place(g, m, input_rate=None, bestfit=False)
+    rng = np.random.default_rng(seed)
+    placement = [int(rng.integers(m.n_sockets)) for _ in range(g.n_units)]
+    ev = evaluate(g, m, placement, None)
+    if ev.feasible:
+        assert ev.R <= bb.R * (1 + 1e-9)

@@ -1,0 +1,127 @@
+"""Unit tests for dry-run machinery that doesn't need 512 devices:
+collective HLO parsing, sharding rules, roofline term math, input specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_archs, get
+from repro.launch.dryrun import _first_shape_bytes, collective_bytes
+from repro.launch.specs import SHAPES, cell_plan, input_specs
+from repro.models.config import ModelConfig
+
+
+def test_shape_bytes_parser():
+    line = ("  %all-reduce.7 = bf16[16,1024,2048]{2,1,0} "
+            "all-reduce(%x), replica_groups={}")
+    assert _first_shape_bytes(line) == 16 * 1024 * 2048 * 2
+    tup = ("  %all-to-all.2 = (f32[8,64]{1,0}, f32[8,64]{1,0}) "
+           "all-to-all(%a, %b)")
+    assert _first_shape_bytes(tup, "all-to-all") == 2 * 8 * 64 * 4
+
+
+def test_collective_bytes_classification():
+    hlo = "\n".join([
+        "HloModule m",
+        "  %all-gather.1 = bf16[4,4]{1,0} all-gather(%p), dimensions={0}",
+        "  %x.2 = f32[2]{0} add(%a, %b)",
+        "  %reduce-scatter.3 = f32[8]{0} reduce-scatter(%y), dimensions={0}",
+        "  ROOT %all-reduce.9 = f32[16]{0} all-reduce(%z)",
+    ])
+    c = collective_bytes(hlo)
+    assert c["all-gather"] == 32
+    assert c["reduce-scatter"] == 32
+    assert c["all-reduce"] == 64
+    assert c["all-to-all"] == 0
+    assert c["count"] == 3
+
+
+def test_collective_parser_ignores_fused_names():
+    hlo = "  %my-all-reduce-fusion = f32[4]{0} fusion(%x), kind=kLoop"
+    c = collective_bytes(hlo)
+    assert c["count"] == 0
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_input_specs_all_cells_defined(arch):
+    cfg = get(arch)
+    for shape in SHAPES:
+        skip = cell_plan(cfg, shape)
+        if skip:
+            assert shape == "long_500k"
+            continue
+        spec = input_specs(cfg, shape)
+        leaves = jax.tree.leaves(spec)
+        assert leaves, (arch, shape)
+        for leaf in leaves:
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long500k_applicability_matches_design():
+    runnable = {a for a in all_archs()
+                if cell_plan(get(a), "long_500k") is None}
+    assert runnable == {"h2o_danube_1_8b", "xlstm_125m",
+                        "jamba_1_5_large_398b"}
+
+
+def test_param_pspec_rules_smoke():
+    """Sharding rules produce valid specs for every arch's param tree."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.shardings import param_shardings
+    from repro.models import model_api
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for arch in ["smollm_360m", "jamba_1_5_large_398b", "deepseek_v3_671b",
+                 "whisper_small", "xlstm_125m"]:
+        cfg = get(arch, smoke=True)
+        api = model_api(cfg)
+        shapes = jax.eval_shape(lambda k: api.init(k, cfg),
+                                jax.random.PRNGKey(0))
+        shards = param_shardings(cfg, shapes, mesh, fsdp=True)
+        n = len(jax.tree.leaves(shapes))
+        assert len(jax.tree.leaves(
+            shards, is_leaf=lambda x: hasattr(x, "spec"))) == n
+
+
+def test_cache_pspec_rules_smoke():
+    from repro.launch.mesh import make_mesh
+    from repro.launch.shardings import cache_shardings
+    from repro.models import model_api
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for arch in ["h2o_danube_1_8b", "jamba_1_5_large_398b",
+                 "deepseek_v3_671b", "whisper_small", "xlstm_125m"]:
+        cfg = get(arch, smoke=True)
+        api = model_api(cfg)
+        cache = jax.eval_shape(lambda: api.init_cache(cfg, 2, max_len=8))
+        shards = cache_shardings(cfg, cache, mesh)
+        assert len(jax.tree.leaves(
+            shards, is_leaf=lambda x: hasattr(x, "spec"))) == \
+            len(jax.tree.leaves(cache))
+
+
+def test_roofline_terms_math():
+    from benchmarks.roofline import terms
+    rec = {
+        "status": "ok", "arch": "granite-3-2b", "shape": "train_4k",
+        "mesh": "16x16", "flops": 1e14, "extra_flops": 0.0,
+        "bytes_accessed": 1e12,
+        "coll": {"all-gather": 5e9, "all-reduce": 5e9, "count": 10},
+        "n_params": 2.6e9, "n_active": 2.6e9,
+        "peak_bytes_per_device": 2**34, "param_bytes_per_device": 2e7,
+        "opt_bytes_per_device": 4e7, "cache_bytes_per_device": 0.0,
+    }
+    t = terms(rec)
+    assert t["t_compute"] == pytest.approx(1e14 / 197e12)
+    assert t["t_collective"] == pytest.approx(1e10 / 50e9)
+    model = 6 * 2.6e9 * 4096 * 256
+    assert t["model_flops"] == pytest.approx(model)
+    assert t["useful_ratio"] == pytest.approx(model / (1e14 * 256))
+    assert t["dominant"] in ("compute", "memory", "collective")
+
+
+def test_variants_registered_and_distinct():
+    base = get("smollm_360m")
+    var = get("smollm_360m_padheads")
+    assert var.n_heads == 16 and base.n_heads == 15
+    assert get("qwen3_moe_235b_a22b_cap1").capacity_factor == 1.0
+    assert get("smollm_360m_padheads_fsdp").force_fsdp

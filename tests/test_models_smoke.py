@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: reduced config, one train step + one decode
+step on CPU, asserting output shapes and finiteness (no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get
+from repro.models import frontends, model_api
+from repro.models.config import ModelConfig
+
+B, S = 2, 32
+
+
+def make_batch(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    labels = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        patches = frontends.image_patches(ks[1], cfg, B)
+        text = jax.random.randint(ks[2], (B, S - cfg.img_tokens), 0,
+                                  cfg.vocab)
+        # fused embeds are produced inside the train step in launch/train;
+        # for the smoke test we pre-fuse with a dummy embedding table
+        emb = jax.random.normal(ks[2], (cfg.vocab, cfg.d_model)) * 0.02
+        embeds = jnp.concatenate([patches, emb[text]], axis=1)
+        return {"embeds": embeds, "labels": labels}
+    if cfg.family == "audio":
+        frames = frontends.audio_frames(ks[1], cfg, B)
+        inputs = jax.random.randint(ks[2], (B, S), 0, cfg.vocab)
+        return {"frames": frames, "inputs": inputs, "labels": labels}
+    inputs = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_train_step(arch):
+    cfg = get(arch, smoke=True)
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        loss, metrics = api.loss(p, batch, cfg)
+        return loss
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)), arch
+    # a correctly-wired model starts near ln(vocab)
+    assert 0.2 * np.log(cfg.vocab) < float(loss) < 3.0 * np.log(cfg.vocab)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, arch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_decode_step(arch):
+    cfg = get(arch, smoke=True)
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    if cfg.family == "audio":
+        from repro.models import encdec
+        frames = frontends.audio_frames(jax.random.PRNGKey(1), cfg, B)
+        enc = encdec.encode(params, frames, cfg)
+        cache = encdec.init_cache(cfg, B, max_len=16, enc_states=enc,
+                                  params=params)
+    else:
+        cache = api.init_cache(cfg, B, max_len=16)
+    tokens = jnp.zeros((B,), jnp.int32)
+    step = jax.jit(lambda p, c, t, pos: api.decode_step(p, c, t, pos, cfg))
+    logits, cache = step(params, cache, tokens, jnp.int32(0))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits))), arch
+    logits2, cache = step(params, cache, jnp.argmax(logits, -1).astype(
+        jnp.int32), jnp.int32(1))
+    assert np.all(np.isfinite(np.asarray(logits2))), arch
+
+
+def test_decode_matches_teacher_forcing_dense():
+    """Greedy decode logits == teacher-forced logits (danube, window arch)."""
+    cfg = get("h2o_danube_1_8b", smoke=True)
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
+    # teacher-forced full pass
+    from repro.models import transformer
+    x = transformer.embed_tokens(params, toks, cfg)
+    h, _ = transformer.forward(params, x, cfg, jnp.arange(8))
+    tf_logits = transformer.logits_fn(params, h, cfg)       # (B, 8, V)
+    # token-by-token decode
+    cache = api.init_cache(cfg, B, max_len=8)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, cache, toks[:, t], jnp.int32(t),
+                                    cfg)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(tf_logits),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_decode_matches_teacher_forcing_hybrid():
+    """Same equivalence for the jamba hybrid (mamba + attn + moe).
+
+    MoE capacity depends on batch size (T=B*S), so routing can differ
+    between the full pass and step-wise decode when experts overflow; the
+    smoke config uses ample capacity to keep them identical."""
+    cfg = get("jamba_1_5_large_398b", smoke=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
+    from repro.models import transformer
+    x = transformer.embed_tokens(params, toks, cfg)
+    h, _ = transformer.forward(params, x, cfg, jnp.arange(8))
+    tf_logits = transformer.logits_fn(params, h, cfg)
+    cache = api.init_cache(cfg, B, max_len=8)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, cache, toks[:, t], jnp.int32(t),
+                                    cfg)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(tf_logits),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_mla_absorbed_matches_naive():
+    cfg = get("deepseek_v3_671b", smoke=True)
+    from repro.models import layers
+    p = layers.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.d_model)) * 0.1
+    cache = layers.mla_make_cache(cfg, B, 8, jnp.float32)
+    # warm the cache with a few positions
+    for t in range(3):
+        _, cache = layers.mla_decode(p, x, cache, t, cfg, absorbed=True)
+    o1, _ = layers.mla_decode(p, x, cache, 3, cfg, absorbed=True)
+    o2, _ = layers.mla_decode(p, x, cache, 3, cfg, absorbed=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_param_count_formula_tracks_actual():
+    for arch in ["smollm_360m", "qwen3_moe_235b_a22b", "xlstm_125m"]:
+        cfg = get(arch, smoke=True)
+        api = model_api(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        from repro.models.module import param_count
+        actual = param_count(params)
+        est, _ = cfg.param_count()
+        assert abs(actual - est) / actual < 0.35, (arch, actual, est)

@@ -1,0 +1,128 @@
+"""Streaming substrate: apps, simulators, and the real threaded runtime."""
+import numpy as np
+import pytest
+
+from repro.core import ExecutionGraph, evaluate, rlas_optimize, server_a
+from repro.streaming.apps import (ALL_APPS, fraud_detection, linear_road,
+                                  spike_detection, word_count)
+from repro.streaming.runtime import run_app
+from repro.streaming.simulator import (des_simulate, fluid_solve,
+                                       measure_capacity)
+
+
+@pytest.fixture(scope="module")
+def wc():
+    return word_count()
+
+
+def test_all_apps_build_valid_dags():
+    for name, make in ALL_APPS.items():
+        app = make()
+        order = app.graph.topo_order()
+        assert len(order) == len(app.graph.operators)
+        assert app.graph.spouts(), name
+        assert app.graph.sinks(), name
+
+
+def test_wc_model_throughput_order_of_magnitude():
+    """On Server A the optimized WC plan should reach tens of millions of
+    words/sec (paper Table 4: 96.4M measured, 104.8M estimated)."""
+    app = word_count()
+    res = rlas_optimize(app.graph, server_a(), input_rate=None,
+                        compress_ratio=5, bestfit=True, max_nodes=5000)
+    assert res.placement.feasible
+    assert 2e7 <= res.R <= 3e8
+
+
+def test_fluid_matches_model_when_uncontended(wc):
+    g = ExecutionGraph(wc.graph, {n: 1 for n in wc.graph.operators})
+    placement = [0] * g.n_units
+    model = evaluate(g, server_a(), placement, input_rate=None)
+    fluid = fluid_solve(g, server_a(), placement, input_rate=None)
+    assert fluid.converged
+    assert fluid.R == pytest.approx(model.R, rel=0.01)
+
+
+def test_fluid_degrades_oversubscribed_socket(wc):
+    import dataclasses
+    m = dataclasses.replace(server_a(), cores_per_socket=2)
+    g = ExecutionGraph(wc.graph, {n: 2 for n in wc.graph.operators})
+    placement = [0] * g.n_units          # 10 busy threads on 2 cores
+    fluid = fluid_solve(g, m, placement, input_rate=None)
+    ok = fluid_solve(g, server_a(), placement, input_rate=None)
+    assert fluid.R < ok.R                # processor sharing hurts
+    assert fluid.cpu_scale[0] < 1.0
+
+
+def test_des_approaches_fluid_estimate(wc):
+    g = ExecutionGraph(wc.graph, {n: 1 for n in wc.graph.operators})
+    placement = [0] * g.n_units
+    fluid = fluid_solve(g, server_a(), placement, input_rate=None)
+    des = measure_capacity(g, server_a(), placement, batch=64, horizon=0.01)
+    # DES includes batching and queueing effects; agree within 25%
+    assert des.R == pytest.approx(fluid.R, rel=0.25)
+    assert des.latency_p99 >= des.latency_p50 >= 0.0
+
+
+def test_des_remote_plan_slower_than_local(wc):
+    g = ExecutionGraph(wc.graph, {n: 1 for n in wc.graph.operators})
+    local = measure_capacity(g, server_a(), [0] * g.n_units, horizon=0.01)
+    remote = measure_capacity(g, server_a(), [0, 4, 0, 4, 0], horizon=0.01)
+    assert remote.R < local.R
+
+
+def test_des_underfed_tracks_ingress(wc):
+    g = ExecutionGraph(wc.graph, {n: 1 for n in wc.graph.operators})
+    des = des_simulate(g, server_a(), [0] * g.n_units, input_rate=1e5,
+                       batch=64, horizon=0.05)
+    # 1e5 sentences/s -> 1e6 words/s at the sink (selectivity 10)
+    assert des.R == pytest.approx(1e6, rel=0.2)
+
+
+# ---------------------------------------------------------------------------
+# Real threaded runtime
+# ---------------------------------------------------------------------------
+
+def test_runtime_wc_counts_are_exact():
+    app = word_count()
+    res = run_app(app, {"splitter": 2, "counter": 2}, batch=128,
+                  duration=0.4)
+    assert res.spout_tuples > 0
+    total_counted = sum(int(st.get("counts", np.zeros(1)).sum())
+                        for st in res.states["counter"])
+    # every parsed sentence yields exactly 10 words, all of which are counted
+    assert total_counted == 10 * res.spout_tuples
+    # keyed partitioning: the two counters saw disjoint key ranges
+    c0 = res.states["counter"][0].get("counts", np.zeros(4096))
+    c1 = res.states["counter"][1].get("counts", np.zeros(4096))
+    overlap = np.logical_and(c0 > 0, c1 > 0).sum()
+    assert overlap == 0
+
+
+def test_runtime_fd_flags_subset():
+    app = fraud_detection()
+    res = run_app(app, batch=128, duration=0.3)
+    st = res.states["sink"][0]
+    assert 0 <= st.get("flagged", 0) <= st.get("seen", 1)
+    assert res.throughput > 0
+
+
+def test_runtime_sd_runs():
+    app = spike_detection()
+    res = run_app(app, batch=128, duration=0.3)
+    assert res.sink_tuples > 0
+
+
+def test_runtime_lr_multi_stream():
+    app = linear_road()
+    res = run_app(app, batch=128, duration=0.4)
+    assert res.sink_tuples > 0
+    assert res.latency_p99 >= res.latency_p50
+
+
+def test_runtime_jumbo_beats_per_tuple():
+    """Fig. 16 factor analysis, for real: jumbo tuples amortise queue costs."""
+    app = word_count()
+    jumbo = run_app(app, batch=256, duration=0.4, jumbo=True)
+    single = run_app(app, batch=256, duration=0.4, jumbo=False)
+    assert jumbo.throughput > single.throughput

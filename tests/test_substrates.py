@@ -1,0 +1,215 @@
+"""Optimizers, data pipeline, checkpointing, compression, autoshard."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import BinTokenSource, Prefetcher, SyntheticLM
+from repro.optim.compress import (dequantize_int8, flatten_bucket,
+                                  quantize_int8, unflatten_bucket)
+from repro.optim.optimizers import (adafactor, adamw, clip_by_global_norm,
+                                    warmup_cosine)
+
+
+# ---------------------------- optimizers ----------------------------------
+
+def quad_problem(opt, steps=200):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3, 3)), "b": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        pred = jnp.ones(3) @ p["w"] + p["b"]
+        return jnp.sum((pred - target) ** 2)
+
+    for _ in range(steps):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+    return float(loss_fn(params))
+
+
+def test_adamw_converges():
+    assert quad_problem(adamw(1e-1)) < 1e-3
+
+
+def test_adafactor_converges():
+    # sign-SGD-like updates oscillate at ~lr without decay -> use a schedule
+    sched = warmup_cosine(1e-1, warmup=5, total=600, floor=0.01)
+    assert quad_problem(adafactor(sched), steps=600) < 1e-2
+
+
+def test_adafactor_handles_stacked_3d_params():
+    opt = adafactor(1e-2)
+    params = {"experts": jnp.ones((4, 8, 16))}
+    state = opt.init(params)
+    grads = {"experts": jnp.ones((4, 8, 16)) * 0.1}
+    new_p, state = opt.update(grads, state, params)
+    assert new_p["experts"].shape == (4, 8, 16)
+    assert np.all(np.isfinite(np.asarray(new_p["experts"])))
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    _, norm2 = clip_by_global_norm(clipped, 1.0)
+    assert float(norm2) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) < 1e-3 * 0.2
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=0.1)
+    assert float(lr(jnp.int32(100))) < 1e-3 * 0.2
+
+
+# ---------------------------- data pipeline -------------------------------
+
+def test_synthetic_deterministic_and_resumable():
+    a = SyntheticLM(4, 16, 100, seed=1)
+    b1 = a.next_batch()
+    b2 = a.next_batch()
+    st = a.state()
+    b3 = a.next_batch()
+    b = SyntheticLM(4, 16, 100, seed=1)
+    b.restore(st)
+    b3b = b.next_batch()
+    np.testing.assert_array_equal(b3["inputs"], b3b["inputs"])
+    assert not np.array_equal(b1["inputs"], b2["inputs"])
+
+
+def test_synthetic_shards_disjoint_streams():
+    s0 = SyntheticLM(8, 16, 100, seed=1, shard_id=0, n_shards=2)
+    s1 = SyntheticLM(8, 16, 100, seed=1, shard_id=1, n_shards=2)
+    b0, b1 = s0.next_batch(), s1.next_batch()
+    assert b0["inputs"].shape == (4, 16)
+    assert not np.array_equal(b0["inputs"], b1["inputs"])
+
+
+def test_bin_token_source(tmp_path):
+    toks = np.arange(10_000, dtype=np.int32) % 97
+    path = tmp_path / "corpus.bin"
+    toks.tofile(path)
+    src = BinTokenSource(str(path), batch=4, seq=32, seed=0)
+    b = src.next_batch()
+    assert b["inputs"].shape == (4, 32)
+    # label shift property: labels are inputs shifted by one
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher_delivers_in_order():
+    src = SyntheticLM(2, 8, 50, seed=3)
+    ref = SyntheticLM(2, 8, 50, seed=3)
+    pf = Prefetcher(src, prefetch=2)
+    for _ in range(4):
+        got = pf.next_batch()
+        exp = ref.next_batch()
+        np.testing.assert_array_equal(got["inputs"], exp["inputs"])
+    pf.close()
+
+
+# ---------------------------- checkpointing -------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)}}
+    for step in [1, 2, 3, 4]:
+        ckpt.save(str(tmp_path), step, tree, extra={"step": step}, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    restored, extra = ckpt.restore(str(tmp_path), 4, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    assert extra["step"] == 4
+    # gc kept only 2
+    kept = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    assert len(kept) == 2
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.ones((8, 8))}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    fn = os.path.join(path, "leaf_00000.npy")
+    arr = np.load(fn)
+    arr[0, 0] = 999.0
+    np.save(fn, arr)
+    with pytest.raises(AssertionError, match="corrupt"):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # fake a crashed save
+    os.makedirs(tmp_path / "step_00000002", exist_ok=True)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpointer(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    saver = ckpt.AsyncCheckpointer()
+    saver.save(str(tmp_path), 7, tree)
+    saver.join()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+# ---------------------------- compression ---------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+def test_int8_quantization_bounded_error(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,)) * scale
+    q, s = quantize_int8(x, jax.random.fold_in(key, 1))
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 1.01          # within one quantum
+
+
+def test_int8_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((512,), 0.3) * 1.7              # not on the int8 grid
+    acc = np.zeros(512)
+    n = 200
+    for i in range(n):
+        q, s = quantize_int8(x, jax.random.fold_in(key, i))
+        acc += np.asarray(dequantize_int8(q, s))
+    bias = np.abs(acc / n - np.asarray(x)).mean()
+    assert bias < 5e-3
+
+
+def test_bucket_roundtrip():
+    tree = {"a": jnp.ones((3, 2), jnp.bfloat16), "b": jnp.zeros(5)}
+    flat, meta = flatten_bucket(tree)
+    assert flat.shape == (11,)
+    back = unflatten_bucket(flat, meta)
+    assert back["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(tree["b"]))
+
+
+# ---------------------------- autoshard / elastic --------------------------
+
+def test_autoshard_plans_and_elastic_degrades():
+    from repro.configs import get
+    from repro.launch.elastic import simulate_pod_failure
+    cfg = get("granite_3_2b")
+    before, after = simulate_pod_failure(cfg, 2, 1)
+    assert before.est_throughput > 0
+    assert after.est_throughput > 0
+    # losing a pod cannot improve modeled throughput
+    assert after.est_throughput <= before.est_throughput * 1.001
+    assert set(after.stage_assignment.values()) <= {0}
+
+
+def test_autoshard_prefers_collocating_pipeline_intra_pod():
+    """Activation hops are cheap vs DCN; RLAS should not scatter adjacent
+    stages across pods when one pod has capacity."""
+    from repro.configs import get
+    from repro.core.autoshard import plan_stages
+    plan = plan_stages(get("smollm_360m"), n_pods=2, chips_per_pod=64,
+                       microbatch=8, seq=1024)
+    assert plan.throughput > 0

@@ -1,0 +1,24 @@
+"""End-to-end system behaviour: the full paper pipeline in one test."""
+import numpy as np
+
+from repro.core import rlas_optimize, server_a
+from repro.streaming.apps import word_count
+from repro.streaming.runtime import run_app
+from repro.streaming.simulator import measure_capacity
+
+
+def test_end_to_end_wordcount_pipeline():
+    """Profile -> RLAS optimize -> model vs DES -> real execution, verified."""
+    app = word_count()
+    machine = server_a()
+    res = rlas_optimize(app.graph, machine, input_rate=None,
+                        compress_ratio=5, bestfit=True, max_nodes=5000)
+    assert res.placement.feasible
+    assert res.R > 2e7                              # tens of millions words/s
+    des = measure_capacity(res.graph, machine, res.placement.placement,
+                           horizon=0.006)
+    assert abs(des.R - res.R) / des.R < 0.2         # model tracks measurement
+    rt = run_app(app, {"splitter": 2, "counter": 2}, batch=256, duration=0.3)
+    counted = sum(int(st.get("counts", np.zeros(1)).sum())
+                  for st in rt.states["counter"])
+    assert counted == 10 * rt.spout_tuples           # exact semantics
