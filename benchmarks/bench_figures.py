@@ -1,4 +1,5 @@
-"""Paper Figures 7, 9, 10, 12, 13, 14, 16 analogues.
+"""Paper Figures 7, 9, 10, 12, 13, 14, 16 analogues, driven by the unified
+Job/Plan API.
 
 Fig 6's cross-system comparison (Storm/Flink/StreamBox) cannot run here —
 those systems aren't reproducible in this container; the execution-efficiency
@@ -11,20 +12,18 @@ import time
 
 import numpy as np
 
-from repro.core import (ExecutionGraph, evaluate, rlas_optimize, server_a,
-                        server_b, subset)
-from repro.core.baselines import ff_place, random_plan, rr_place
+from repro.core import server_a
+from repro.streaming.api import Job
 from repro.streaming.apps import ALL_APPS, word_count
-from repro.streaming.simulator import des_simulate, fluid_solve
 
 from .common import des_measure, emit, optimized_plan
 
 
 def fig7_latency():
     """End-to-end latency percentiles (DES, WC optimized plan)."""
-    app, machine, res, _ = optimized_plan("wc", "server_a")
+    app, machine, plan, _ = optimized_plan("wc", "server_a")
     t0 = time.time()
-    des = des_measure(app, machine, res)
+    des = des_measure(plan)
     wall = (time.time() - t0) * 1e6
     emit("fig7/wc_latency", wall,
          f"p50_us={des.latency_p50*1e6:.1f};p99_us={des.latency_p99*1e6:.1f}")
@@ -36,28 +35,28 @@ def fig9_scalability():
         base = None
         for ns in [1, 2, 4, 8]:
             t0 = time.time()
-            app, machine, res, _ = optimized_plan(name, "server_a",
-                                                  n_sockets=ns)
+            app, machine, plan, _ = optimized_plan(name, "server_a",
+                                                   n_sockets=ns)
             wall = (time.time() - t0) * 1e6
             if ns == 1:
-                base = max(res.R, 1e-9)
+                base = max(plan.R, 1e-9)
             emit(f"fig9/{name}/sockets={ns}", wall,
-                 f"R={res.R:.3e};speedup={res.R/base:.2f}")
+                 f"R={plan.R:.3e};speedup={plan.R/base:.2f}")
 
 
 def fig10_gap_to_ideal():
     """W/o RMA bound vs ideal linear scaling (paper: 89-95%)."""
     for name in ALL_APPS:
-        app, machine, res, _ = optimized_plan(name, "server_a", n_sockets=8)
-        app1, m1, res1, _ = optimized_plan(name, "server_a", n_sockets=1)
-        ideal = res1.R * 8
+        app, machine, plan, _ = optimized_plan(name, "server_a", n_sockets=8)
+        _, _, plan1, _ = optimized_plan(name, "server_a", n_sockets=1)
+        ideal = plan1.R * 8
         t0 = time.time()
-        no_rma = evaluate(res.graph, machine, res.placement.placement,
-                          None, tf_mode="zero")
+        no_rma = plan.estimate(tf_mode="zero")
         wall = (time.time() - t0) * 1e6
         emit(f"fig10/{name}", wall,
-             f"R={res.R:.3e};wo_rma={no_rma.R:.3e};ideal={ideal:.3e};"
-             f"wo_rma_frac={no_rma.R/max(ideal,1e-9):.2f}")
+             f"R={plan.R:.3e};wo_rma={no_rma.throughput:.3e};"
+             f"ideal={ideal:.3e};"
+             f"wo_rma_frac={no_rma.throughput/max(ideal,1e-9):.2f}")
 
 
 def fig12_fixed_capability():
@@ -70,12 +69,13 @@ def fig12_fixed_capability():
         for mode, label in [("relative", "rlas"), ("worst", "fixL"),
                             ("zero", "fixU")]:
             t0 = time.time()
-            app, machine, res, _ = optimized_plan(name, "server_a",
-                                                  tf_mode=mode)
-            des = des_measure(app, machine, res)
+            app, machine, plan, _ = optimized_plan(name, "server_a",
+                                                   tf_mode=mode)
+            des = des_measure(plan)
             wall = (time.time() - t0) * 1e6
-            rows[label] = des.R
-            emit(f"fig12/{name}/{label}", wall, f"R_meas={des.R:.3e}")
+            rows[label] = des.throughput
+            emit(f"fig12/{name}/{label}", wall,
+                 f"R_meas={des.throughput:.3e}")
         emit(f"fig12/{name}/improvement", 0.0,
              f"vs_fixL={rows['rlas']/max(rows['fixL'],1e-9):.2f}x;"
              f"vs_fixU={rows['rlas']/max(rows['fixU'],1e-9):.2f}x")
@@ -85,47 +85,42 @@ def fig13_placement_strategies():
     """Same replication, placement by RLAS/FF/RR on both servers."""
     for server in ["server_a", "server_b"]:
         for name in ALL_APPS:
-            app, machine, res, _ = optimized_plan(name, server)
-            graph = res.graph
-            for strat, place_fn in [
-                    ("rlas", None), ("ff", ff_place), ("rr", rr_place)]:
+            app, machine, rlas_plan, _ = optimized_plan(name, server)
+            job = Job(app)
+            for strat in ["rlas", "ff", "rr"]:
                 t0 = time.time()
-                if place_fn is None:
-                    placement = res.placement.placement
+                if strat == "rlas":
+                    plan = rlas_plan
                 else:
-                    placement = place_fn(graph, machine, None).placement
-                des = des_simulate(graph, machine, placement,
-                                   input_rate=_sat_rate(graph, machine,
-                                                        placement),
-                                   horizon=0.006)
+                    plan = job.plan(
+                        machine, optimizer=strat,
+                        parallelism=rlas_plan.parallelism,
+                        compress_ratio=rlas_plan.graph.compress_ratio)
+                des = plan.simulate(backend="des", input_rate=None,
+                                    horizon=0.006)
                 wall = (time.time() - t0) * 1e6
                 emit(f"fig13/{server}/{name}/{strat}", wall,
-                     f"R_meas={des.R:.3e}")
-
-
-def _sat_rate(graph, machine, placement):
-    sat = fluid_solve(graph, machine, placement, input_rate=None)
-    spout = sum(sat.processed[v] for v in graph.spout_units())
-    return max(spout, 1.0) * 1.05
+                     f"R_meas={des.throughput:.3e}")
 
 
 def fig14_monte_carlo(n_samples: int = 1000):
     """Random replication+placement plans vs RLAS (paper: none beat RLAS)."""
     rng = np.random.default_rng(0)
     for name in ["wc", "lr"]:
-        app, machine, res, _ = optimized_plan(name, "server_a")
+        app, machine, plan, _ = optimized_plan(name, "server_a")
+        job = Job(app)
         t0 = time.time()
         better = 0
         rs = []
         for _ in range(n_samples):
-            _, _, r = random_plan(app.graph, machine, rng)
-            rs.append(r)
-            if r > res.R:
+            sample = job.plan(machine, optimizer="random", rng=rng)
+            rs.append(sample.R)
+            if sample.R > plan.R:
                 better += 1
         wall = (time.time() - t0) * 1e6 / n_samples
         rs = np.array(rs)
         emit(f"fig14/{name}", wall,
-             f"rlas={res.R:.3e};best_random={rs.max():.3e};"
+             f"rlas={plan.R:.3e};best_random={rs.max():.3e};"
              f"median_random={np.median(rs):.3e};frac_better={better/n_samples:.4f}")
 
 
@@ -139,30 +134,24 @@ def fig16_factor_analysis():
                    efficiency factor on actual hardware).
     """
     for name in ALL_APPS:
-        app, machine, res_fix, _ = optimized_plan(name, "server_a",
-                                                  tf_mode="worst")
-        app, machine, res_rlas, _ = optimized_plan(name, "server_a")
+        _, machine, plan_fix, _ = optimized_plan(name, "server_a",
+                                                 tf_mode="worst")
+        _, _, plan_rlas, _ = optimized_plan(name, "server_a")
         t0 = time.time()
-        simple = des_simulate(
-            res_fix.graph, machine, res_fix.placement.placement,
-            input_rate=_sat_rate(res_fix.graph, machine,
-                                 res_fix.placement.placement),
-            batch=1, horizon=0.002)
-        jumbo = des_simulate(
-            res_fix.graph, machine, res_fix.placement.placement,
-            input_rate=_sat_rate(res_fix.graph, machine,
-                                 res_fix.placement.placement),
-            batch=64, horizon=0.006)
-        rlas = des_measure(app, machine, res_rlas)
+        simple = plan_fix.simulate(backend="des", input_rate=None,
+                                   batch=1, horizon=0.002)
+        jumbo = plan_fix.simulate(backend="des", input_rate=None,
+                                  batch=64, horizon=0.006)
+        rlas = des_measure(plan_rlas)
         wall = (time.time() - t0) * 1e6
         emit(f"fig16/{name}", wall,
-             f"simple={simple.R:.3e};jumbo={jumbo.R:.3e};"
-             f"rlas={rlas.R:.3e}")
+             f"simple={simple.throughput:.3e};jumbo={jumbo.throughput:.3e};"
+             f"rlas={rlas.throughput:.3e}")
     # real-runtime factor (WC): jumbo tuples on/off
-    from repro.streaming.runtime import run_app
     t0 = time.time()
-    off = run_app(word_count(), batch=256, duration=0.4, jumbo=False)
-    on = run_app(word_count(), batch=256, duration=0.4, jumbo=True)
+    base = Job(word_count()).plan(server_a(), optimizer="ff")
+    off = base.execute(batch=256, duration=0.4, jumbo=False)
+    on = base.execute(batch=256, duration=0.4, jumbo=True)
     wall = (time.time() - t0) * 1e6
     emit("fig16/runtime_wc_jumbo", wall,
          f"off={off.throughput:.3e};on={on.throughput:.3e};"

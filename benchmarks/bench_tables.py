@@ -1,4 +1,4 @@
-"""Paper Tables 3, 4 and 7 analogues.
+"""Paper Tables 3, 4 and 7 analogues, driven by the unified Job/Plan API.
 
 Table 3 — per-tuple processing time T under varying NUMA distance
           (measured = DES round-trip; estimated = Formula 2 model).
@@ -10,11 +10,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import ExecutionGraph, evaluate, rlas_optimize, server_a
+from repro.core import ExecutionGraph, server_a
+from repro.streaming.api import Job
 from repro.streaming.apps import ALL_APPS, word_count
-from repro.streaming.simulator import des_simulate, fluid_solve
 
 from .common import des_measure, emit, optimized_plan
 
@@ -23,9 +21,15 @@ def table3_rma():
     """Measured vs estimated T for WC splitter/counter at socket distances."""
     m = server_a()
     app = word_count()
+    job = Job(app)
     pairs = [("splitter", "parser"), ("counter", "splitter")]
     dists = [("S0-S0", 0, 0), ("S0-S1", 0, 1), ("S0-S3", 0, 3),
              ("S0-S4", 0, 4), ("S0-S7", 0, 7)]
+    # unit index per operator: parallelism is fixed at 1, so the replica
+    # ordering is invariant across all (op, distance) cells
+    units = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators})
+    idx = {r.op: i for i, r in enumerate(units.replicas)}
+    n_ops = len(app.graph.operators)
     for op, producer in pairs:
         spec = app.graph.operators[op]
         for label, si, sj in dists:
@@ -34,17 +38,16 @@ def table3_rma():
             # measured: run the whole app on the DES with `op` placed at
             # distance (si, sj) from its producer; derive ns/tuple from the
             # unit's observed busy time
-            sub = ExecutionGraph(app.graph, {n: 1 for n in
-                                             app.graph.operators})
-            placement = [si] * sub.n_units
-            idx = {r.op: i for i, r in enumerate(sub.replicas)}
+            placement = [si] * n_ops
             placement[idx[op]] = sj
+            plan = job.plan(m, optimizer="manual", placement=placement)
             t0 = time.time()
-            des = des_simulate(sub, m, placement, input_rate=3e5,
-                               batch=64, horizon=0.004)
+            des = plan.simulate(backend="des", input_rate=3e5,
+                                batch=64, horizon=0.004)
             wall = (time.time() - t0) * 1e6
             i = idx[op]
-            meas_ns = (des.busy_s[i] / max(des.unit_tuples[i], 1)) * 1e9
+            meas_ns = (des.raw.busy_s[i] /
+                       max(des.raw.unit_tuples[i], 1)) * 1e9
             rel = abs(meas_ns - est_ns) / max(meas_ns, 1e-9)
             emit(f"table3/{op}/{label}", wall,
                  f"meas_ns={meas_ns:.1f};est_ns={est_ns:.1f};"
@@ -53,22 +56,22 @@ def table3_rma():
 
 def table4_accuracy():
     for name in ALL_APPS:
-        app, machine, res, wall = optimized_plan(name, "server_a")
-        est = res.R
+        app, machine, plan, wall = optimized_plan(name, "server_a")
+        est = plan.R
         t0 = time.time()
-        des = des_measure(app, machine, res)
+        des = des_measure(plan)
         wall_m = (time.time() - t0) * 1e6
-        rel = abs(des.R - est) / max(des.R, 1e-9)
+        rel = abs(des.throughput - est) / max(des.throughput, 1e-9)
         emit(f"table4/{name}", wall_m,
-             f"meas={des.R:.3e};est={est:.3e};rel_err={rel:.3f}")
+             f"meas={des.throughput:.3e};est={est:.3e};rel_err={rel:.3f}")
 
 
 def table7_compress():
     for r in [1, 3, 5, 10, 15]:
         t0 = time.time()
-        app, machine, res, _ = optimized_plan("wc", "server_a", compress=r)
+        app, machine, plan, _ = optimized_plan("wc", "server_a", compress=r)
         wall = (time.time() - t0) * 1e6
-        emit(f"table7/r={r}", wall, f"R={res.R:.3e};opt_s={wall/1e6:.2f}")
+        emit(f"table7/r={r}", wall, f"R={plan.R:.3e};opt_s={wall/1e6:.2f}")
 
 
 def main():

@@ -3,17 +3,20 @@
 Every benchmark prints ``name,us_per_call,derived`` rows; ``us_per_call`` is
 the optimizer/simulator wall time per invocation, ``derived`` the
 benchmark-specific metric (throughput, relative error, speedup...).
+
+Plans come from the unified Job/Plan API: ``optimized_plan`` returns an
+RLAS :class:`repro.streaming.api.Plan` whose ``estimate()`` / ``simulate()``
+/ ``execute()`` produce the benchmark measurements.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Optional
+from typing import Optional
 
-from repro.core import (ExecutionGraph, MachineSpec, evaluate, rlas_optimize,
-                        server_a, server_b, subset)
+from repro.core import server_a, server_b, subset
+from repro.streaming.api import Job, Metrics, Plan
 from repro.streaming.apps import ALL_APPS
-from repro.streaming.simulator import fluid_solve, measure_capacity
 
 ROWS = []
 
@@ -33,14 +36,14 @@ def optimized_plan(app_name: str, machine_name: str, n_sockets: int = 8,
     if n_sockets < machine.n_sockets:
         machine = subset(machine, n_sockets)
     t0 = time.time()
-    res = rlas_optimize(app.graph, machine, input_rate=None,
-                        compress_ratio=compress, bestfit=True,
-                        max_nodes=5000, tf_mode=tf_mode)
+    plan = Job(app).plan(machine, optimizer="rlas", compress_ratio=compress,
+                         bestfit=True, max_nodes=5000, tf_mode=tf_mode)
     wall = time.time() - t0
-    return app, machine, res, wall
+    return app, machine, plan, wall
 
 
-def des_measure(app, machine, res, horizon: float = 0.008, seed: int = 0):
-    """Measured throughput of an optimized plan on the DES."""
-    return measure_capacity(res.graph, machine, res.placement.placement,
-                            horizon=horizon, seed=seed)
+def des_measure(plan: Plan, horizon: float = 0.008,
+                seed: int = 0) -> Metrics:
+    """Measured saturation throughput of a plan on the DES (§6.1 protocol)."""
+    return plan.simulate(backend="des", input_rate=None, horizon=horizon,
+                         seed=seed)

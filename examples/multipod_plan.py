@@ -1,5 +1,7 @@
-"""RLAS as a multi-pod auto-planner (DESIGN.md §2): decide DP-vs-PP across
-pods from the paper's performance model, then simulate losing a pod and
+"""RLAS as a multi-pod auto-planner (DESIGN.md §2): the LM layer stack is
+declared as a planning-only streaming Topology (stages have profiled specs
+but no kernels), and the same ``Job``/``Plan`` surface that drives the
+streaming apps decides DP-vs-PP across pods; then simulate losing a pod and
 re-plan (elastic scaling, paper §5.3).
 
   PYTHONPATH=src python examples/multipod_plan.py [--arch granite_3_2b]
@@ -15,8 +17,12 @@ ap.add_argument("--arch", default="granite_3_2b")
 args = ap.parse_args()
 cfg = get(args.arch)
 
+# plan_stages builds the stage Topology and runs one Job(...).plan(...);
+# the underlying api.Plan rides along for the unified estimate surface
 plan = plan_stages(cfg, n_pods=2, chips_per_pod=256)
+est = plan.plan.estimate()
 print(f"== {cfg.name} on 2 pods x 256 chips ==")
+print(f"{est.summary()}  ({plan.plan.total_threads} chips engaged)")
 print(f"stage -> pod: {plan.assignment}")
 print(f"replication (chips per stage): {plan.parallelism}")
 print(f"pipeline crosses pods: {plan.crosses_pods} "

@@ -1,40 +1,76 @@
-"""Quickstart: the paper's pipeline end-to-end on Word Count.
+"""Quickstart: the paper's pipeline end-to-end through the unified API.
 
-1. Profile-backed WC topology (paper Fig. 2).
-2. RLAS: jointly optimize replication + placement on Server A (Table 2).
-3. Compare the analytical estimate against the discrete-event measurement.
-4. Execute the real threaded runtime (jumbo tuples) and verify exact counts.
+1. Declare the Word Count topology (paper Fig. 2) with the fluent
+   ``Topology`` builder — profiled specs, kernels, sources and partition
+   strategies in one declaration.
+2. ``Job(...).plan(...)``: RLAS jointly optimizes replication + placement
+   on Server A (Table 2).
+3. One ``Plan`` object flows through the Table 4 protocol:
+   ``estimate()`` (analytical model) -> ``simulate()`` (discrete-event
+   measurement) -> ``execute()`` (real threaded runtime, jumbo tuples).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import rlas_optimize, server_a
-from repro.streaming.apps import word_count
-from repro.streaming.runtime import run_app
-from repro.streaming.simulator import measure_capacity
+from repro.core import server_a
+from repro.streaming import Job, Topology
 
-app = word_count()
-machine = server_a()
+VOCAB, WORDS = 4096, 10
+
+
+def source(batch, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, VOCAB, size=(batch, WORDS))
+
+
+def k_parser(batch, state):
+    return [batch]
+
+
+def k_splitter(batch, state):
+    return [batch.reshape(-1)]
+
+
+def k_counter(batch, state):
+    counts = state.setdefault("counts", np.zeros(VOCAB, np.int64))
+    np.add.at(counts, batch, 1)
+    return [counts[batch].astype(np.int64)]
+
+
+def k_sink(batch, state):
+    state["seen"] = state.get("seen", 0) + len(batch)
+    return []
+
+
+topology = (
+    Topology("wc")
+    .spout("spout", source, exec_ns=500.0, tuple_bytes=120.0)
+    .op("parser", k_parser, exec_ns=350.0, tuple_bytes=120.0)
+    .op("splitter", k_splitter, exec_ns=1612.8, tuple_bytes=120.0,
+        mem_bytes=240.0, selectivity=10.0)
+    .op("counter", k_counter, exec_ns=612.3, tuple_bytes=32.0,
+        mem_bytes=96.0, partition="key")
+    .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=32.0))
 
 print("== RLAS optimization (paper Alg. 1 + 2) ==")
-res = rlas_optimize(app.graph, machine, input_rate=None, compress_ratio=5,
-                    bestfit=True, max_nodes=5000)
-print(f"replication: {res.parallelism}")
-print(f"estimated throughput: {res.R:,.0f} tuples/s "
-      f"({res.iterations} scaling iterations)")
+plan = Job(topology).plan(server_a(), optimizer="rlas", compress_ratio=5,
+                          bestfit=True, max_nodes=5000)
+print(plan.describe())
 
-des = measure_capacity(res.graph, machine, res.placement.placement,
-                       horizon=0.008)
-rel = abs(des.R - res.R) / des.R
-print(f"measured (DES): {des.R:,.0f} tuples/s  -> rel. error {rel:.2%} "
-      f"(paper Table 4: 0.02-0.14)")
-print(f"latency p50/p99: {des.latency_p50*1e6:.0f}/{des.latency_p99*1e6:.0f} us")
+est = plan.estimate()
+print(f"\n{est.summary()}")
+
+des = plan.simulate(backend="des", horizon=0.008)
+rel = abs(des.throughput - est.throughput) / des.throughput
+print(f"{des.summary()}")
+print(f"estimate vs DES rel. error: {rel:.2%} (paper Table 4: 0.02-0.14)")
 
 print("\n== real threaded runtime (jumbo tuples) ==")
-rt = run_app(app, {"splitter": 2, "counter": 2}, batch=256, duration=0.5)
+rt = plan.execute(duration=0.5, batch=256,
+                  parallelism={"splitter": 2, "counter": 2})
 counted = sum(int(st.get("counts", np.zeros(1)).sum())
-              for st in rt.states["counter"])
-print(f"sink throughput: {rt.throughput:,.0f} words/s on this host")
-print(f"exact-count check: {counted} == 10 x {rt.spout_tuples} sentences -> "
-      f"{counted == 10 * rt.spout_tuples}")
+              for st in rt.raw.states["counter"])
+print(rt.summary())
+print(f"exact-count check: {counted} == 10 x {rt.raw.spout_tuples} "
+      f"sentences -> {counted == 10 * rt.raw.spout_tuples}")

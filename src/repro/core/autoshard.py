@@ -16,12 +16,10 @@ pods (PP over DCN)?" from the model rather than by convention.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional
 
 from repro.models.config import ModelConfig
-from .graph import LogicalGraph, OperatorSpec
-from .scaling import rlas_optimize
+from .graph import LogicalGraph
 from .topology import TPU_V5E_PEAK_FLOPS, TPU_V5E_HBM_BW, tpu_pod_spec
 
 MXU_EFFICIENCY = 0.5            # attainable fraction of peak on real kernels
@@ -35,6 +33,7 @@ class StagePlan:
     throughput: float                   # microbatches/sec (model estimate)
     crosses_pods: bool                  # True = pipeline split across pods
     result: object                      # ScalingResult for inspection
+    plan: object = None                 # the api.Plan (estimate/simulate)
 
 
 def _stage_flops_bytes(cfg: ModelConfig, tokens: int):
@@ -48,60 +47,55 @@ def _stage_flops_bytes(cfg: ModelConfig, tokens: int):
     return flops, bytes_params, bytes_acts
 
 
-def build_stage_graph(cfg: ModelConfig, microbatch: int, seq: int,
-                      train: bool = True) -> LogicalGraph:
+def build_stage_topology(cfg: ModelConfig, microbatch: int, seq: int,
+                         train: bool = True):
+    """Declare the layer stack as a planning-only streaming Topology
+    (stages have profiled specs but no runtime kernels)."""
+    from repro.streaming.api import Topology
+
     tokens = microbatch * seq
     mult = 3.0 if train else 1.0        # fwd+bwd
-    ops: Dict[str, OperatorSpec] = {}
-    edges = []
     act_bytes = tokens * cfg.d_model * 2
+    peak = TPU_V5E_PEAK_FLOPS * MXU_EFFICIENCY
 
     embed_flops = 2 * cfg.vocab * cfg.d_model * 0 + tokens * cfg.d_model * 2
     # host feed: rate-limited stand-in (1e6 microbatches/s >> any stage),
     # NOT free — a 0-cost spout would saturate the model's bandwidth budget
-    ops["feed"] = OperatorSpec("feed", exec_ns=1e3,
-                               tuple_bytes=tokens * 4, mem_bytes=tokens * 4,
-                               is_spout=True)
-    ops["embed"] = OperatorSpec(
-        "embed",
-        exec_ns=mult * embed_flops / (TPU_V5E_PEAK_FLOPS * MXU_EFFICIENCY)
-        * 1e9,
-        tuple_bytes=tokens * 4, mem_bytes=act_bytes)
-    edges.append(("feed", "embed"))
-    prev = "embed"
+    topo = (Topology(f"stages[{cfg.name}]")
+            .spout("feed", exec_ns=1e3, tuple_bytes=tokens * 4)
+            .op("embed", exec_ns=mult * embed_flops / peak * 1e9,
+                tuple_bytes=tokens * 4, mem_bytes=act_bytes))
     for i in range(cfg.n_periods):
-        name = f"stage{i}"
         flops, pbytes, abytes = _stage_flops_bytes(cfg, tokens)
-        te = mult * flops / (TPU_V5E_PEAK_FLOPS * MXU_EFFICIENCY) * 1e9
-        ops[name] = OperatorSpec(name, exec_ns=te, tuple_bytes=abytes,
-                                 mem_bytes=pbytes + abytes)
-        edges.append((prev, name))
-        prev = name
+        topo.op(f"stage{i}", exec_ns=mult * flops / peak * 1e9,
+                tuple_bytes=abytes, mem_bytes=pbytes + abytes)
     head_flops = mult * 2 * cfg.vocab * cfg.d_model * tokens
-    ops["head"] = OperatorSpec(
-        "head", exec_ns=head_flops / (TPU_V5E_PEAK_FLOPS * MXU_EFFICIENCY)
-        * 1e9,
-        tuple_bytes=act_bytes, mem_bytes=act_bytes)
-    edges.append((prev, "head"))
-    return LogicalGraph(ops, edges)
+    topo.op("head", exec_ns=head_flops / peak * 1e9,
+            tuple_bytes=act_bytes, mem_bytes=act_bytes)
+    return topo
+
+
+def build_stage_graph(cfg: ModelConfig, microbatch: int, seq: int,
+                      train: bool = True) -> LogicalGraph:
+    return build_stage_topology(cfg, microbatch, seq, train).build_logical()
 
 
 def plan_stages(cfg: ModelConfig, n_pods: int = 2, chips_per_pod: int = 256,
                 microbatch: int = 16, seq: int = 4096,
                 compress_ratio: int = 16, train: bool = True) -> StagePlan:
-    graph = build_stage_graph(cfg, microbatch, seq, train)
+    from repro.streaming.api import Job
+
     machine = tpu_pod_spec(n_pods=n_pods, chips_per_pod=chips_per_pod)
-    res = rlas_optimize(graph, machine, input_rate=None,
-                        compress_ratio=compress_ratio, bestfit=True,
-                        max_nodes=20_000, max_iters=400,
-                        bottleneck_rule="reverse_topo",
-                        max_threads=machine.total_cores)
+    plan = Job(build_stage_topology(cfg, microbatch, seq, train)).plan(
+        machine, optimizer="rlas", compress_ratio=compress_ratio,
+        bestfit=True, max_nodes=20_000, max_iters=400,
+        bottleneck_rule="reverse_topo", max_threads=machine.total_cores)
+    res = plan.result
     # majority pod per stage (replicas may be spread for DP across pods)
     votes: Dict[str, Dict[int, int]] = {}
-    pres = res.placement
-    if pres.eval is not None:
-        for idx, unit in enumerate(res.graph.replicas):
-            s = pres.placement[idx]
+    if plan.eval is not None:
+        for idx, unit in enumerate(plan.graph.replicas):
+            s = plan.placement[idx]
             if s >= 0:
                 votes.setdefault(unit.op, {})
                 votes[unit.op][int(s)] = votes[unit.op].get(int(s), 0) \
@@ -115,4 +109,4 @@ def plan_stages(cfg: ModelConfig, n_pods: int = 2, chips_per_pod: int = 256,
         dp_degree=min(res.parallelism.values()) if res.parallelism else 1,
         throughput=res.R,
         crosses_pods=len(stage_pods) > 1,
-        result=res)
+        result=res, plan=plan)

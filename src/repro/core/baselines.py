@@ -101,9 +101,10 @@ def random_plan(logical: LogicalGraph, machine: MachineSpec,
                 input_rate: Optional[float] = None,
                 max_threads: Optional[int] = None,
                 compress_ratio: int = 1,
-                ) -> Tuple[ExecutionGraph, List[int], float]:
+                ) -> Tuple[ExecutionGraph, List[int], "PlanEval"]:
     """One Monte-Carlo sample: random replication until the thread budget is
-    hit, then uniform random placement (paper Fig. 14 protocol)."""
+    hit, then uniform random placement (paper Fig. 14 protocol).  Returns the
+    full :class:`PlanEval` (``.R`` is 0-equivalent when infeasible)."""
     if max_threads is None:
         max_threads = machine.total_cores
     names = list(logical.operators)
@@ -117,4 +118,4 @@ def random_plan(logical: LogicalGraph, machine: MachineSpec,
     placement = [int(rng.integers(machine.n_sockets))
                  for _ in range(graph.n_units)]
     ev = evaluate(graph, machine, placement, input_rate)
-    return graph, placement, (ev.R if ev.feasible else 0.0)
+    return graph, placement, ev

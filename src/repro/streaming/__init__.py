@@ -1,0 +1,12 @@
+"""Streaming substrate: declarative API, benchmark apps, simulators, runtime.
+
+Preferred entry point::
+
+    from repro.streaming import Job, Topology
+    plan = Job(topology).plan(machine, optimizer="rlas")
+    plan.estimate(); plan.simulate(); plan.execute()
+"""
+from .api import (Job, Metrics, Plan, StreamingApp, Topology, TopologyError)
+
+__all__ = ["Job", "Metrics", "Plan", "StreamingApp", "Topology",
+           "TopologyError"]

@@ -1,0 +1,513 @@
+"""Unified Topology/Job API: one declarative surface from graph construction
+to RLAS planning to execution.
+
+The paper's value is the *pipeline* — profile a topology, jointly optimize
+replication + placement (RLAS, Alg. 1+2), then run the plan — and this module
+is its single entry point:
+
+* :class:`Topology` — fluent dataflow builder.  Operators declare their
+  profiled spec (T^e, N, M, selectivity), their compute kernel, their inputs
+  (with optional per-stream selectivity overrides, paper Table 8) and their
+  *input partitioning strategy* (``"shuffle"`` or ``"key"``) in one place.
+  ``build()`` validates the graph (duplicate operators, unknown endpoints,
+  edges into spouts, cycles, unreachable operators) before anything runs.
+* :class:`Job` — wraps a built app (or a planning-only logical graph) and
+  produces execution :class:`Plan`\\ s via ``plan(machine, optimizer=...)``
+  where the optimizer is RLAS (joint scaling+placement), plain B&B placement,
+  or one of the paper's §6.4 baselines (first-fit / round-robin / random).
+* :class:`Plan` — one plan object flows through the Table 4 protocol:
+  ``estimate()`` (analytical §3.1 model), ``simulate()`` (DES or fluid
+  oracle) and ``execute()`` (real threaded runtime), all returning a common
+  :class:`Metrics` record so estimated vs measured numbers compare directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import (ExecutionGraph, LogicalGraph, MachineSpec,
+                        OperatorSpec, bnb_place, evaluate, rlas_optimize)
+from repro.core.baselines import ff_place, random_plan, rr_place
+
+PARTITION_STRATEGIES = ("shuffle", "key")
+
+_UNSET = object()
+
+
+class TopologyError(ValueError):
+    """A topology declaration is invalid (raised at build time)."""
+
+
+@dataclasses.dataclass
+class StreamingApp:
+    """A built streaming application: logical graph + runtime artefacts.
+
+    ``partition`` maps a consumer operator to its declared input-partitioning
+    strategy ("shuffle" unless declared otherwise); ``sources`` maps each
+    spout to its generator ``(batch, seed) -> np.ndarray``.  ``make_source``
+    remains the default generator for spouts without a dedicated entry.
+    """
+
+    name: str
+    graph: LogicalGraph
+    kernels: Dict[str, Callable]
+    make_source: Optional[Callable[[int, int], np.ndarray]] = None
+    partition: Dict[str, str] = dataclasses.field(default_factory=dict)
+    sources: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+
+    def source_for(self, spout: str) -> Callable[[int, int], np.ndarray]:
+        fn = self.sources.get(spout, self.make_source)
+        if fn is None:
+            raise TopologyError(f"spout {spout!r} has no source generator")
+        return fn
+
+
+@dataclasses.dataclass
+class _OpDecl:
+    name: str
+    kernel: Optional[Callable]
+    spec: OperatorSpec
+    inputs: List[str]
+    edge_selectivity: Dict[str, float]      # producer -> override
+    partition: str
+    source: Optional[Callable]
+
+
+class Topology:
+    """Fluent dataflow builder (declare -> validate -> build).
+
+    >>> app = (Topology("wc")
+    ...        .spout("spout", source, exec_ns=500, tuple_bytes=120)
+    ...        .op("parser", k_parser, exec_ns=350)
+    ...        .op("counter", k_counter, exec_ns=612.3, partition="key")
+    ...        .sink("sink", k_sink)
+    ...        .build())
+
+    ``inputs`` defaults to the previously declared operator (linear-chain
+    convenience); pass a name, a list of names, or a ``{producer: selectivity}``
+    mapping for multi-stream edges with per-stream selectivity overrides.
+    Forward references are allowed — validation happens in ``build()``.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._decls: Dict[str, _OpDecl] = {}
+        self._last: Optional[str] = None
+
+    # -- declaration ------------------------------------------------------
+    def spout(self, name: str,
+              source: Optional[Callable[[int, int], np.ndarray]] = None, *,
+              exec_ns: float, tuple_bytes: float = 64.0,
+              mem_bytes: Optional[float] = None,
+              selectivity: float = 1.0) -> "Topology":
+        """Declare a source operator.  ``source(batch, seed) -> array``."""
+        self._declare(_OpDecl(
+            name, None,
+            OperatorSpec(name, exec_ns, tuple_bytes,
+                         tuple_bytes if mem_bytes is None else mem_bytes,
+                         selectivity, is_spout=True),
+            inputs=[], edge_selectivity={}, partition="shuffle",
+            source=source))
+        return self
+
+    def op(self, name: str, kernel: Optional[Callable] = None, *,
+           inputs: Union[None, str, Sequence[str],
+                         Mapping[str, float]] = None,
+           exec_ns: float, tuple_bytes: float = 64.0,
+           mem_bytes: Optional[float] = None, selectivity: float = 1.0,
+           partition: str = "shuffle") -> "Topology":
+        """Declare an operator.  ``kernel(batch, state) -> [out_batch, ...]``
+        emits one array per declared *downstream* stream, in the order the
+        consumers were declared.  ``partition`` is how *this* operator's
+        input stream is split over its replicas."""
+        if partition not in PARTITION_STRATEGIES:
+            raise TopologyError(
+                f"operator {name!r}: unknown partition strategy "
+                f"{partition!r} (choose from {PARTITION_STRATEGIES})")
+        names, esel = self._normalize_inputs(name, inputs)
+        self._declare(_OpDecl(
+            name, kernel,
+            OperatorSpec(name, exec_ns, tuple_bytes,
+                         tuple_bytes if mem_bytes is None else mem_bytes,
+                         selectivity),
+            inputs=names, edge_selectivity=esel, partition=partition,
+            source=None))
+        return self
+
+    def sink(self, name: str, kernel: Optional[Callable] = None,
+             **kwargs) -> "Topology":
+        """Convenience alias: a sink is an operator nothing consumes."""
+        kwargs.setdefault("exec_ns", 100.0)
+        return self.op(name, kernel, **kwargs)
+
+    def _normalize_inputs(self, name, inputs):
+        esel: Dict[str, float] = {}
+        if inputs is None:
+            if self._last is None:
+                raise TopologyError(
+                    f"operator {name!r} has no inputs and no upstream "
+                    "operator to chain from (declare a spout first)")
+            names = [self._last]
+        elif isinstance(inputs, str):
+            names = [inputs]
+        elif isinstance(inputs, Mapping):
+            names = list(inputs)
+            esel = {u: float(s) for u, s in inputs.items()}
+        else:
+            names = list(inputs)
+        if not names:
+            raise TopologyError(f"operator {name!r} declares an empty "
+                                "input list")
+        if len(set(names)) != len(names):
+            raise TopologyError(f"operator {name!r} lists a duplicate input")
+        return names, esel
+
+    def _declare(self, decl: _OpDecl) -> None:
+        if decl.name in self._decls:
+            raise TopologyError(f"duplicate operator {decl.name!r}")
+        self._decls[decl.name] = decl
+        self._last = decl.name
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def operators(self) -> List[str]:
+        return list(self._decls)
+
+    @property
+    def is_executable(self) -> bool:
+        """True when every non-spout op has a kernel and every spout a
+        source — i.e. ``build()`` would succeed where ``build_logical()``
+        does."""
+        return all((d.spec.is_spout and d.source is not None) or
+                   (not d.spec.is_spout and d.kernel is not None)
+                   for d in self._decls.values())
+
+    # -- validation + build ----------------------------------------------
+    def build_logical(self) -> LogicalGraph:
+        """Validate the declarations and compile the logical DAG."""
+        if not self._decls:
+            raise TopologyError(f"topology {self.name!r} declares no "
+                                "operators")
+        spouts = [n for n, d in self._decls.items() if d.spec.is_spout]
+        if not spouts:
+            raise TopologyError(f"topology {self.name!r} has no spout")
+        edges: List[tuple] = []
+        esel: Dict[tuple, float] = {}
+        for name, decl in self._decls.items():
+            for u in decl.inputs:
+                if u not in self._decls:
+                    raise TopologyError(
+                        f"operator {name!r} reads from unknown operator "
+                        f"{u!r} (declared: {sorted(self._decls)})")
+                edges.append((u, name))
+                if u in decl.edge_selectivity:
+                    esel[(u, name)] = decl.edge_selectivity[u]
+        for u, v in edges:
+            if self._decls[v].spec.is_spout:
+                raise TopologyError(f"spout {v!r} cannot have inputs "
+                                    f"(edge {u!r} -> {v!r})")
+        self._check_acyclic(edges)
+        ops = {n: d.spec for n, d in self._decls.items()}
+        return LogicalGraph(ops, edges, esel)
+
+    def _check_acyclic(self, edges) -> None:
+        indeg = {n: 0 for n in self._decls}
+        for _, v in edges:
+            indeg[v] += 1
+        frontier = [n for n, d in indeg.items() if d == 0]
+        seen = 0
+        while frontier:
+            n = frontier.pop()
+            seen += 1
+            for u, v in edges:
+                if u == n:
+                    indeg[v] -= 1
+                    if indeg[v] == 0:
+                        frontier.append(v)
+        if seen != len(self._decls):
+            # every non-spout op declares >=1 input and spouts accept none,
+            # so any operator unreachable from a spout is also on a cycle —
+            # this check covers both
+            cyclic = sorted(n for n, d in indeg.items() if d > 0)
+            raise TopologyError(
+                f"topology {self.name!r} has a cycle involving {cyclic}")
+
+    def build(self) -> StreamingApp:
+        """Compile to an executable :class:`StreamingApp` (graph + kernels +
+        sources + partition declarations)."""
+        graph = self.build_logical()
+        missing = [n for n, d in self._decls.items()
+                   if not d.spec.is_spout and d.kernel is None]
+        if missing:
+            raise TopologyError(
+                f"operators without kernels cannot execute: {missing} "
+                "(use build_logical() for planning-only topologies)")
+        unsourced = [n for n, d in self._decls.items()
+                     if d.spec.is_spout and d.source is None]
+        if unsourced:
+            raise TopologyError(
+                f"spouts without source generators: {unsourced}")
+        kernels = {n: d.kernel for n, d in self._decls.items()
+                   if d.kernel is not None}
+        sources = {n: d.source for n, d in self._decls.items()
+                   if d.source is not None}
+        partition = {n: d.partition for n, d in self._decls.items()
+                     if d.partition != "shuffle"}
+        return StreamingApp(self.name, graph, kernels,
+                            make_source=next(iter(sources.values())),
+                            partition=partition, sources=sources)
+
+
+# ---------------------------------------------------------------------------
+# Unified result record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Metrics:
+    """Common result shape for estimate / simulate / execute.
+
+    ``source`` tags provenance: "estimate" (analytical model), "fluid" /
+    "des" (simulators), "runtime" (real threads).  Latency percentiles are
+    NaN where the backend does not model latency; ``raw`` keeps the
+    backend-specific result (PlanEval / FluidResult / DesResult /
+    RuntimeResult) for detailed inspection.
+    """
+
+    source: str
+    throughput: float                  # R, sink tuples/s
+    latency_p50: float = math.nan      # seconds, spout entry -> sink
+    latency_p99: float = math.nan
+    feasible: bool = True
+    cpu_usage: Optional[np.ndarray] = None     # per-socket core-secs/sec
+    mem_usage: Optional[np.ndarray] = None     # per-socket bytes/s
+    violations: List[str] = dataclasses.field(default_factory=list)
+    raw: object = None
+
+    def summary(self) -> str:
+        lat = ("" if math.isnan(self.latency_p50) else
+               f" p50={self.latency_p50*1e6:.0f}us "
+               f"p99={self.latency_p99*1e6:.0f}us")
+        return (f"[{self.source}] R={self.throughput:,.0f} tuples/s "
+                f"feasible={self.feasible}{lat}")
+
+
+# ---------------------------------------------------------------------------
+# Job facade: topology/app -> Plan -> estimate/simulate/execute
+# ---------------------------------------------------------------------------
+
+OPTIMIZERS = ("rlas", "bnb", "ff", "rr", "random", "manual")
+
+
+class Job:
+    """One streaming job: a topology plus everything you can do with it."""
+
+    def __init__(self, source: Union[Topology, StreamingApp, LogicalGraph]):
+        if isinstance(source, Topology):
+            if source.is_executable:
+                self.app: Optional[StreamingApp] = source.build()
+                self.graph = self.app.graph
+            else:
+                self.app = None
+                self.graph = source.build_logical()
+            self.name = source.name
+        elif isinstance(source, StreamingApp):
+            self.app = source
+            self.graph = source.graph
+            self.name = source.name
+        elif isinstance(source, LogicalGraph):
+            self.app = None
+            self.graph = source
+            self.name = "job"
+        else:
+            raise TypeError(
+                f"Job expects Topology, StreamingApp or LogicalGraph, "
+                f"got {type(source).__name__}")
+
+    def plan(self, machine: MachineSpec, optimizer: str = "rlas", *,
+             input_rate: Optional[float] = None,
+             parallelism: Optional[Dict[str, int]] = None,
+             compress_ratio: int = 1, seed: int = 0, **kw) -> "Plan":
+        """Produce an execution plan (replication + placement).
+
+        ``optimizer``: "rlas" (joint scaling + B&B placement, the paper),
+        "bnb" (B&B placement at fixed ``parallelism``), "ff"/"rr" (§6.4
+        baselines at fixed ``parallelism``), "random" (Fig. 14 sample;
+        honours ``rng=`` for reproducible Monte-Carlo sweeps), or "manual"
+        (caller-supplied ``placement=`` list, one socket per unit).
+        """
+        if optimizer == "rlas":
+            res = rlas_optimize(self.graph, machine, input_rate=input_rate,
+                                compress_ratio=compress_ratio,
+                                initial_parallelism=parallelism, **kw)
+            return Plan(self, machine, res.graph,
+                        list(res.placement.placement),
+                        dict(res.parallelism), "rlas", input_rate,
+                        res.placement.eval, res)
+        if optimizer == "random":
+            rng = kw.pop("rng", None)
+            if rng is None:
+                rng = np.random.default_rng(seed)
+            if parallelism is not None:
+                raise TypeError(
+                    "optimizer='random' draws its own replication "
+                    "(paper Fig. 14 protocol) and would silently discard "
+                    "the parallelism argument")
+            if kw:
+                raise TypeError(f"unexpected arguments for optimizer="
+                                f"'random': {sorted(kw)}")
+            graph, placement, ev = random_plan(
+                self.graph, machine, rng, input_rate=input_rate,
+                compress_ratio=compress_ratio)
+            return Plan(self, machine, graph, list(placement),
+                        dict(graph.parallelism), "random", input_rate,
+                        ev, None)
+        par = {name: 1 for name in self.graph.operators}
+        par.update(parallelism or {})
+        graph = ExecutionGraph(self.graph, par, compress_ratio)
+        if optimizer == "manual":
+            placement = list(kw.pop("placement"))
+            if kw:
+                raise TypeError(f"unexpected arguments for optimizer="
+                                f"'manual': {sorted(kw)}")
+            if len(placement) != graph.n_units:
+                raise ValueError(
+                    f"manual placement has {len(placement)} entries for "
+                    f"{graph.n_units} execution units")
+            ev = evaluate(graph, machine, placement, input_rate)
+            return Plan(self, machine, graph, placement, par, "manual",
+                        input_rate, ev, None)
+        if optimizer == "bnb":
+            pres = bnb_place(graph, machine, input_rate, **kw)
+        elif optimizer in ("ff", "rr"):
+            if kw:
+                raise TypeError(f"unexpected arguments for optimizer="
+                                f"{optimizer!r}: {sorted(kw)}")
+            place = ff_place if optimizer == "ff" else rr_place
+            pres = place(graph, machine, input_rate)
+        else:
+            raise ValueError(f"unknown optimizer {optimizer!r} "
+                             f"(choose from {OPTIMIZERS})")
+        return Plan(self, machine, graph, list(pres.placement), par,
+                    optimizer, input_rate, pres.eval, pres)
+
+
+@dataclasses.dataclass
+class Plan:
+    """An execution plan: (replication, placement) on a concrete machine.
+
+    The same object flows through the paper's Table 4 protocol:
+    ``estimate()`` -> ``simulate()`` -> ``execute()``.
+    """
+
+    job: Job
+    machine: MachineSpec
+    graph: ExecutionGraph
+    placement: List[int]
+    parallelism: Dict[str, int]
+    optimizer: str
+    input_rate: Optional[float]
+    eval: object                        # PlanEval from planning, if any
+    result: object                      # optimizer-specific result
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.eval is not None and self.eval.feasible)
+
+    @property
+    def R(self) -> float:
+        """Planner's estimated throughput (0 when infeasible)."""
+        return self.eval.R if self.feasible else 0.0
+
+    @property
+    def total_threads(self) -> int:
+        return self.graph.total_threads()
+
+    def describe(self) -> str:
+        placed = {}
+        for idx, rep in enumerate(self.graph.replicas):
+            placed.setdefault(rep.op, []).append(self.placement[idx])
+        rows = [f"  {op:<16} x{self.parallelism.get(op, 1):<4} "
+                f"sockets={sorted(set(s))}" for op, s in placed.items()]
+        return (f"Plan[{self.optimizer}] for {self.job.name!r} on "
+                f"{self.machine.name} ({self.total_threads} threads, "
+                f"R={self.R:,.0f} tuples/s)\n" + "\n".join(rows))
+
+    # -- the three measurement backends -----------------------------------
+    def estimate(self, input_rate=_UNSET, tf_mode: str = "relative",
+                 mix: str = "weighted") -> Metrics:
+        """Analytical §3.1 rate model (instant, no simulation)."""
+        rate = self.input_rate if input_rate is _UNSET else input_rate
+        ev = evaluate(self.graph, self.machine, self.placement, rate,
+                      mix=mix, tf_mode=tf_mode)
+        return Metrics("estimate", ev.R, feasible=ev.feasible,
+                       cpu_usage=ev.cpu_usage, mem_usage=ev.mem_usage,
+                       violations=list(ev.violations), raw=ev)
+
+    def simulate(self, backend: str = "des", *, input_rate=_UNSET,
+                 batch: int = 64, horizon: float = 0.02,
+                 seed: int = 0, **kw) -> Metrics:
+        """Measurement oracle: "des" (jumbo-tuple discrete-event sim with
+        latency percentiles) or "fluid" (fixed-point rate solver that
+        degrades under contention).  ``input_rate=None`` measures saturation
+        capacity (the paper's §6.1 protocol)."""
+        from .simulator import des_simulate, fluid_solve, measure_capacity
+        rate = self.input_rate if input_rate is _UNSET else input_rate
+        if backend == "fluid":
+            fl = fluid_solve(self.graph, self.machine, self.placement,
+                             input_rate=rate, **kw)
+            return Metrics("fluid", fl.R, raw=fl)
+        if backend != "des":
+            raise ValueError(f"unknown simulate backend {backend!r} "
+                             "(choose 'des' or 'fluid')")
+        if rate is None:
+            des = measure_capacity(self.graph, self.machine, self.placement,
+                                   batch=batch, horizon=horizon, seed=seed,
+                                   **kw)
+        else:
+            des = des_simulate(self.graph, self.machine, self.placement,
+                               input_rate=rate, batch=batch,
+                               horizon=horizon, seed=seed, **kw)
+        return Metrics("des", des.R, des.latency_p50, des.latency_p99,
+                       raw=des)
+
+    def execute(self, *, duration: float = 1.0, batch: int = 256,
+                jumbo: bool = True, queue_cap: int = 32,
+                partition: Optional[Dict[str, str]] = None,
+                parallelism: Optional[Dict[str, int]] = None,
+                max_threads: Optional[int] = None, seed: int = 0) -> Metrics:
+        """Run the plan on the real threaded runtime of this host.
+
+        The plan's replication levels target the *modelled* machine; by
+        default they are scaled down proportionally to ``max_threads``
+        (2x host cores) so a 144-thread Server-A plan deploys sanely on a
+        laptop.  Pass ``parallelism`` to override entirely.
+        """
+        from .runtime import run_app
+        if self.job.app is None:
+            raise TopologyError(
+                f"job {self.job.name!r} is planning-only (no kernels); "
+                "build the topology with kernels and sources to execute")
+        if parallelism is None:
+            budget = max_threads if max_threads is not None else \
+                2 * (os.cpu_count() or 2)
+            parallelism = _scale_parallelism(self.parallelism, budget)
+        rt = run_app(self.job.app, parallelism=parallelism, batch=batch,
+                     duration=duration, jumbo=jumbo, queue_cap=queue_cap,
+                     partition=partition, seed=seed)
+        return Metrics("runtime", rt.throughput, rt.latency_p50,
+                       rt.latency_p99, raw=rt)
+
+
+def _scale_parallelism(parallelism: Dict[str, int],
+                       budget: int) -> Dict[str, int]:
+    """Proportionally shrink replication to fit ``budget`` threads (>=1 per
+    operator)."""
+    total = sum(parallelism.values())
+    if total <= budget:
+        return dict(parallelism)
+    scale = budget / total
+    return {op: max(1, int(k * scale)) for op, k in parallelism.items()}

@@ -1,8 +1,11 @@
-"""The four benchmark applications (paper §6.1, Appendix B).
+"""The four benchmark applications (paper §6.1, Appendix B), declared through
+the :class:`repro.streaming.api.Topology` builder.
 
-Each application is a :class:`repro.core.LogicalGraph` with profiled operator
-specifications plus, for the real threaded runtime, a callable per operator
-operating on *jumbo batches* (arrays of tuples).
+Each factory returns a built :class:`StreamingApp` — logical graph, compute
+kernels (operating on *jumbo batches*, arrays of tuples), spout sources and
+partition declarations all come from one fluent declaration, so the same
+object feeds planning (``Job(...).plan``), the simulators, and the real
+threaded runtime.
 
 Profile provenance: the per-tuple execution times anchor on the paper's
 measurements where given — WC Splitter 1612.8 ns and Counter 612.3 ns local
@@ -13,21 +16,12 @@ plausible values documented here as assumptions.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
-
 import numpy as np
 
-from repro.core import LogicalGraph, OperatorSpec
+from .api import StreamingApp, Topology
 
-
-@dataclasses.dataclass
-class StreamingApp:
-    name: str
-    graph: LogicalGraph
-    # runtime compute kernels: name -> fn(batch, state) -> list of out batches
-    kernels: Dict[str, Callable]
-    make_source: Callable[[int, int], np.ndarray]   # (batch, seed) -> batch
+__all__ = ["ALL_APPS", "StreamingApp", "word_count", "fraud_detection",
+           "spike_detection", "linear_road"]
 
 
 # ---------------------------------------------------------------------------
@@ -39,20 +33,10 @@ WC_WORDS_PER_SENTENCE = 10     # "a sentence with ten random words"
 
 
 def word_count() -> StreamingApp:
-    ops = {
-        "spout": OperatorSpec("spout", 500.0, tuple_bytes=120.0,
-                              mem_bytes=120.0, is_spout=True),
-        "parser": OperatorSpec("parser", 350.0, tuple_bytes=120.0,
-                               mem_bytes=120.0, selectivity=1.0),
-        "splitter": OperatorSpec("splitter", 1612.8, tuple_bytes=120.0,
-                                 mem_bytes=240.0, selectivity=10.0),
-        "counter": OperatorSpec("counter", 612.3, tuple_bytes=32.0,
-                                mem_bytes=96.0, selectivity=1.0),
-        "sink": OperatorSpec("sink", 100.0, tuple_bytes=32.0,
-                             mem_bytes=32.0),
-    }
-    edges = [("spout", "parser"), ("parser", "splitter"),
-             ("splitter", "counter"), ("counter", "sink")]
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, WC_VOCAB,
+                            size=(batch, WC_WORDS_PER_SENTENCE))
 
     def k_parser(batch, state):
         return [batch]                       # selectivity one; drops invalid
@@ -69,16 +53,16 @@ def word_count() -> StreamingApp:
         state["seen"] = state.get("seen", 0) + len(batch)
         return []
 
-    def source(batch, seed):
-        rng = np.random.default_rng(seed)
-        return rng.integers(0, WC_VOCAB,
-                            size=(batch, WC_WORDS_PER_SENTENCE))
-
-    return StreamingApp(
-        "wc", LogicalGraph(ops, edges),
-        {"parser": k_parser, "splitter": k_splitter, "counter": k_counter,
-         "sink": k_sink},
-        source)
+    return (
+        Topology("wc")
+        .spout("spout", source, exec_ns=500.0, tuple_bytes=120.0)
+        .op("parser", k_parser, exec_ns=350.0, tuple_bytes=120.0)
+        .op("splitter", k_splitter, exec_ns=1612.8, tuple_bytes=120.0,
+            mem_bytes=240.0, selectivity=10.0)
+        .op("counter", k_counter, exec_ns=612.3, tuple_bytes=32.0,
+            mem_bytes=96.0, partition="key")
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=32.0)
+        .build())
 
 
 # ---------------------------------------------------------------------------
@@ -89,19 +73,11 @@ FD_FEATURES = 16
 
 
 def fraud_detection() -> StreamingApp:
-    ops = {
-        "spout": OperatorSpec("spout", 400.0, tuple_bytes=160.0,
-                              mem_bytes=160.0, is_spout=True),
-        "parser": OperatorSpec("parser", 300.0, tuple_bytes=160.0,
-                               mem_bytes=160.0),
-        "predictor": OperatorSpec("predictor", 2400.0, tuple_bytes=160.0,
-                                  mem_bytes=480.0),
-        "sink": OperatorSpec("sink", 100.0, tuple_bytes=16.0,
-                             mem_bytes=16.0),
-    }
-    edges = [("spout", "parser"), ("parser", "predictor"),
-             ("predictor", "sink")]
     weights = np.linspace(-1.0, 1.0, FD_FEATURES)
+
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        return rng.normal(size=(batch, FD_FEATURES))
 
     def k_parser(batch, state):
         return [batch]
@@ -117,14 +93,14 @@ def fraud_detection() -> StreamingApp:
         state["flagged"] = state.get("flagged", 0) + int(batch.sum())
         return []
 
-    def source(batch, seed):
-        rng = np.random.default_rng(seed)
-        return rng.normal(size=(batch, FD_FEATURES))
-
-    return StreamingApp(
-        "fd", LogicalGraph(ops, edges),
-        {"parser": k_parser, "predictor": k_predictor, "sink": k_sink},
-        source)
+    return (
+        Topology("fd")
+        .spout("spout", source, exec_ns=400.0, tuple_bytes=160.0)
+        .op("parser", k_parser, exec_ns=300.0, tuple_bytes=160.0)
+        .op("predictor", k_predictor, exec_ns=2400.0, tuple_bytes=160.0,
+            mem_bytes=480.0)
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=16.0)
+        .build())
 
 
 # ---------------------------------------------------------------------------
@@ -135,20 +111,9 @@ SD_WINDOW = 16
 
 
 def spike_detection() -> StreamingApp:
-    ops = {
-        "spout": OperatorSpec("spout", 400.0, tuple_bytes=64.0,
-                              mem_bytes=64.0, is_spout=True),
-        "parser": OperatorSpec("parser", 250.0, tuple_bytes=64.0,
-                               mem_bytes=64.0),
-        "moving_avg": OperatorSpec("moving_avg", 900.0, tuple_bytes=64.0,
-                                   mem_bytes=192.0),
-        "spike": OperatorSpec("spike", 350.0, tuple_bytes=64.0,
-                              mem_bytes=64.0),
-        "sink": OperatorSpec("sink", 100.0, tuple_bytes=16.0,
-                             mem_bytes=16.0),
-    }
-    edges = [("spout", "parser"), ("parser", "moving_avg"),
-             ("moving_avg", "spike"), ("spike", "sink")]
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        return rng.normal(loc=10.0, scale=2.0, size=batch)
 
     def k_parser(batch, state):
         return [batch]
@@ -170,15 +135,15 @@ def spike_detection() -> StreamingApp:
         state["spikes"] = state.get("spikes", 0) + int(batch.sum())
         return []
 
-    def source(batch, seed):
-        rng = np.random.default_rng(seed)
-        return rng.normal(loc=10.0, scale=2.0, size=batch)
-
-    return StreamingApp(
-        "sd", LogicalGraph(ops, edges),
-        {"parser": k_parser, "moving_avg": k_moving_avg, "spike": k_spike,
-         "sink": k_sink},
-        source)
+    return (
+        Topology("sd")
+        .spout("spout", source, exec_ns=400.0, tuple_bytes=64.0)
+        .op("parser", k_parser, exec_ns=250.0, tuple_bytes=64.0)
+        .op("moving_avg", k_moving_avg, exec_ns=900.0, tuple_bytes=64.0,
+            mem_bytes=192.0)
+        .op("spike", k_spike, exec_ns=350.0, tuple_bytes=64.0)
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=16.0)
+        .build())
 
 
 # ---------------------------------------------------------------------------
@@ -193,33 +158,11 @@ def spike_detection() -> StreamingApp:
 
 
 def linear_road() -> StreamingApp:
-    ops = {
-        "spout": OperatorSpec("spout", 450.0, tuple_bytes=96.0,
-                              mem_bytes=96.0, is_spout=True),
-        "dispatcher": OperatorSpec("dispatcher", 400.0, tuple_bytes=96.0,
-                                   mem_bytes=96.0),
-        "avg_speed": OperatorSpec("avg_speed", 1100.0, tuple_bytes=96.0,
-                                  mem_bytes=288.0),
-        "count_vehicles": OperatorSpec("count_vehicles", 800.0,
-                                       tuple_bytes=96.0, mem_bytes=192.0),
-        "accident": OperatorSpec("accident", 700.0, tuple_bytes=96.0,
-                                 mem_bytes=96.0),
-        "toll": OperatorSpec("toll", 950.0, tuple_bytes=48.0,
-                             mem_bytes=144.0),
-        "notification": OperatorSpec("notification", 300.0, tuple_bytes=48.0,
-                                     mem_bytes=48.0),
-        "sink": OperatorSpec("sink", 100.0, tuple_bytes=16.0,
-                             mem_bytes=16.0),
-    }
-    edges = [("spout", "dispatcher"),
-             ("dispatcher", "avg_speed"), ("dispatcher", "count_vehicles"),
-             ("dispatcher", "accident"),
-             ("avg_speed", "toll"), ("count_vehicles", "toll"),
-             ("accident", "notification"),
-             ("toll", "sink"), ("notification", "sink")]
-    esel = {("dispatcher", "avg_speed"): 0.9,
-            ("dispatcher", "count_vehicles"): 0.9,
-            ("dispatcher", "accident"): 0.1}
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        seg = rng.integers(0, 64, size=batch).astype(np.float64)
+        speed = rng.uniform(0.0, 100.0, size=batch)
+        return np.stack([seg, speed], axis=1)
 
     def k_dispatcher(batch, state):
         speed = batch[:, 1]
@@ -263,18 +206,23 @@ def linear_road() -> StreamingApp:
         state["seen"] = state.get("seen", 0) + len(batch)
         return []
 
-    def source(batch, seed):
-        rng = np.random.default_rng(seed)
-        seg = rng.integers(0, 64, size=batch).astype(np.float64)
-        speed = rng.uniform(0.0, 100.0, size=batch)
-        return np.stack([seg, speed], axis=1)
-
-    return StreamingApp(
-        "lr", LogicalGraph(ops, edges, esel),
-        {"dispatcher": k_dispatcher, "avg_speed": k_avg_speed,
-         "count_vehicles": k_count_vehicles, "accident": k_accident,
-         "toll": k_toll, "notification": k_notification, "sink": k_sink},
-        source)
+    return (
+        Topology("lr")
+        .spout("spout", source, exec_ns=450.0, tuple_bytes=96.0)
+        .op("dispatcher", k_dispatcher, exec_ns=400.0, tuple_bytes=96.0)
+        .op("avg_speed", k_avg_speed, inputs={"dispatcher": 0.9},
+            exec_ns=1100.0, tuple_bytes=96.0, mem_bytes=288.0)
+        .op("count_vehicles", k_count_vehicles, inputs={"dispatcher": 0.9},
+            exec_ns=800.0, tuple_bytes=96.0, mem_bytes=192.0)
+        .op("accident", k_accident, inputs={"dispatcher": 0.1},
+            exec_ns=700.0, tuple_bytes=96.0)
+        .op("toll", k_toll, inputs=["avg_speed", "count_vehicles"],
+            exec_ns=950.0, tuple_bytes=48.0, mem_bytes=144.0)
+        .op("notification", k_notification, inputs=["accident"],
+            exec_ns=300.0, tuple_bytes=48.0)
+        .sink("sink", k_sink, inputs=["toll", "notification"],
+              exec_ns=100.0, tuple_bytes=16.0)
+        .build())
 
 
 ALL_APPS = {"wc": word_count, "fd": fraud_detection, "sd": spike_detection,

@@ -54,7 +54,7 @@ class _Task(threading.Thread):
         self.expected_poisons = expected_poisons
         self.lat_sink = lat_sink
         self._buf: Dict[int, List[Tuple[np.ndarray, float]]] = {}
-        self._rr = 0
+        self._rr: Dict[int, int] = {}       # independent counter per stream
 
     def _flush(self, stream, consumer_idx, arr, t0):
         q, _, _, _ = self.outs[stream][consumer_idx]
@@ -75,8 +75,9 @@ class _Task(threading.Thread):
                 if len(part):
                     self._emit_to(stream, i, part, t0)
         else:                        # shuffle: whole jumbo round-robin
-            self._emit_to(stream, self._rr % k, arr, t0)
-            self._rr += 1
+            rr = self._rr.get(stream, 0)
+            self._emit_to(stream, rr % k, arr, t0)
+            self._rr[stream] = rr + 1
 
     def _emit_to(self, stream, i, arr, t0):
         if not self.jumbo:
@@ -122,13 +123,23 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             batch: int = 256, duration: float = 1.0, jumbo: bool = True,
             queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
             seed: int = 0) -> RuntimeResult:
-    """Execute ``app`` for ``duration`` seconds and return measured stats."""
+    """Execute ``app`` for ``duration`` seconds and return measured stats.
+
+    Partition strategies come from the app's Topology declaration
+    (``app.partition``); the ``partition`` argument overrides per operator.
+    """
     lg = app.graph
     parallelism = dict(parallelism or {})
     for name in lg.operators:
         parallelism.setdefault(name, 1)
-    partition = dict(partition or {})
-    partition.setdefault("counter", "key")      # WC keyed counting
+    strategies = dict(getattr(app, "partition", None) or {})
+    strategies.update(partition or {})
+    partition = strategies
+    for op_name, strat in partition.items():
+        if strat not in ("shuffle", "key"):
+            raise ValueError(f"operator {op_name!r}: unknown partition "
+                             f"strategy {strat!r} (choose 'shuffle' or "
+                             "'key')")
 
     # one input queue per non-spout replica
     in_qs: Dict[Tuple[str, int], queue.Queue] = {}
@@ -172,27 +183,48 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         for i in range(parallelism[name]):
 
             def spout_loop(name=name, cons_ops=cons_ops, i=i):
-                rr = 0
+                source = app.source_for(name) if hasattr(app, "source_for") \
+                    else app.make_source
+                # independent round-robin counter per consumer op: a shared
+                # counter advanced once per loop sends every consumer the
+                # same index stream, skewing multi-consumer topologies
+                # (e.g. Linear Road's dispatcher fan-out)
+                rr = {cop: 0 for cop in cons_ops}
                 b = 0
                 while not stop.is_set():
-                    arr = app.make_source(batch, seed + 7919 * i + b)
+                    arr = source(batch, seed + 7919 * i + b)
                     b += 1
                     t0 = time.perf_counter()
-                    delivered = False
+                    # tuples that entered the dataflow this batch: stop can
+                    # interrupt a keyed delivery between key partitions, so
+                    # count what was actually enqueued (max over consumers —
+                    # fan-out duplicates tuples, it does not multiply them)
+                    batch_delivered = 0
                     for cop in cons_ops:
                         k = parallelism[cop]
-                        q = in_qs[(cop, rr % k)]
-                        while not stop.is_set():          # backpressure
-                            try:
-                                q.put((arr, t0), timeout=0.02)
-                                delivered = True
-                                break
-                            except queue.Full:
-                                continue
-                    if delivered:
+                        if partition.get(cop, "shuffle") == "key":
+                            keys = (arr if arr.ndim == 1 else
+                                    arr[:, 0]).astype(np.int64)
+                            targets = [(j, arr[keys % k == j])
+                                       for j in range(k)]
+                            targets = [(j, p) for j, p in targets if len(p)]
+                        else:
+                            targets = [(rr[cop] % k, arr)]
+                            rr[cop] += 1
+                        cop_delivered = 0
+                        for j, part in targets:
+                            q = in_qs[(cop, j)]
+                            while not stop.is_set():      # backpressure
+                                try:
+                                    q.put((part, t0), timeout=0.02)
+                                    cop_delivered += len(part)
+                                    break
+                                except queue.Full:
+                                    continue
+                        batch_delivered = max(batch_delivered, cop_delivered)
+                    if batch_delivered:
                         with count_lock:
-                            spout_counts[0] += len(arr)
-                    rr += 1
+                            spout_counts[0] += batch_delivered
                 for cop in cons_ops:
                     for j in range(parallelism[cop]):
                         in_qs[(cop, j)].put(_POISON)

@@ -1,0 +1,300 @@
+"""Unified Topology/Job/Plan API: builder validation, partition round-trip,
+estimate-vs-simulate agreement (Table 4 protocol), app migration parity."""
+import numpy as np
+import pytest
+
+from repro.core import LogicalGraph, server_a
+from repro.streaming.api import (Job, Metrics, Plan, StreamingApp, Topology,
+                                 TopologyError)
+from repro.streaming.apps import ALL_APPS, word_count
+from repro.streaming.runtime import run_app
+
+
+def _src(batch, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 64, size=batch)
+
+
+def _ident(batch, state):
+    return [batch]
+
+
+def _sink(batch, state):
+    state["seen"] = state.get("seen", 0) + len(batch)
+    return []
+
+
+# ---------------------------------------------------------------------------
+# builder validation
+# ---------------------------------------------------------------------------
+
+def test_duplicate_operator_rejected_at_declaration():
+    t = Topology("t").spout("s", _src, exec_ns=100.0)
+    with pytest.raises(TopologyError, match="duplicate operator 's'"):
+        t.op("s", _ident, exec_ns=100.0)
+
+
+def test_unknown_input_endpoint_rejected_at_build():
+    t = (Topology("t").spout("s", _src, exec_ns=100.0)
+         .op("a", _ident, inputs="ghost", exec_ns=100.0))
+    with pytest.raises(TopologyError, match="unknown operator 'ghost'"):
+        t.build()
+
+
+def test_first_op_without_spout_rejected():
+    with pytest.raises(TopologyError, match="no inputs and no upstream"):
+        Topology("t").op("a", _ident, exec_ns=100.0)
+
+
+def test_empty_topology_rejected():
+    with pytest.raises(TopologyError, match="declares no operators"):
+        Topology("t").build_logical()
+
+
+def test_no_spout_rejected():
+    t = (Topology("t").op("a", _ident, inputs="b", exec_ns=100.0)
+         .op("b", _ident, inputs="a", exec_ns=100.0))
+    with pytest.raises(TopologyError, match="has no spout"):
+        t.build_logical()
+
+
+def test_cycle_rejected():
+    t = (Topology("t").spout("s", _src, exec_ns=100.0)
+         .op("a", _ident, inputs=["s", "b"], exec_ns=100.0)
+         .op("b", _ident, inputs="a", exec_ns=100.0))
+    with pytest.raises(TopologyError, match="cycle"):
+        t.build_logical()
+
+
+def test_unreachable_island_rejected_as_cycle():
+    t = (Topology("t").spout("s", _src, exec_ns=100.0)
+         .op("a", _ident, inputs="s", exec_ns=100.0)
+         .op("island", _ident, inputs="island2", exec_ns=100.0)
+         .op("island2", _ident, inputs="island", exec_ns=100.0))
+    with pytest.raises(TopologyError, match="cycle"):
+        t.build_logical()
+
+
+def test_bad_partition_strategy_rejected():
+    t = Topology("t").spout("s", _src, exec_ns=100.0)
+    with pytest.raises(TopologyError, match="unknown partition strategy"):
+        t.op("a", _ident, exec_ns=100.0, partition="range")
+
+
+def test_missing_kernel_rejected_for_build_but_ok_for_logical():
+    t = (Topology("t").spout("s", _src, exec_ns=100.0)
+         .op("a", exec_ns=100.0))
+    graph = t.build_logical()                # planning-only is fine
+    assert isinstance(graph, LogicalGraph)
+    with pytest.raises(TopologyError, match="without kernels"):
+        t.build()
+
+
+def test_missing_source_rejected_for_build():
+    t = (Topology("t").spout("s", exec_ns=100.0)
+         .op("a", _ident, exec_ns=100.0))
+    with pytest.raises(TopologyError, match="without source"):
+        t.build()
+
+
+def test_edge_selectivity_mapping_round_trips():
+    t = (Topology("t").spout("s", _src, exec_ns=100.0)
+         .op("a", _ident, inputs={"s": 0.25}, exec_ns=100.0))
+    g = t.build_logical()
+    assert g.sel("s", "a") == pytest.approx(0.25)
+
+
+def test_builder_matches_hand_assembled_graph():
+    """The migrated WC app must equal the seed's hand-assembled topology."""
+    app = word_count()
+    g = app.graph
+    assert g.topo_order() == ["spout", "parser", "splitter", "counter",
+                              "sink"]
+    assert g.operators["splitter"].exec_ns == pytest.approx(1612.8)
+    assert g.operators["splitter"].selectivity == 10.0
+    assert g.operators["counter"].exec_ns == pytest.approx(612.3)
+    assert app.partition == {"counter": "key"}
+    assert set(g.edges) == {("spout", "parser"), ("parser", "splitter"),
+                            ("splitter", "counter"), ("counter", "sink")}
+
+
+# ---------------------------------------------------------------------------
+# partition declarations flow into the runtime
+# ---------------------------------------------------------------------------
+
+def test_key_partition_round_trips_through_run_app():
+    def k_count(batch, state):
+        counts = state.setdefault("counts", np.zeros(64, np.int64))
+        np.add.at(counts, batch, 1)
+        return [counts[batch]]
+
+    app = (Topology("keyed")
+           .spout("s", _src, exec_ns=200.0)
+           .op("count", k_count, exec_ns=200.0, partition="key")
+           .sink("sink", _sink)
+           .build())
+    res = run_app(app, {"count": 2}, batch=64, duration=0.3)
+    c0 = res.states["count"][0].get("counts", np.zeros(64))
+    c1 = res.states["count"][1].get("counts", np.zeros(64))
+    assert res.spout_tuples > 0
+    # exact conservation: every tuple the spout delivered was counted, even
+    # when stop interrupts a keyed delivery between key partitions
+    assert int(c0.sum() + c1.sum()) == res.spout_tuples
+    assert np.logical_and(c0 > 0, c1 > 0).sum() == 0   # disjoint key ranges
+    assert c0.sum() > 0 and c1.sum() > 0
+
+
+def test_spout_round_robin_independent_per_consumer():
+    """Regression: the spout kept ONE rr counter advanced once per batch and
+    indexed every consumer op with it; replicas must be fed independently
+    per consumer op (multi-consumer fan-out, e.g. LR's dispatcher)."""
+    def k_count_batches(batch, state):
+        state["n"] = state.get("n", 0) + len(batch)
+        return []
+
+    app = (Topology("fanout")
+           .spout("s", _src, exec_ns=100.0)
+           .op("a", k_count_batches, inputs="s", exec_ns=100.0)
+           .op("b", k_count_batches, inputs="s", exec_ns=100.0)
+           .build())
+    res = run_app(app, {"a": 2, "b": 3}, batch=64, duration=0.3)
+    assert res.spout_tuples > 0
+    for opname in ("a", "b"):
+        counts = [st.get("n", 0) for st in res.states[opname]]
+        assert all(c > 0 for c in counts), (opname, counts)
+        # round-robin keeps replicas of each consumer near-evenly fed
+        assert max(counts) <= 2.5 * min(counts), (opname, counts)
+
+
+def test_run_app_rejects_unknown_partition_override():
+    with pytest.raises(ValueError, match="unknown partition strategy"):
+        run_app(word_count(), duration=0.05,
+                partition={"counter": "bogus"})
+
+
+def test_run_app_partition_arg_overrides_declaration():
+    app = word_count()                       # declares counter: key
+    res = run_app(app, {"counter": 2}, batch=64, duration=0.25,
+                  partition={"counter": "shuffle"})
+    c0 = res.states["counter"][0].get("counts", np.zeros(4096))
+    c1 = res.states["counter"][1].get("counts", np.zeros(4096))
+    # shuffle spreads every key over both replicas -> overlap appears
+    assert np.logical_and(c0 > 0, c1 > 0).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Job / Plan: one object through estimate -> simulate -> execute
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def wc_plan():
+    return Job(word_count()).plan(server_a(), optimizer="rlas",
+                                  compress_ratio=5, bestfit=True,
+                                  max_nodes=5000)
+
+
+def test_plan_estimate_and_simulate_agree_table4(wc_plan):
+    est = wc_plan.estimate()
+    des = wc_plan.simulate(backend="des", horizon=0.008)
+    assert est.feasible
+    assert est.throughput == pytest.approx(wc_plan.R)
+    # Table 4 tolerance band (paper rel. errors 0.02-0.14; DES adds
+    # batching/queueing noise)
+    assert des.throughput == pytest.approx(est.throughput, rel=0.25)
+    assert des.latency_p99 >= des.latency_p50 >= 0.0
+
+
+def test_plan_fluid_backend(wc_plan):
+    fl = wc_plan.simulate(backend="fluid")
+    assert fl.source == "fluid"
+    assert fl.throughput == pytest.approx(wc_plan.R, rel=0.1)
+
+
+def test_plan_execute_scales_to_host(wc_plan):
+    rt = wc_plan.execute(duration=0.25, batch=128, max_threads=6)
+    assert rt.source == "runtime"
+    assert rt.throughput > 0
+    total = sum(int(st.get("counts", np.zeros(1)).sum())
+                for st in rt.raw.states["counter"])
+    assert total == 10 * rt.raw.spout_tuples
+
+
+def test_plan_optimizer_variants_produce_valid_plans():
+    job = Job(word_count())
+    m = server_a()
+    for opt in ["ff", "rr", "bnb", "random"]:
+        plan = job.plan(m, optimizer=opt, max_nodes=500) if opt == "bnb" \
+            else job.plan(m, optimizer=opt)
+        assert len(plan.placement) == plan.graph.n_units, opt
+        assert plan.R >= 0.0, opt
+        assert isinstance(plan.estimate(), Metrics), opt
+
+
+def test_manual_plan_requires_full_placement():
+    job = Job(word_count())
+    with pytest.raises(ValueError, match="manual placement"):
+        job.plan(server_a(), optimizer="manual", placement=[0, 0])
+    plan = job.plan(server_a(), optimizer="manual",
+                    placement=[0] * len(word_count().graph.operators))
+    assert plan.optimizer == "manual"
+    assert plan.feasible
+
+
+def test_unknown_optimizer_rejected():
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        Job(word_count()).plan(server_a(), optimizer="simulated-annealing")
+
+
+def test_ff_rr_reject_stray_kwargs():
+    """ff/rr take no search options — silently dropping them would let a
+    benchmark believe e.g. tf_mode applied when it did not."""
+    for opt in ("ff", "rr"):
+        with pytest.raises(TypeError, match="unexpected arguments"):
+            Job(word_count()).plan(server_a(), optimizer=opt,
+                                   tf_mode="worst")
+    # 'random' draws its own replication; a fixed-parallelism request must
+    # be rejected, not silently discarded
+    with pytest.raises(TypeError, match="random"):
+        Job(word_count()).plan(server_a(), optimizer="random",
+                               parallelism={"splitter": 4})
+
+
+def test_planning_only_job_cannot_execute():
+    topo = (Topology("plan-only").spout("s", exec_ns=100.0)
+            .op("a", exec_ns=100.0))
+    job = Job(topo)
+    plan = job.plan(server_a(), optimizer="ff")
+    assert plan.estimate().throughput >= 0.0
+    with pytest.raises(TopologyError, match="planning-only"):
+        plan.execute(duration=0.05)
+
+
+# ---------------------------------------------------------------------------
+# all four migrated apps still behave exactly
+# ---------------------------------------------------------------------------
+
+def test_all_apps_build_through_topology():
+    for name, make in ALL_APPS.items():
+        app = make()
+        assert isinstance(app, StreamingApp)
+        assert app.graph.spouts() and app.graph.sinks(), name
+        for op in app.graph.operators:
+            if not app.graph.operators[op].is_spout:
+                assert op in app.kernels, (name, op)
+
+
+@pytest.mark.parametrize("name", list(ALL_APPS))
+def test_migrated_apps_execute_and_conserve_counts(name):
+    plan = Job(ALL_APPS[name]()).plan(server_a(), optimizer="ff")
+    rt = plan.execute(duration=0.3, batch=128)
+    assert rt.throughput > 0, name
+    rt_res = rt.raw
+    seen = sum(st.get("seen", 0) for st in rt_res.states["sink"])
+    assert seen == rt_res.sink_tuples
+    if name == "wc":
+        counted = sum(int(st.get("counts", np.zeros(1)).sum())
+                      for st in rt_res.states["counter"])
+        assert counted == 10 * rt_res.spout_tuples      # exact word counts
+    if name == "fd":
+        st = rt_res.states["sink"][0]
+        assert 0 <= st.get("flagged", 0) <= st.get("seen", 1)

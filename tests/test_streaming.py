@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import ExecutionGraph, evaluate, rlas_optimize, server_a
+from repro.core import ExecutionGraph, evaluate, server_a
+from repro.streaming import Job
 from repro.streaming.apps import (ALL_APPS, fraud_detection, linear_road,
                                   spike_detection, word_count)
 from repro.streaming.runtime import run_app
@@ -27,11 +28,11 @@ def test_all_apps_build_valid_dags():
 def test_wc_model_throughput_order_of_magnitude():
     """On Server A the optimized WC plan should reach tens of millions of
     words/sec (paper Table 4: 96.4M measured, 104.8M estimated)."""
-    app = word_count()
-    res = rlas_optimize(app.graph, server_a(), input_rate=None,
-                        compress_ratio=5, bestfit=True, max_nodes=5000)
-    assert res.placement.feasible
-    assert 2e7 <= res.R <= 3e8
+    plan = Job(word_count()).plan(server_a(), optimizer="rlas",
+                                  compress_ratio=5, bestfit=True,
+                                  max_nodes=5000)
+    assert plan.feasible
+    assert 2e7 <= plan.R <= 3e8
 
 
 def test_fluid_matches_model_when_uncontended(wc):
