@@ -1,0 +1,122 @@
+"""Runtime routing benchmark: seed per-mask keyed split vs the vectorized
+argsort/bincount path (ISSUE 2 tentpole), micro and end-to-end.
+
+Micro rows time ``Route.split`` alone (us/call) over batch-size x fan-out
+grids; end-to-end rows run WC and LR on the real threaded runtime in both
+modes and report sink throughput and p99 latency.  Results append to the
+CSV row protocol (``name,us_per_call,derived``) and are recorded in
+``BENCH_streaming.json`` for the perf trajectory.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+import numpy as np
+
+try:                                       # python -m benchmarks.bench_runtime
+    from .common import emit
+except ImportError:                        # python benchmarks/bench_runtime.py
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import emit
+
+from repro.streaming.apps import linear_road, word_count  # noqa: E402
+from repro.streaming.routing import (RouteSpec, split_by_key,  # noqa: E402
+                                     split_by_key_masks)
+from repro.streaming.runtime import run_app  # noqa: E402
+
+
+def bench_split(rows: int, k: int, iters: int) -> dict:
+    """us/call for one keyed split of ``rows`` tuples over ``k`` replicas."""
+    rng = np.random.default_rng(rows + k)
+    arr = rng.integers(0, 4096, size=rows).astype(np.int64)
+    spec = RouteSpec("u", "v", 0, "key")
+    out = {}
+    for label, fn in [("masks", split_by_key_masks),
+                      ("vectorized", split_by_key)]:
+        keys = spec.keys(arr)
+        fn(arr, keys, k)                       # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(arr, spec.keys(arr), k)
+        out[label] = (time.perf_counter() - t0) / iters * 1e6
+    out["speedup"] = out["masks"] / out["vectorized"]
+    emit(f"split_rows{rows}_k{k}", out["vectorized"],
+         f"{out['speedup']:.2f}x_vs_masks")
+    return {"rows": rows, "k": k, **{m: round(v, 3)
+                                     for m, v in out.items()}}
+
+
+def bench_app(name: str, make, parallelism: dict, batch: int,
+              duration: float, repeat: int) -> dict:
+    """Median end-to-end throughput/p99 in both routing modes."""
+    out = {"batch": batch, "parallelism": parallelism}
+    run_app(make(), parallelism, batch=batch, duration=min(duration, 0.2))
+    for mode, vectorized in [("masks", False), ("vectorized", True)]:
+        # a throwaway warm run above stabilises thread startup; repeat
+        # medians absorb scheduler noise
+        thr, p99 = [], []
+        for r in range(repeat):
+            res = run_app(make(), parallelism, batch=batch,
+                          duration=duration, seed=100 + r,
+                          vectorized=vectorized)
+            thr.append(res.throughput)
+            p99.append(res.latency_p99)
+        out[mode] = {"throughput": round(statistics.median(thr), 1),
+                     "latency_p99": round(statistics.median(p99), 6)}
+        emit(f"runtime_{name}_{mode}_b{batch}",
+             duration * 1e6, f"{out[mode]['throughput']:.0f}tps")
+    out["speedup"] = round(out["vectorized"]["throughput"] /
+                           max(out["masks"]["throughput"], 1e-9), 3)
+    emit(f"runtime_{name}_speedup_b{batch}", 0.0, f"{out['speedup']:.3f}x")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny durations for CI")
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--repeat", type=int, default=None)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_streaming.json"))
+    args = ap.parse_args(argv)
+    duration = args.duration or (0.1 if args.smoke else 0.8)
+    repeat = args.repeat or (1 if args.smoke else 7)
+    iters = 50 if args.smoke else 400
+
+    micro = [bench_split(rows, k, iters)
+             for rows in (256, 2560, 10240) for k in (2, 4, 8)]
+    apps = {
+        # WC's keyed edge carries batch x selectivity-10 words; batch 256
+        # is the acceptance configuration (jumbo batches of 2560 words)
+        "wc": bench_app("wc", word_count,
+                        {"splitter": 2, "counter": 4}, 256,
+                        duration, repeat),
+        "lr": bench_app("lr", linear_road,
+                        {"dispatcher": 2, "toll_history": 4}, 1024,
+                        duration, repeat),
+    }
+    report = {
+        "meta": {"cpus": os.cpu_count(), "duration_s": duration,
+                 "repeat": repeat, "smoke": bool(args.smoke)},
+        "micro": micro,
+        "apps": apps,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(args.out)}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

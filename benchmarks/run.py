@@ -32,6 +32,8 @@ def main() -> None:
     if not args.quick:
         bench_figures.fig14_monte_carlo()
         bench_figures.fig16_factor_analysis()
+        from . import bench_runtime
+        bench_runtime.main([])
     roofline.main(args.dryrun_jsonl)
     print(f"total,{(time.time() - t0) * 1e6:.0f},done")
 

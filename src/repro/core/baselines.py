@@ -101,6 +101,7 @@ def random_plan(logical: LogicalGraph, machine: MachineSpec,
                 input_rate: Optional[float] = None,
                 max_threads: Optional[int] = None,
                 compress_ratio: int = 1,
+                routes=None,
                 ) -> Tuple[ExecutionGraph, List[int], "PlanEval"]:
     """One Monte-Carlo sample: random replication until the thread budget is
     hit, then uniform random placement (paper Fig. 14 protocol).  Returns the
@@ -114,7 +115,8 @@ def random_plan(logical: LogicalGraph, machine: MachineSpec,
         parallelism[op] += 1
         if rng.random() < 0.15:          # random stopping point
             break
-    graph = ExecutionGraph(logical, parallelism, compress_ratio)
+    graph = ExecutionGraph(logical, parallelism, compress_ratio,
+                           routes=routes)
     placement = [int(rng.integers(machine.n_sockets))
                  for _ in range(graph.n_units)]
     ev = evaluate(graph, machine, placement, input_rate)

@@ -119,14 +119,23 @@ class ExecutionGraph:
     ``parallelism[name]`` is the replication level of each logical operator.
     ``compress_ratio`` fuses up to that many replicas into one unit
     (heuristic 3); the last unit of an operator may be smaller.
+
+    ``routes`` optionally supplies the compiled routing table
+    (:class:`repro.streaming.routing.RoutingTable`, duck-typed here to keep
+    the planning core standalone): when given, replica-level edge weights
+    come from ``routes.unit_weight`` so the planner models exactly the
+    partition strategy and per-stream selectivity the runtime and the DES
+    execute.  Without it, edges fall back to the logical graph's
+    selectivities under shuffle semantics.
     """
 
     def __init__(self, logical: LogicalGraph, parallelism: Dict[str, int],
-                 compress_ratio: int = 1):
+                 compress_ratio: int = 1, routes=None):
         assert compress_ratio >= 1
         self.logical = logical
         self.parallelism = dict(parallelism)
         self.compress_ratio = compress_ratio
+        self.routes = routes
         self.replicas: List[Replica] = []
         self._by_op: Dict[str, List[int]] = {}
         for name in logical.topo_order():
@@ -153,7 +162,11 @@ class ExecutionGraph:
             sel = logical.sel(pu, cv)
             for ui in self._by_op[pu]:
                 for vi in self._by_op[cv]:
-                    w = sel * self.replicas[vi].group / k_c
+                    if routes is not None:
+                        w = routes.unit_weight(pu, cv,
+                                               self.replicas[vi].group, k_c)
+                    else:
+                        w = sel * self.replicas[vi].group / k_c
                     self.edges.append((ui, vi, w))
                     self.in_edges[vi].append((ui, w))
                     self.out_edges[ui].append((vi, w))

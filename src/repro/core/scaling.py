@@ -42,12 +42,15 @@ def rlas_optimize(logical: LogicalGraph, machine: MachineSpec,
                   max_iters: int = 200,
                   initial_parallelism: Optional[Dict[str, int]] = None,
                   bottleneck_rule: str = "reverse_topo",
+                  routes=None,
                   ) -> ScalingResult:
     """RLAS: jointly optimize replication and placement (Alg. 1 + Alg. 2).
 
     ``tf_mode`` selects the capability assumption used *during optimization*
     ("relative" = RLAS, "worst" = RLAS_fix(L), "zero" = RLAS_fix(U)); results
-    are always reported under the true relative model.
+    are always reported under the true relative model.  ``routes`` is the
+    compiled routing table forwarded to :class:`ExecutionGraph` so scaling
+    decisions see the same edge semantics the runtime executes.
     """
     if max_threads is None:
         max_threads = machine.total_cores
@@ -61,7 +64,8 @@ def rlas_optimize(logical: LogicalGraph, machine: MachineSpec,
     it = 0
     while it < max_iters:
         it += 1
-        graph = ExecutionGraph(logical, parallelism, compress_ratio)
+        graph = ExecutionGraph(logical, parallelism, compress_ratio,
+                               routes=routes)
         pres = bnb_place(graph, machine, input_rate, bestfit=bestfit,
                          max_nodes=max_nodes, tf_mode=tf_mode)
         history.append((dict(parallelism), pres.R))
@@ -103,7 +107,8 @@ def rlas_optimize(logical: LogicalGraph, machine: MachineSpec,
         if not grew:
             break                        # no bottleneck can be scaled
     if best is None:
-        graph = ExecutionGraph(logical, parallelism, compress_ratio)
+        graph = ExecutionGraph(logical, parallelism, compress_ratio,
+                               routes=routes)
         pres = bnb_place(graph, machine, input_rate, bestfit=bestfit,
                          max_nodes=max_nodes, tf_mode=tf_mode)
         best = ScalingResult(dict(parallelism), pres, graph, history, it)

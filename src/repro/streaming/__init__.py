@@ -7,6 +7,9 @@ Preferred entry point::
     plan.estimate(); plan.simulate(); plan.execute()
 """
 from .api import (Job, Metrics, Plan, StreamingApp, Topology, TopologyError)
+from .routing import (PARTITION_STRATEGIES, Route, RouteSpec, RoutingTable,
+                      compile_routes)
 
 __all__ = ["Job", "Metrics", "Plan", "StreamingApp", "Topology",
-           "TopologyError"]
+           "TopologyError", "PARTITION_STRATEGIES", "Route", "RouteSpec",
+           "RoutingTable", "compile_routes"]

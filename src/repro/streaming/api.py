@@ -8,7 +8,10 @@ is its single entry point:
 * :class:`Topology` — fluent dataflow builder.  Operators declare their
   profiled spec (T^e, N, M, selectivity), their compute kernel, their inputs
   (with optional per-stream selectivity overrides, paper Table 8) and their
-  *input partitioning strategy* (``"shuffle"`` or ``"key"``) in one place.
+  *input partitioning strategy* (``"shuffle"``, ``"key"`` with an optional
+  ``key_by`` extractor, or ``"broadcast"``) in one place.  Declarations
+  compile into the single routing substrate (:mod:`repro.streaming.routing`)
+  consumed by planner, simulators and runtime alike.
   ``build()`` validates the graph (duplicate operators, unknown endpoints,
   edges into spouts, cycles, unreachable operators) before anything runs.
 * :class:`Job` — wraps a built app (or a planning-only logical graph) and
@@ -33,7 +36,9 @@ from repro.core import (ExecutionGraph, LogicalGraph, MachineSpec,
                         OperatorSpec, bnb_place, evaluate, rlas_optimize)
 from repro.core.baselines import ff_place, random_plan, rr_place
 
-PARTITION_STRATEGIES = ("shuffle", "key")
+from .routing import (KeyBy, PARTITION_STRATEGIES, RoutingTable,
+                      compile_routes, validate_key_extractor,
+                      validate_operator_names, validate_strategy)
 
 _UNSET = object()
 
@@ -58,12 +63,18 @@ class StreamingApp:
     make_source: Optional[Callable[[int, int], np.ndarray]] = None
     partition: Dict[str, str] = dataclasses.field(default_factory=dict)
     sources: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    key_by: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
 
     def source_for(self, spout: str) -> Callable[[int, int], np.ndarray]:
         fn = self.sources.get(spout, self.make_source)
         if fn is None:
             raise TopologyError(f"spout {spout!r} has no source generator")
         return fn
+
+    def routes(self, partition: Optional[Dict[str, str]] = None
+               ) -> RoutingTable:
+        """Compile this app's routing table (see ``streaming.routing``)."""
+        return compile_routes(self, partition=partition)
 
 
 @dataclasses.dataclass
@@ -75,6 +86,7 @@ class _OpDecl:
     edge_selectivity: Dict[str, float]      # producer -> override
     partition: str
     source: Optional[Callable]
+    key_by: Optional[KeyBy] = None
 
 
 class Topology:
@@ -119,15 +131,26 @@ class Topology:
                          Mapping[str, float]] = None,
            exec_ns: float, tuple_bytes: float = 64.0,
            mem_bytes: Optional[float] = None, selectivity: float = 1.0,
-           partition: str = "shuffle") -> "Topology":
+           partition: str = "shuffle",
+           key_by: Optional[KeyBy] = None) -> "Topology":
         """Declare an operator.  ``kernel(batch, state) -> [out_batch, ...]``
         emits one array per declared *downstream* stream, in the order the
         consumers were declared.  ``partition`` is how *this* operator's
-        input stream is split over its replicas."""
-        if partition not in PARTITION_STRATEGIES:
-            raise TopologyError(
-                f"operator {name!r}: unknown partition strategy "
-                f"{partition!r} (choose from {PARTITION_STRATEGIES})")
+        input stream is split over its replicas ("shuffle", "key" or
+        "broadcast"); ``key_by`` names the key for ``partition="key"`` — a
+        column index into 2-D batches or a callable ``batch -> keys``
+        (default: the historical hash-column-0 convention)."""
+        try:
+            validate_strategy(name, partition)
+            if key_by is not None:
+                if partition != "key":
+                    raise ValueError(
+                        f"operator {name!r} declares key_by but partition="
+                        f"{partition!r} (key extractors require "
+                        "partition='key')")
+                validate_key_extractor(name, key_by)
+        except ValueError as e:
+            raise TopologyError(str(e)) from None
         names, esel = self._normalize_inputs(name, inputs)
         self._declare(_OpDecl(
             name, kernel,
@@ -135,7 +158,7 @@ class Topology:
                          tuple_bytes if mem_bytes is None else mem_bytes,
                          selectivity),
             inputs=names, edge_selectivity=esel, partition=partition,
-            source=None))
+            source=None, key_by=key_by))
         return self
 
     def sink(self, name: str, kernel: Optional[Callable] = None,
@@ -176,6 +199,18 @@ class Topology:
     @property
     def operators(self) -> List[str]:
         return list(self._decls)
+
+    @property
+    def partition(self) -> Dict[str, str]:
+        """Declared non-default partition strategies (consumer -> strategy)."""
+        return {n: d.partition for n, d in self._decls.items()
+                if d.partition != "shuffle"}
+
+    @property
+    def key_by(self) -> Dict[str, KeyBy]:
+        """Declared key extractors (consumer -> column index or callable)."""
+        return {n: d.key_by for n, d in self._decls.items()
+                if d.key_by is not None}
 
     @property
     def is_executable(self) -> bool:
@@ -255,11 +290,10 @@ class Topology:
                    if d.kernel is not None}
         sources = {n: d.source for n, d in self._decls.items()
                    if d.source is not None}
-        partition = {n: d.partition for n, d in self._decls.items()
-                     if d.partition != "shuffle"}
         return StreamingApp(self.name, graph, kernels,
                             make_source=next(iter(sources.values())),
-                            partition=partition, sources=sources)
+                            partition=self.partition, sources=sources,
+                            key_by=self.key_by)
 
 
 # ---------------------------------------------------------------------------
@@ -303,16 +337,31 @@ OPTIMIZERS = ("rlas", "bnb", "ff", "rr", "random", "manual")
 
 
 class Job:
-    """One streaming job: a topology plus everything you can do with it."""
+    """One streaming job: a topology plus everything you can do with it.
+
+    The job compiles its :class:`~.routing.RoutingTable` once — the same
+    tables the runtime executes and the DES measures — and every planner
+    call reads edge selectivity/partition from it, so estimate, simulate and
+    execute share one source of truth.  ``plan()`` results are cached per
+    ``(machine, optimizer, settings)``; :meth:`Plan.replan` re-plans on a
+    new machine through the same cache (the elastic path of
+    ``launch/elastic.py``).
+    """
 
     def __init__(self, source: Union[Topology, StreamingApp, LogicalGraph]):
+        declared_partition: Dict[str, str] = {}
+        declared_key_by: Dict[str, KeyBy] = {}
         if isinstance(source, Topology):
             if source.is_executable:
                 self.app: Optional[StreamingApp] = source.build()
                 self.graph = self.app.graph
             else:
+                # planning-only: the declaration's routing semantics must
+                # still reach the planner
                 self.app = None
                 self.graph = source.build_logical()
+                declared_partition = source.partition
+                declared_key_by = source.key_by
             self.name = source.name
         elif isinstance(source, StreamingApp):
             self.app = source
@@ -326,11 +375,16 @@ class Job:
             raise TypeError(
                 f"Job expects Topology, StreamingApp or LogicalGraph, "
                 f"got {type(source).__name__}")
+        self.routes = compile_routes(
+            self.app if self.app is not None else self.graph,
+            partition=declared_partition, key_by=declared_key_by)
+        self._plan_cache: Dict[tuple, "Plan"] = {}
 
     def plan(self, machine: MachineSpec, optimizer: str = "rlas", *,
              input_rate: Optional[float] = None,
              parallelism: Optional[Dict[str, int]] = None,
-             compress_ratio: int = 1, seed: int = 0, **kw) -> "Plan":
+             compress_ratio: int = 1, seed: int = 0,
+             cache: bool = True, **kw) -> "Plan":
         """Produce an execution plan (replication + placement).
 
         ``optimizer``: "rlas" (joint scaling + B&B placement, the paper),
@@ -338,11 +392,39 @@ class Job:
         baselines at fixed ``parallelism``), "random" (Fig. 14 sample;
         honours ``rng=`` for reproducible Monte-Carlo sweeps), or "manual"
         (caller-supplied ``placement=`` list, one socket per unit).
+
+        Identical requests return the cached :class:`Plan` (pass
+        ``cache=False`` to force a fresh search); "random" plans and
+        requests with unhashable settings are never cached.
         """
+        if parallelism:
+            validate_operator_names(self.graph, parallelism, "parallelism")
+        # snapshot mutable settings so later caller-side mutation cannot
+        # change what replan() replays or what the cache key describes
+        options = {k: dict(v) if isinstance(v, dict) else
+                   list(v) if isinstance(v, list) else v
+                   for k, v in dict(kw, input_rate=input_rate,
+                                    parallelism=parallelism,
+                                    compress_ratio=compress_ratio,
+                                    seed=seed).items()}
+        key = None if not cache or optimizer == "random" else \
+            _plan_cache_key(machine, optimizer, options)
+        if key is not None and key in self._plan_cache:
+            return self._plan_cache[key]
+        plan = self._plan(machine, optimizer, input_rate, parallelism,
+                          compress_ratio, seed, kw)
+        plan.options = options
+        if key is not None:
+            self._plan_cache[key] = plan
+        return plan
+
+    def _plan(self, machine, optimizer, input_rate, parallelism,
+              compress_ratio, seed, kw) -> "Plan":
         if optimizer == "rlas":
             res = rlas_optimize(self.graph, machine, input_rate=input_rate,
                                 compress_ratio=compress_ratio,
-                                initial_parallelism=parallelism, **kw)
+                                initial_parallelism=parallelism,
+                                routes=self.routes, **kw)
             return Plan(self, machine, res.graph,
                         list(res.placement.placement),
                         dict(res.parallelism), "rlas", input_rate,
@@ -361,14 +443,18 @@ class Job:
                                 f"'random': {sorted(kw)}")
             graph, placement, ev = random_plan(
                 self.graph, machine, rng, input_rate=input_rate,
-                compress_ratio=compress_ratio)
+                compress_ratio=compress_ratio, routes=self.routes)
             return Plan(self, machine, graph, list(placement),
                         dict(graph.parallelism), "random", input_rate,
                         ev, None)
         par = {name: 1 for name in self.graph.operators}
         par.update(parallelism or {})
-        graph = ExecutionGraph(self.graph, par, compress_ratio)
+        graph = ExecutionGraph(self.graph, par, compress_ratio,
+                               routes=self.routes)
         if optimizer == "manual":
+            if "placement" not in kw:
+                raise TypeError("optimizer='manual' requires a placement= "
+                                "list (one socket per execution unit)")
             placement = list(kw.pop("placement"))
             if kw:
                 raise TypeError(f"unexpected arguments for optimizer="
@@ -377,6 +463,12 @@ class Job:
                 raise ValueError(
                     f"manual placement has {len(placement)} entries for "
                     f"{graph.n_units} execution units")
+            bad = sorted({s for s in placement
+                          if s != -1 and not 0 <= s < machine.n_sockets})
+            if bad:
+                raise ValueError(
+                    f"manual placement names sockets {bad} on a "
+                    f"{machine.n_sockets}-socket machine (-1 = unplaced)")
             ev = evaluate(graph, machine, placement, input_rate)
             return Plan(self, machine, graph, placement, par, "manual",
                         input_rate, ev, None)
@@ -393,6 +485,27 @@ class Job:
                              f"(choose from {OPTIMIZERS})")
         return Plan(self, machine, graph, list(pres.placement), par,
                     optimizer, input_rate, pres.eval, pres)
+
+
+def _plan_cache_key(machine: MachineSpec, optimizer: str,
+                    options: Dict) -> Optional[tuple]:
+    """Hashable identity of a plan request, or None when uncacheable."""
+    opts = []
+    for k, v in sorted(options.items()):
+        if isinstance(v, dict):
+            v = tuple(sorted(v.items()))
+        elif isinstance(v, list):
+            v = tuple(v)
+        opts.append((k, v))
+    key = (machine.name, machine.n_sockets, machine.cores_per_socket,
+           machine.local_bw, machine.cache_line, machine.ghz,
+           machine.Q.tobytes(), machine.L.tobytes(),
+           optimizer, tuple(opts))
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key
 
 
 @dataclasses.dataclass
@@ -412,10 +525,30 @@ class Plan:
     input_rate: Optional[float]
     eval: object                        # PlanEval from planning, if any
     result: object                      # optimizer-specific result
+    options: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def feasible(self) -> bool:
         return bool(self.eval is not None and self.eval.feasible)
+
+    def replan(self, machine: MachineSpec, **overrides) -> "Plan":
+        """Re-plan this job for a different machine (elastic path).
+
+        Mirrors ``launch/elastic.replan``: the same optimizer and search
+        settings are re-run against the new topology — replication and
+        placement are re-derived from the performance model, not hand-edited
+        — and the result lands in the job's plan cache.
+        """
+        opts = dict(self.options)
+        opts.update(overrides)
+        if self.optimizer == "manual" and "placement" not in overrides:
+            # the stored placement names THIS plan's sockets; replaying it
+            # on a different machine is stale at best, out of range at worst
+            raise ValueError(
+                "manual plans carry a machine-specific placement; pass "
+                "placement= for the new machine or replan with an "
+                "optimizer")
+        return self.job.plan(machine, self.optimizer, **opts)
 
     @property
     def R(self) -> float:
@@ -448,21 +581,32 @@ class Plan:
                        violations=list(ev.violations), raw=ev)
 
     def simulate(self, backend: str = "des", *, input_rate=_UNSET,
-                 batch: int = 64, horizon: float = 0.02,
-                 seed: int = 0, **kw) -> Metrics:
+                 batch: Optional[int] = None, horizon: Optional[float] = None,
+                 seed: Optional[int] = None, **kw) -> Metrics:
         """Measurement oracle: "des" (jumbo-tuple discrete-event sim with
         latency percentiles) or "fluid" (fixed-point rate solver that
         degrades under contention).  ``input_rate=None`` measures saturation
-        capacity (the paper's §6.1 protocol)."""
+        capacity (the paper's §6.1 protocol).  ``batch``/``horizon``/``seed``
+        are DES-only (defaults 64 / 0.02 s / 0); the fluid solver rejects
+        them rather than silently ignore a parameter sweep."""
         from .simulator import des_simulate, fluid_solve, measure_capacity
         rate = self.input_rate if input_rate is _UNSET else input_rate
         if backend == "fluid":
+            stray = [n for n, v in [("batch", batch), ("horizon", horizon),
+                                    ("seed", seed)] if v is not None]
+            if stray:
+                raise TypeError(
+                    f"simulate(backend='fluid') does not take {stray} "
+                    "(DES-only parameters)")
             fl = fluid_solve(self.graph, self.machine, self.placement,
                              input_rate=rate, **kw)
             return Metrics("fluid", fl.R, raw=fl)
         if backend != "des":
             raise ValueError(f"unknown simulate backend {backend!r} "
                              "(choose 'des' or 'fluid')")
+        batch = 64 if batch is None else batch
+        horizon = 0.02 if horizon is None else horizon
+        seed = 0 if seed is None else seed
         if rate is None:
             des = measure_capacity(self.graph, self.machine, self.placement,
                                    batch=batch, horizon=horizon, seed=seed,
@@ -478,7 +622,8 @@ class Plan:
                 jumbo: bool = True, queue_cap: int = 32,
                 partition: Optional[Dict[str, str]] = None,
                 parallelism: Optional[Dict[str, int]] = None,
-                max_threads: Optional[int] = None, seed: int = 0) -> Metrics:
+                max_threads: Optional[int] = None, seed: int = 0,
+                vectorized: bool = True) -> Metrics:
         """Run the plan on the real threaded runtime of this host.
 
         The plan's replication levels target the *modelled* machine; by
@@ -497,7 +642,7 @@ class Plan:
             parallelism = _scale_parallelism(self.parallelism, budget)
         rt = run_app(self.job.app, parallelism=parallelism, batch=batch,
                      duration=duration, jumbo=jumbo, queue_cap=queue_cap,
-                     partition=partition, seed=seed)
+                     partition=partition, seed=seed, vectorized=vectorized)
         return Metrics("runtime", rt.throughput, rt.latency_p50,
                        rt.latency_p99, raw=rt)
 

@@ -147,14 +147,20 @@ def spike_detection() -> StreamingApp:
 
 
 # ---------------------------------------------------------------------------
-# Linear Road (Fig. 18c style): the multi-stream topology.
+# Linear Road (Fig. 18c style): the multi-stream, multi-spout topology.
 #   spout -> dispatcher -> {avg_speed, count_vehicles, accident}
 #   {avg_speed, count_vehicles} -> toll ; accident -> notification
-#   {toll, notification} -> sink
+#   hist_spout -> toll_history (keyed by vehicle id)
+#   {toll, notification, toll_history} -> sink
 # Assumed per-stream selectivities (Table 8 not in the provided text):
 #   dispatcher->avg_speed 0.9, ->count 0.9, ->accident 0.1
 #   avg_speed->toll 1.0, count->toll 1.0, accident->notification 1.0
+# The historical-query stream is the benchmark's second spout: account
+# balance requests arrive on their own source and are keyed to the replica
+# owning that vehicle's account (LRB's "Type 2/3" queries).
 # ---------------------------------------------------------------------------
+
+LR_VEHICLES = 512
 
 
 def linear_road() -> StreamingApp:
@@ -164,11 +170,17 @@ def linear_road() -> StreamingApp:
         speed = rng.uniform(0.0, 100.0, size=batch)
         return np.stack([seg, speed], axis=1)
 
+    def hist_source(batch, seed):
+        rng = np.random.default_rng(seed)
+        vid = rng.integers(0, LR_VEHICLES, size=batch).astype(np.float64)
+        day = rng.integers(1, 70, size=batch).astype(np.float64)
+        return np.stack([vid, day], axis=1)
+
     def k_dispatcher(batch, state):
         speed = batch[:, 1]
         keep = batch[speed >= np.quantile(speed, 0.1)] if len(batch) else batch
-        acc = batch[speed < 1.0]
-        return [keep, keep, acc]
+        acc = batch[speed < 10.0]      # ~0.1 of uniform(0,100) speeds —
+        return [keep, keep, acc]       # matches the declared 0.1 selectivity
 
     def k_avg_speed(batch, state):
         if not len(batch):
@@ -202,6 +214,15 @@ def linear_road() -> StreamingApp:
     def k_notification(batch, state):
         return [np.ones(len(batch), np.int8)]
 
+    def k_toll_history(batch, state):
+        if not len(batch):
+            return [np.zeros((0,))]
+        vid = batch[:, 0].astype(np.int64) % LR_VEHICLES
+        acct = state.setdefault("acct", np.zeros(LR_VEHICLES))
+        np.add.at(acct, vid, 0.5)      # each query accrues an assessed toll
+        state["queries"] = state.get("queries", 0) + len(batch)
+        return [acct[vid]]
+
     def k_sink(batch, state):
         state["seen"] = state.get("seen", 0) + len(batch)
         return []
@@ -220,7 +241,12 @@ def linear_road() -> StreamingApp:
             exec_ns=950.0, tuple_bytes=48.0, mem_bytes=144.0)
         .op("notification", k_notification, inputs=["accident"],
             exec_ns=300.0, tuple_bytes=48.0)
-        .sink("sink", k_sink, inputs=["toll", "notification"],
+        .spout("hist_spout", hist_source, exec_ns=350.0, tuple_bytes=64.0)
+        .op("toll_history", k_toll_history, inputs=["hist_spout"],
+            exec_ns=650.0, tuple_bytes=64.0, mem_bytes=160.0,
+            partition="key", key_by=0)
+        .sink("sink", k_sink, inputs=["toll", "notification",
+                                      "toll_history"],
               exec_ns=100.0, tuple_bytes=16.0)
         .build())
 

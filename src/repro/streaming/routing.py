@@ -1,0 +1,309 @@
+"""One routing substrate: compiled per-edge routes shared by every layer.
+
+The paper's throughput story (§5.2 jumbo tuples, §3.1 rate model) only holds
+if the *same* edge semantics — partition strategy, key extraction, per-stream
+selectivity, consumer fan-out — are what the planner models, what the DES
+measures and what the threaded runtime executes.  This module is that single
+source of truth:
+
+* :class:`RouteSpec` — one logical stream (producer -> consumer) compiled
+  from the Topology declaration: strategy (``shuffle`` / ``key`` /
+  ``broadcast``), declared key extractor, per-stream selectivity.
+* :class:`Route` — a spec bound to a concrete consumer fan-out.  Its
+  ``split`` is the only place tuple->replica assignment happens at runtime;
+  key partitioning is vectorized (one ``argsort`` + ``bincount`` instead of
+  ``k`` boolean masks per batch).
+* :class:`RoutingTable` — all routes of one logical graph, compiled once by
+  :func:`compile_routes`.  ``repro.core.ExecutionGraph`` derives its edge
+  weights from it (the planner side), :func:`unit_delivery` derives the DES
+  delivery tables from it (the simulator side), and the runtime binds its
+  per-replica :class:`Route` objects from it (the execution side).
+
+Keeping all three consumers on these tables closes the drift the ROADMAP
+flagged (non-first-stream ``edge_selectivity`` silently ignored by routing)
+and makes every later routing feature a one-place change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+PARTITION_STRATEGIES = ("shuffle", "key", "broadcast")
+
+#: a key extractor: a column index into 2-D batches, or ``f(batch) -> keys``
+KeyBy = Union[int, Callable[[np.ndarray], np.ndarray]]
+
+
+def validate_strategy(op: str, strategy: str) -> None:
+    if strategy not in PARTITION_STRATEGIES:
+        raise ValueError(
+            f"operator {op!r}: unknown partition strategy {strategy!r} "
+            f"(choose from {PARTITION_STRATEGIES})")
+
+
+def validate_operator_names(graph, names, what: str) -> None:
+    """Reject references to operators the graph does not declare (one rule
+    for every per-operator mapping: parallelism, partition, key_by)."""
+    unknown = sorted(set(names) - set(graph.operators))
+    if unknown:
+        raise ValueError(
+            f"{what} names unknown operators {unknown} "
+            f"(declared: {sorted(graph.operators)})")
+
+
+def validate_key_extractor(op: str, key_by: KeyBy) -> None:
+    """A key extractor is a column index or a callable (bools are not
+    column indices)."""
+    if callable(key_by):
+        return
+    if isinstance(key_by, bool) or not isinstance(key_by, (int, np.integer)):
+        raise ValueError(
+            f"operator {op!r}: key_by must be a column index or a "
+            f"callable, got {type(key_by).__name__}")
+
+
+def extract_keys(arr: np.ndarray, key_by: Optional[KeyBy]) -> np.ndarray:
+    """Integer keys for ``arr`` under a declared extractor.
+
+    ``None`` keeps the historical convention: the tuple itself for 1-D
+    batches, column 0 for 2-D batches.
+    """
+    if callable(key_by):
+        keys = np.asarray(key_by(arr))
+        if keys.shape[:1] != arr.shape[:1]:
+            raise ValueError(
+                f"key extractor returned {keys.shape} keys for a batch of "
+                f"{len(arr)} tuples")
+        return keys.astype(np.int64, copy=False)
+    col = 0 if key_by is None else int(key_by)
+    if arr.ndim == 1:
+        if col != 0:
+            raise ValueError(
+                f"key_by column {col} requested on a 1-D batch")
+        return arr.astype(np.int64, copy=False)
+    return arr[:, col].astype(np.int64, copy=False)
+
+
+def split_by_key(arr: np.ndarray, keys: np.ndarray,
+                 k: int) -> List[Tuple[int, np.ndarray]]:
+    """Vectorized keyed split: one stable argsort + bincount per batch
+    instead of ``k`` boolean masks (k full-array scans + gathers).
+
+    The residues fit in uint8 for any realistic fan-out, where numpy's
+    stable argsort is a single-pass radix sort — O(n) rather than the
+    per-mask path's O(n*k).  The stable order preserves arrival order
+    within each partition, so the result is row-for-row identical to the
+    per-mask path.  Returns ``(replica, rows)`` for non-empty partitions;
+    the rows are views into one gathered array (no per-partition copies).
+    """
+    keys = keys % k
+    if k <= 256:
+        keys = keys.astype(np.uint8)
+    counts = np.bincount(keys, minlength=k)
+    gathered = arr[np.argsort(keys, kind="stable")]
+    ends = np.cumsum(counts)
+    return [(j, gathered[ends[j] - counts[j]:ends[j]])
+            for j in range(k) if counts[j]]
+
+
+def split_by_key_masks(arr: np.ndarray, keys: np.ndarray,
+                       k: int) -> List[Tuple[int, np.ndarray]]:
+    """The seed runtime's per-mask path (k boolean scans per batch).
+
+    Kept only as the baseline for ``benchmarks/bench_runtime.py`` and the
+    parity tests; the runtime uses :func:`split_by_key`.
+    """
+    keys = keys % k
+    out = []
+    for j in range(k):
+        part = arr[keys == j]
+        if len(part):
+            out.append((j, part))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteSpec:
+    """One logical stream, compiled from the Topology declaration.
+
+    ``stream`` is the producer's output-stream index (consumer declaration
+    order — the position of this edge's array in the kernel's return list).
+    ``selectivity`` is the declared per-stream selectivity (the producer's
+    default or the consumer's per-edge override, paper Table 8).
+    """
+
+    producer: str
+    consumer: str
+    stream: int
+    strategy: str = "shuffle"
+    selectivity: float = 1.0
+    key_by: Optional[KeyBy] = None
+
+    def keys(self, arr: np.ndarray) -> np.ndarray:
+        return extract_keys(arr, self.key_by)
+
+    def unit_weight(self, group: int, fanout: int) -> float:
+        """Tuples arriving at one consumer unit of ``group`` fused replicas
+        (``fanout`` replicas total) per tuple processed by a producer unit —
+        the replica-level edge weight of the §3.1 rate model."""
+        if self.strategy == "broadcast":
+            return self.selectivity * group
+        return self.selectivity * group / fanout
+
+    def bind(self, fanout: int, vectorized: bool = True) -> "Route":
+        return Route(self, fanout, vectorized)
+
+
+class Route:
+    """A :class:`RouteSpec` bound to a concrete consumer fan-out.
+
+    Owns the per-producer-replica round-robin cursor, so every executor
+    binds its own instance.  ``vectorized=False`` selects the seed's
+    per-mask keyed split (benchmark baseline only).
+    """
+
+    __slots__ = ("spec", "fanout", "vectorized", "_rr")
+
+    def __init__(self, spec: RouteSpec, fanout: int, vectorized: bool = True):
+        assert fanout >= 1
+        self.spec = spec
+        self.fanout = fanout
+        self.vectorized = vectorized
+        self._rr = 0
+
+    def split(self, arr: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        """Assign a batch to consumer replicas: ``[(replica, rows), ...]``."""
+        k = self.fanout
+        if k == 1:
+            return [(0, arr)]
+        strategy = self.spec.strategy
+        if strategy == "key":
+            keys = self.spec.keys(arr)
+            if self.vectorized:
+                return split_by_key(arr, keys, k)
+            return split_by_key_masks(arr, keys, k)
+        if strategy == "broadcast":
+            return [(j, arr) for j in range(k)]
+        j = self._rr % k                 # shuffle: whole batch round-robin
+        self._rr += 1
+        return [(j, arr)]
+
+    def tuples_entered(self, lane_counts) -> int:
+        """Distinct tuples that entered this stream, given per-replica
+        delivered counts: broadcast duplicates a tuple onto every lane
+        (count it once), partitioning strategies split it (sum lanes)."""
+        if self.spec.strategy == "broadcast":
+            return max(lane_counts, default=0)
+        return sum(lane_counts)
+
+    def __repr__(self) -> str:
+        return (f"Route({self.spec.producer}->{self.spec.consumer} "
+                f"{self.spec.strategy} sel={self.spec.selectivity} "
+                f"k={self.fanout})")
+
+
+class RoutingTable:
+    """All compiled routes of one logical graph (one entry per edge)."""
+
+    def __init__(self, graph, routes: Dict[Tuple[str, str], RouteSpec]):
+        self.graph = graph
+        self._routes = dict(routes)
+        self._out: Dict[str, List[RouteSpec]] = {}
+        for (u, _), spec in sorted(self._routes.items(),
+                                   key=lambda kv: kv[1].stream):
+            self._out.setdefault(u, []).append(spec)
+
+    def route(self, producer: str, consumer: str) -> RouteSpec:
+        return self._routes[(producer, consumer)]
+
+    def out_routes(self, producer: str) -> List[RouteSpec]:
+        """Routes leaving ``producer`` in output-stream order (the order of
+        the kernel's return list)."""
+        return self._out.get(producer, [])
+
+    def sel(self, producer: str, consumer: str) -> float:
+        return self._routes[(producer, consumer)].selectivity
+
+    def strategy(self, producer: str, consumer: str) -> str:
+        return self._routes[(producer, consumer)].strategy
+
+    def unit_weight(self, producer: str, consumer: str, group: int,
+                    fanout: int) -> float:
+        return self._routes[(producer, consumer)].unit_weight(group, fanout)
+
+    def items(self):
+        return self._routes.items()
+
+    def __len__(self) -> int:
+        return len(self._routes)
+
+    def __contains__(self, edge) -> bool:
+        return edge in self._routes
+
+
+def compile_routes(source, partition: Optional[Mapping[str, str]] = None,
+                   key_by: Optional[Mapping[str, KeyBy]] = None
+                   ) -> RoutingTable:
+    """Compile the routing table for an app or logical graph.
+
+    ``source`` is a ``StreamingApp`` (whose declared ``partition`` /
+    ``key_by`` travel with it) or a bare ``LogicalGraph``.  The ``partition``
+    and ``key_by`` arguments override per *consumer* operator (that is how
+    ``run_app(partition=...)`` overrides a declaration).
+    """
+    graph = getattr(source, "graph", source)
+    strategies = dict(getattr(source, "partition", None) or {})
+    strategies.update(partition or {})
+    extractors = dict(getattr(source, "key_by", None) or {})
+    validate_operator_names(graph, strategies, "partition")
+    for op, strat in strategies.items():
+        validate_strategy(op, strat)
+    # a partition override away from "key" disables the *declared* extractor
+    # (so run_app(partition={'op': 'shuffle'}) A/Bs keyed-by apps cleanly);
+    # an extractor passed explicitly alongside a non-key strategy is a
+    # caller error and is rejected below
+    for op in [o for o, kb in extractors.items()
+               if strategies.get(o, "shuffle") != "key"]:
+        del extractors[op]
+    extractors.update(key_by or {})
+    validate_operator_names(graph, extractors, "key_by")
+    for op, kb in extractors.items():
+        if strategies.get(op, "shuffle") != "key":
+            raise ValueError(
+                f"operator {op!r} declares key_by but its partition "
+                f"strategy is {strategies.get(op, 'shuffle')!r} (key "
+                "extractors require partition='key')")
+        validate_key_extractor(op, kb)
+    routes: Dict[Tuple[str, str], RouteSpec] = {}
+    for u in graph.operators:
+        for stream, v in enumerate(graph.consumers(u)):
+            routes[(u, v)] = RouteSpec(
+                producer=u, consumer=v, stream=stream,
+                strategy=strategies.get(v, "shuffle"),
+                selectivity=graph.sel(u, v),
+                key_by=extractors.get(v))
+    return RoutingTable(graph, routes)
+
+
+def unit_delivery(graph, routes: Optional[RoutingTable] = None
+                  ) -> Dict[int, List[Tuple[int, float]]]:
+    """Replica-level delivery table for the DES, derived from the routes.
+
+    ``table[u] = [(v, w), ...]``: a producer unit ``u`` hands ``w`` tuples to
+    consumer unit ``v`` per tuple it processes — selectivity x strategy x
+    fan-out, the same quantities ``ExecutionGraph`` feeds the rate model.
+    """
+    if routes is None:
+        routes = getattr(graph, "routes", None) or \
+            compile_routes(graph.logical)
+    table: Dict[int, List[Tuple[int, float]]] = {
+        u: [] for u in range(graph.n_units)}
+    for (pu, cv), spec in routes.items():
+        fanout = graph.parallelism.get(cv, 1)
+        for ui in graph.units_of(pu):
+            for vi in graph.units_of(cv):
+                w = spec.unit_weight(graph.replicas[vi].group, fanout)
+                table[ui].append((vi, w))
+    return table

@@ -1,12 +1,19 @@
 """Real threaded mini-runtime (paper §5 / Appendix A, shared-memory design).
 
-Executes a :class:`StreamingApp` for real on the host CPU: every replica is a
-thread (task = executor + partition controller), tuples are numpy batches
-passed *by reference* through bounded queues (backpressure via blocking put),
-and outputs are accumulated into **jumbo tuples** — one queue insertion per
-``batch`` tuples with a single shared header (timestamp), amortising queue
-overhead exactly as §5.2 describes.  ``jumbo=False`` degrades to per-tuple
-insertion for the Fig. 16 factor analysis.
+Executes a :class:`StreamingApp` for real on the host CPU.  Every replica —
+spout or task — is one :class:`Executor` thread sharing a single emit path:
+tuples are numpy batches passed *by reference* through bounded queues
+(backpressure via blocking put) and accumulated into **jumbo tuples** — one
+queue insertion per ``batch`` tuples with a single shared header (timestamp),
+amortising queue overhead exactly as §5.2 describes.  ``jumbo=False``
+degrades to per-tuple insertion for the Fig. 16 factor analysis.
+
+All partitioning decisions go through compiled :class:`~.routing.Route`
+objects (see :mod:`repro.streaming.routing`) — the same tables the planner
+and the DES consume — so there is no strategy branching here.  The hot path
+is batch-vectorized: keyed splits are one argsort/bincount per batch and
+jumbo accumulation copies rows into preallocated buffers instead of
+list-append-then-concatenate.
 
 This runtime validates streaming *semantics* (WC really counts words); the
 NUMA placement effects are exercised through the simulator instead (this
@@ -18,11 +25,12 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .apps import StreamingApp
+from .routing import Route, compile_routes, validate_operator_names
 
 _POISON = object()
 
@@ -38,62 +46,140 @@ class RuntimeResult:
     states: Dict[str, List[dict]]   # per-operator replica states (counts etc.)
 
 
-class _Task(threading.Thread):
-    """One replica: pulls jumbo tuples, runs the kernel, partitions output."""
+class _JumboBuffer:
+    """Preallocated jumbo accumulator for one (stream, consumer-replica) lane.
 
-    def __init__(self, name, kernel, in_q, outs, batch, jumbo, state,
-                 expected_poisons, lat_sink=None):
+    Rows are copied in place into a fixed ``cap``-row store — no per-emit
+    list append + concatenate — and ``add`` hands back full jumbos.  The
+    flush timestamp is the *oldest* buffered tuple's, so end-to-end latency
+    accounting matches the seed runtime.  A whole batch that already fills a
+    jumbo passes through untouched (zero copies), which keeps the common
+    selectivity-one shuffle path as cheap as before.
+    """
+
+    __slots__ = ("cap", "_store", "_n", "_t0")
+
+    def __init__(self, cap: int):
+        self.cap = cap
+        self._store: Optional[np.ndarray] = None
+        self._n = 0
+        self._t0 = 0.0
+
+    def add(self, arr: np.ndarray,
+            t0: float) -> List[Tuple[np.ndarray, float]]:
+        """Buffer ``arr``; return the jumbos (if any) now ready to flush."""
+        out: List[Tuple[np.ndarray, float]] = []
+        store = self._store
+        if self._n and (store.shape[1:] != arr.shape[1:]
+                        or store.dtype != arr.dtype):
+            # the stream changed row shape mid-lane: flush what we have
+            out.append((store[: self._n].copy(), self._t0))
+            self._n = 0
+        if self._n == 0 and len(arr) >= self.cap:
+            out.append((arr, t0))                      # zero-copy fast path
+            return out
+        if store is None or store.shape[1:] != arr.shape[1:] \
+                or store.dtype != arr.dtype:
+            self._store = store = np.empty((self.cap,) + arr.shape[1:],
+                                           arr.dtype)
+        if self._n == 0:
+            self._t0 = t0
+        end = self._n + len(arr)
+        if end >= self.cap:
+            out.append((np.concatenate([store[: self._n], arr]), self._t0))
+            self._n = 0
+        else:
+            store[self._n:end] = arr
+            self._n = end
+        return out
+
+    def drain(self) -> Optional[Tuple[np.ndarray, float]]:
+        if self._n == 0:
+            return None
+        out = self._store[: self._n].copy()
+        self._n = 0
+        return out, self._t0
+
+
+class _OutPort:
+    """One output stream of an executor: a bound route plus the consumer
+    replica queues and their jumbo lanes."""
+
+    __slots__ = ("route", "queues", "buffers", "delivered")
+
+    def __init__(self, route: Route, queues: List[queue.Queue], batch: int):
+        self.route = route
+        self.queues = queues
+        self.buffers = [_JumboBuffer(batch) for _ in queues]
+        self.delivered = [0] * len(queues)   # tuples enqueued, per lane
+
+    def tuples_entered(self) -> int:
+        return self.route.tuples_entered(self.delivered)
+
+
+class Executor(threading.Thread):
+    """One replica of any operator — spout or task (the paper's "executor").
+
+    Spouts generate input with ``source``; tasks pull jumbos from ``in_q``.
+    Both emit through the same path: ``Route.split`` assigns tuples to
+    consumer replicas and per-lane jumbo buffers amortise queue insertions,
+    for per-tuple (``jumbo=False``) and jumbo modes alike.
+    """
+
+    def __init__(self, name: str, ports: List[_OutPort], batch: int,
+                 jumbo: bool, state: dict, *,
+                 kernel: Optional[Callable] = None,
+                 in_q: Optional[queue.Queue] = None,
+                 expected_poisons: int = 0,
+                 source: Optional[Callable] = None,
+                 stop: Optional[threading.Event] = None,
+                 seed: int = 0,
+                 lat_sink: Optional[List[float]] = None,
+                 on_delivered: Optional[Callable[[int], None]] = None):
         super().__init__(daemon=True, name=name)
-        self.kernel = kernel
-        self.in_q = in_q
-        self.outs = outs            # list (per output stream) of lists of
-                                    # (queue, strategy, index, k)
+        self.ports = ports
         self.batch = batch
         self.jumbo = jumbo
         self.state = state
+        self.kernel = kernel
+        self.in_q = in_q
         self.expected_poisons = expected_poisons
+        self.source = source
+        self.stop_event = stop
+        self.seed = seed
         self.lat_sink = lat_sink
-        self._buf: Dict[int, List[Tuple[np.ndarray, float]]] = {}
-        self._rr: Dict[int, int] = {}       # independent counter per stream
+        self.on_delivered = on_delivered
 
-    def _flush(self, stream, consumer_idx, arr, t0):
-        q, _, _, _ = self.outs[stream][consumer_idx]
-        q.put((arr, t0))
-
-    def _emit(self, stream, arr, t0):
-        if arr is None or len(arr) == 0:
-            return
-        consumers = self.outs[stream]
-        if not consumers:
-            return
-        strategy = consumers[0][1]
-        k = len(consumers)
-        if strategy == "key":
-            keys = (arr if arr.ndim == 1 else arr[:, 0]).astype(np.int64)
-            for i in range(k):
-                part = arr[keys % k == i]
-                if len(part):
-                    self._emit_to(stream, i, part, t0)
-        else:                        # shuffle: whole jumbo round-robin
-            rr = self._rr.get(stream, 0)
-            self._emit_to(stream, rr % k, arr, t0)
-            self._rr[stream] = rr + 1
-
-    def _emit_to(self, stream, i, arr, t0):
-        if not self.jumbo:
-            for row in arr:          # per-tuple insertion (no jumbo)
-                self._flush(stream, i, np.asarray([row]), t0)
-            return
-        key = (stream, i)
-        buf = self._buf.setdefault(key, [])
-        buf.append((arr, t0))
-        total = sum(len(a) for a, _ in buf)
-        if total >= self.batch:
-            merged = np.concatenate([a for a, _ in buf])
-            self._flush(stream, i, merged, buf[0][1])
-            buf.clear()
+    @property
+    def is_spout(self) -> bool:
+        return self.source is not None
 
     def run(self):
+        if self.is_spout:
+            self._run_spout()
+        else:
+            self._run_task()
+
+    def _run_spout(self):
+        b = 0
+        while not self.stop_event.is_set():
+            arr = self.source(self.batch, self.seed + b)
+            b += 1
+            t0 = time.perf_counter()
+            # logical fan-out: every output stream carries the same batch
+            self._dispatch([arr] * len(self.ports), t0)
+        self._drain()
+        if self.on_delivered is not None:
+            # tuples that entered the dataflow: max over streams — fan-out
+            # duplicates tuples, it does not multiply them — and only what
+            # was actually enqueued (stop can interrupt a keyed delivery
+            # between partitions).  Counted before the blocking poison puts
+            # so a stalled consumer cannot zero the tally.
+            self.on_delivered(max((p.tuples_entered() for p in self.ports),
+                                  default=0))
+        self._poison()
+
+    def _run_task(self):
         poisons = 0
         while True:
             item = self.in_q.get()
@@ -101,45 +187,86 @@ class _Task(threading.Thread):
                 poisons += 1
                 if poisons < self.expected_poisons:
                     continue         # wait for every producer replica to end
-                # drain buffers, propagate poison once per consumer queue
-                for (stream, i), buf in self._buf.items():
-                    if buf:
-                        merged = np.concatenate([a for a, _ in buf])
-                        self._flush(stream, i, merged, buf[0][1])
-                self._buf.clear()
-                for consumers in self.outs:
-                    for q, _, _, _ in consumers:
-                        q.put(_POISON)
+                self._shutdown()
                 return
             arr, t0 = item
             if self.lat_sink is not None:
                 self.lat_sink.append(time.perf_counter() - t0)
-            out = self.kernel(arr, self.state)
-            for stream, oarr in enumerate(out):
-                self._emit(stream, oarr, t0)
+            self._dispatch(self.kernel(arr, self.state), t0)
+
+    # -- the one emit path -------------------------------------------------
+    def _dispatch(self, outs, t0: float) -> None:
+        if len(outs) != len(self.ports):
+            raise ValueError(
+                f"{self.name}: kernel returned {len(outs)} output streams "
+                f"for {len(self.ports)} declared consumers")
+        for port, arr in zip(self.ports, outs):
+            if arr is None or len(arr) == 0:
+                continue
+            for j, part in port.route.split(arr):
+                self._deliver(port, j, part, t0)
+
+    def _deliver(self, port: _OutPort, j: int, part: np.ndarray,
+                 t0: float) -> None:
+        if not self.jumbo:
+            for row in part:             # per-tuple insertion (Fig. 16)
+                self._put(port, j, np.asarray([row]), t0)
+            return
+        for jumbo, jt0 in port.buffers[j].add(part, t0):
+            self._put(port, j, jumbo, jt0)
+
+    def _put(self, port: _OutPort, j: int, arr: np.ndarray,
+             t0: float) -> None:
+        q = port.queues[j]
+        if self.is_spout:                # interruptible put: stop wins
+            while True:
+                try:
+                    q.put((arr, t0), timeout=0.02)
+                    break
+                except queue.Full:
+                    if self.stop_event.is_set():
+                        return           # dropped, never counted
+        else:                            # task: block (backpressure)
+            q.put((arr, t0))
+        port.delivered[j] += len(arr)
+
+    def _shutdown(self):
+        self._drain()
+        self._poison()
+
+    def _drain(self):
+        # flush partially-filled jumbo lanes
+        for port in self.ports:
+            for j, buf in enumerate(port.buffers):
+                out = buf.drain()
+                if out is not None:
+                    self._put(port, j, *out)
+
+    def _poison(self):
+        # once per consumer queue per producer replica
+        for port in self.ports:
+            for q in port.queues:
+                q.put(_POISON)
 
 
 def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             batch: int = 256, duration: float = 1.0, jumbo: bool = True,
             queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
-            seed: int = 0) -> RuntimeResult:
+            seed: int = 0, vectorized: bool = True) -> RuntimeResult:
     """Execute ``app`` for ``duration`` seconds and return measured stats.
 
-    Partition strategies come from the app's Topology declaration
-    (``app.partition``); the ``partition`` argument overrides per operator.
+    Partition strategies and key extractors come from the app's Topology
+    declaration, compiled once into routes (:mod:`repro.streaming.routing`);
+    the ``partition`` argument overrides per operator.  ``vectorized=False``
+    selects the seed's per-mask keyed split (kept for the
+    ``bench_runtime.py`` A/B comparison only).
     """
     lg = app.graph
     parallelism = dict(parallelism or {})
+    validate_operator_names(lg, parallelism, "parallelism")
     for name in lg.operators:
         parallelism.setdefault(name, 1)
-    strategies = dict(getattr(app, "partition", None) or {})
-    strategies.update(partition or {})
-    partition = strategies
-    for op_name, strat in partition.items():
-        if strat not in ("shuffle", "key"):
-            raise ValueError(f"operator {op_name!r}: unknown partition "
-                             f"strategy {strat!r} (choose 'shuffle' or "
-                             "'key')")
+    routes = compile_routes(app, partition=partition)
 
     # one input queue per non-spout replica
     in_qs: Dict[Tuple[str, int], queue.Queue] = {}
@@ -152,94 +279,49 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         name: [dict() for _ in range(parallelism[name])]
         for name in lg.operators}
     latencies: List[float] = []
-
-    tasks: List[_Task] = []
-    for name, spec in lg.operators.items():
-        if spec.is_spout:
-            continue
-        cons_ops = lg.consumers(name)
-        n_producer_units = sum(parallelism[p] for p in lg.producers(name))
-        for i in range(parallelism[name]):
-            outs = []
-            for stream, cop in enumerate(cons_ops):
-                strat = partition.get(cop, "shuffle")
-                outs.append([(in_qs[(cop, j)], strat, j, parallelism[cop])
-                             for j in range(parallelism[cop])])
-            is_sink = not cons_ops
-            t = _Task(f"{name}#{i}", app.kernels[name], in_qs[(name, i)],
-                      outs, batch, jumbo, states[name][i],
-                      expected_poisons=max(n_producer_units, 1),
-                      lat_sink=latencies if is_sink else None)
-            tasks.append(t)
-
     stop = threading.Event()
     spout_counts = [0]
     count_lock = threading.Lock()
-    spout_threads = []
+
+    def add_spout_count(n: int) -> None:
+        with count_lock:
+            spout_counts[0] += n
+
+    def make_ports(name: str) -> List[_OutPort]:
+        return [
+            _OutPort(routes.route(name, cop).bind(parallelism[cop],
+                                                  vectorized=vectorized),
+                     [in_qs[(cop, j)] for j in range(parallelism[cop])],
+                     batch)
+            for cop in lg.consumers(name)]
+
+    spouts: List[Executor] = []
+    tasks: List[Executor] = []
     for name, spec in lg.operators.items():
-        if not spec.is_spout:
-            continue
-        cons_ops = lg.consumers(name)
+        is_sink = not lg.consumers(name)
+        n_producer_units = sum(parallelism[p] for p in lg.producers(name))
         for i in range(parallelism[name]):
-
-            def spout_loop(name=name, cons_ops=cons_ops, i=i):
-                source = app.source_for(name) if hasattr(app, "source_for") \
-                    else app.make_source
-                # independent round-robin counter per consumer op: a shared
-                # counter advanced once per loop sends every consumer the
-                # same index stream, skewing multi-consumer topologies
-                # (e.g. Linear Road's dispatcher fan-out)
-                rr = {cop: 0 for cop in cons_ops}
-                b = 0
-                while not stop.is_set():
-                    arr = source(batch, seed + 7919 * i + b)
-                    b += 1
-                    t0 = time.perf_counter()
-                    # tuples that entered the dataflow this batch: stop can
-                    # interrupt a keyed delivery between key partitions, so
-                    # count what was actually enqueued (max over consumers —
-                    # fan-out duplicates tuples, it does not multiply them)
-                    batch_delivered = 0
-                    for cop in cons_ops:
-                        k = parallelism[cop]
-                        if partition.get(cop, "shuffle") == "key":
-                            keys = (arr if arr.ndim == 1 else
-                                    arr[:, 0]).astype(np.int64)
-                            targets = [(j, arr[keys % k == j])
-                                       for j in range(k)]
-                            targets = [(j, p) for j, p in targets if len(p)]
-                        else:
-                            targets = [(rr[cop] % k, arr)]
-                            rr[cop] += 1
-                        cop_delivered = 0
-                        for j, part in targets:
-                            q = in_qs[(cop, j)]
-                            while not stop.is_set():      # backpressure
-                                try:
-                                    q.put((part, t0), timeout=0.02)
-                                    cop_delivered += len(part)
-                                    break
-                                except queue.Full:
-                                    continue
-                        batch_delivered = max(batch_delivered, cop_delivered)
-                    if batch_delivered:
-                        with count_lock:
-                            spout_counts[0] += batch_delivered
-                for cop in cons_ops:
-                    for j in range(parallelism[cop]):
-                        in_qs[(cop, j)].put(_POISON)
-
-            th = threading.Thread(target=spout_loop, daemon=True)
-            spout_threads.append(th)
+            if spec.is_spout:
+                spouts.append(Executor(
+                    f"{name}#{i}", make_ports(name), batch, jumbo,
+                    states[name][i], source=app.source_for(name), stop=stop,
+                    seed=seed + 7919 * i, on_delivered=add_spout_count))
+            else:
+                tasks.append(Executor(
+                    f"{name}#{i}", make_ports(name), batch, jumbo,
+                    states[name][i], kernel=app.kernels[name],
+                    in_q=in_qs[(name, i)],
+                    expected_poisons=max(n_producer_units, 1),
+                    lat_sink=latencies if is_sink else None))
 
     for t in tasks:
         t.start()
     t_start = time.perf_counter()
-    for th in spout_threads:
+    for th in spouts:
         th.start()
     time.sleep(duration)
     stop.set()
-    for th in spout_threads:
+    for th in spouts:
         th.join(timeout=5.0)
     for t in tasks:
         t.join(timeout=5.0)

@@ -28,6 +28,8 @@ import numpy as np
 from repro.core import ExecutionGraph, MachineSpec
 from repro.core.perfmodel import UNPLACED
 
+from .routing import RoutingTable, unit_delivery
+
 
 @dataclasses.dataclass
 class FluidResult:
@@ -138,10 +140,11 @@ class DesResult:
 
 
 def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
-                 placement: List[int], input_rate: float,
+                 placement: List[int], input_rate,
                  batch: int = 64, horizon: float = 0.02,
                  queue_cap: int = 64, warmup_frac: float = 0.3,
-                 seed: int = 0) -> DesResult:
+                 seed: int = 0,
+                 routes: Optional[RoutingTable] = None) -> DesResult:
     """Simulate ``horizon`` seconds of plan execution.
 
     Jumbo tuples of ``batch`` tuples flow through bounded FCFS queues.  CPU
@@ -150,12 +153,36 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     Full queues drop the jumbo (a stand-in for backpressure; the reported R
     under drops equals the backpressured stable rate for these feed-forward
     graphs).
+
+    Tuple delivery follows the compiled routing tables
+    (:func:`repro.streaming.routing.unit_delivery` — selectivity x partition
+    strategy x fan-out), the same substrate the planner and the threaded
+    runtime consume; ``routes`` defaults to the table the graph was compiled
+    with.  ``input_rate`` is the external ingress rate: a float feeds every
+    spout operator at that rate; a ``{spout_op: rate}`` mapping feeds each
+    spout its own stream (multi-spout apps, e.g. Linear Road's
+    historical-query source).
     """
     rng = np.random.default_rng(seed)
     n = graph.n_units
     sock = list(placement)
     te = [r.spec.exec_s for r in graph.replicas]
     group = [r.group for r in graph.replicas]
+    delivery = unit_delivery(graph, routes)
+    if isinstance(input_rate, dict):
+        spout_ops = set(graph.logical.spouts())
+        unknown = sorted(set(input_rate) - spout_ops)
+        if unknown:
+            raise ValueError(
+                f"input_rate names non-spout operators {unknown} "
+                f"(spouts: {sorted(spout_ops)}); spouts absent from the "
+                "mapping are fed at rate 0")
+
+    def spout_rate(v: int) -> float:
+        op = graph.replicas[v].op
+        rate = input_rate.get(op, 0.0) if isinstance(input_rate, dict) \
+            else input_rate
+        return rate * group[v] / graph.parallelism[op] / batch  # jumbos/sec
 
     tf = [[0.0] * n for _ in range(n)]
     for u, v, _ in graph.edges:
@@ -219,10 +246,9 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
             emit_t0[key] = t0
         emit_acc[key] = acc
 
-    # spout arrivals: deterministic at input_rate per spout unit
+    # spout arrivals: deterministic at the per-spout ingress rate
     for v in graph.spout_units():
-        k = graph.parallelism[graph.replicas[v].op]
-        rate = input_rate * group[v] / k / batch      # jumbos/sec
+        rate = spout_rate(v)
         if rate > 0:
             push(rng.uniform(0, 1.0 / rate), "arrive", v, 0.0)
 
@@ -231,9 +257,7 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
         if now > horizon:
             break
         if kind == "arrive":
-            k = graph.parallelism[graph.replicas[v].op]
-            rate = input_rate * group[v] / k / batch
-            push(now + 1.0 / rate, "arrive", v, 0.0)
+            push(now + 1.0 / spout_rate(v), "arrive", v, 0.0)
             if len(queues[v]) >= queue_cap:
                 drops += 1
             else:
@@ -243,12 +267,11 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
             busy[v] -= 1
             if sock[v] != UNPLACED:
                 sock_busy[sock[v]] -= 1
-            rep = graph.replicas[v]
-            if not graph.out_edges[v]:                # sink
+            if not delivery[v]:                       # sink
                 if now >= warm:
                     sink_count += batch
                     lat.append(now - t0)
-            for cv, w in graph.out_edges[v]:
+            for cv, w in delivery[v]:
                 deliver(v, cv, batch * w, t0, now)
             try_start(v, now)
 
@@ -264,18 +287,25 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
 
 def measure_capacity(graph: ExecutionGraph, machine: MachineSpec,
                      placement: List[int], batch: int = 64,
-                     horizon: float = 0.02, seed: int = 0) -> DesResult:
+                     horizon: float = 0.02, seed: int = 0,
+                     routes: Optional[RoutingTable] = None,
+                     **des_kw) -> DesResult:
     """Paper §6.1 protocol: raise I to saturation and report the stable rate.
 
     The fluid solver gives the saturation estimate; the DES is then driven at
     1.05x that rate (slightly over-feeding, as the paper does) and the
-    observed sink rate is the measured capacity.
+    observed sink rate is the measured capacity.  Each spout operator is fed
+    its *own* fluid saturation rate, so multi-spout apps (e.g. Linear Road's
+    historical-query stream) are not cross-over-fed.
     """
     sat = fluid_solve(graph, machine, placement, input_rate=None)
     # convert sink rate back to required ingress via the fluid spout rates
-    spout_rate = sum(sat.processed[v] for v in graph.spout_units())
-    if spout_rate <= 0:
+    rates: Dict[str, float] = {}
+    for v in graph.spout_units():
+        op = graph.replicas[v].op
+        rates[op] = rates.get(op, 0.0) + sat.processed[v] * 1.05
+    if sum(rates.values()) <= 0:
         return des_simulate(graph, machine, placement, 1.0, batch, horizon,
-                            seed=seed)
-    return des_simulate(graph, machine, placement, spout_rate * 1.05,
-                        batch, horizon, seed=seed)
+                            seed=seed, routes=routes, **des_kw)
+    return des_simulate(graph, machine, placement, rates, batch, horizon,
+                        seed=seed, routes=routes, **des_kw)

@@ -232,6 +232,8 @@ def test_plan_optimizer_variants_produce_valid_plans():
 
 def test_manual_plan_requires_full_placement():
     job = Job(word_count())
+    with pytest.raises(TypeError, match="requires a placement"):
+        job.plan(server_a(), optimizer="manual")
     with pytest.raises(ValueError, match="manual placement"):
         job.plan(server_a(), optimizer="manual", placement=[0, 0])
     plan = job.plan(server_a(), optimizer="manual",
@@ -267,6 +269,92 @@ def test_planning_only_job_cannot_execute():
     assert plan.estimate().throughput >= 0.0
     with pytest.raises(TopologyError, match="planning-only"):
         plan.execute(duration=0.05)
+
+
+# ---------------------------------------------------------------------------
+# plan caching + elastic replan
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_returns_same_object():
+    from repro.core import subset
+    job = Job(word_count())
+    m = server_a()
+    p1 = job.plan(m, optimizer="ff")
+    p2 = job.plan(m, optimizer="ff")
+    assert p1 is p2                            # cache hit
+    assert job.plan(m, optimizer="ff", cache=False) is not p1
+    assert job.plan(m, optimizer="rr") is not p1
+    assert job.plan(subset(m, 4), optimizer="ff") is not p1
+
+
+def test_plan_cache_keeps_settings_apart():
+    job = Job(word_count())
+    m = server_a()
+    a = job.plan(m, optimizer="bnb", parallelism={"splitter": 2},
+                 max_nodes=500)
+    b = job.plan(m, optimizer="bnb", parallelism={"splitter": 3},
+                 max_nodes=500)
+    assert a is not b
+    assert a is job.plan(m, optimizer="bnb", parallelism={"splitter": 2},
+                         max_nodes=500)
+
+
+def test_random_plans_never_cached():
+    job = Job(word_count())
+    m = server_a()
+    assert job.plan(m, optimizer="random", seed=3) is not \
+        job.plan(m, optimizer="random", seed=3)
+
+
+def test_plan_replan_mirrors_elastic_path():
+    """Pod-loss analogue: replan the same optimizer+settings on the
+    surviving (smaller) machine; replication is re-derived, not copied."""
+    from repro.core import subset
+    job = Job(word_count())
+    plan = job.plan(server_a(), optimizer="rlas", compress_ratio=5,
+                    bestfit=True, max_nodes=5000)
+    small = job.plan(subset(server_a(), 2), optimizer="rlas",
+                     compress_ratio=5, bestfit=True, max_nodes=5000,
+                     cache=False)
+    replanned = plan.replan(subset(server_a(), 2))
+    assert replanned.machine.n_sockets == 2
+    assert replanned.optimizer == "rlas"
+    assert replanned.R == pytest.approx(small.R)
+    assert replanned.R < plan.R                 # degraded, gracefully
+    # replan lands in the job's cache
+    assert plan.replan(subset(server_a(), 2)) is replanned
+
+
+def test_replan_manual_requires_fresh_placement():
+    from repro.core import subset
+    job = Job(word_count())
+    n = len(word_count().graph.operators)
+    plan = job.plan(server_a(), optimizer="manual", placement=[7] * n)
+    with pytest.raises(ValueError, match="machine-specific placement"):
+        plan.replan(subset(server_a(), 2))
+    ok = plan.replan(subset(server_a(), 2), placement=[1] * n)
+    assert ok.machine.n_sockets == 2
+
+
+def test_manual_placement_socket_range_checked():
+    job = Job(word_count())
+    n = len(word_count().graph.operators)
+    with pytest.raises(ValueError, match="names sockets"):
+        job.plan(server_a(), optimizer="manual", placement=[11] * n)
+
+
+def test_plan_rejects_unknown_parallelism_names():
+    with pytest.raises(ValueError, match="unknown operators"):
+        Job(word_count()).plan(server_a(), optimizer="ff",
+                               parallelism={"spliter": 4})
+    with pytest.raises(ValueError, match="unknown operators"):
+        run_app(word_count(), {"spliter": 4}, duration=0.05)
+
+
+def test_fluid_rejects_des_only_parameters(wc_plan):
+    with pytest.raises(TypeError, match="DES-only"):
+        wc_plan.simulate(backend="fluid", horizon=0.5)
+    assert wc_plan.simulate(backend="fluid").throughput > 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,395 @@
+"""The routing substrate contract: Route.split semantics, vectorized vs
+per-mask parity, and the runtime / DES / rate-model agreement on per-edge
+tuple conservation under key/shuffle/broadcast and selectivity — the
+kernel-level contract check the ROADMAP asked for."""
+import numpy as np
+import pytest
+
+from repro.core import ExecutionGraph, evaluate, server_a
+from repro.streaming.api import Topology, TopologyError
+from repro.streaming.apps import ALL_APPS
+from repro.streaming.routing import (PARTITION_STRATEGIES, RouteSpec,
+                                     compile_routes, extract_keys,
+                                     split_by_key, split_by_key_masks,
+                                     unit_delivery)
+from repro.streaming.runtime import run_app
+from repro.streaming.simulator import des_simulate
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _batch(rng, rows, width):
+    if width == 0:
+        return rng.integers(0, 97, size=rows).astype(np.int64)
+    return rng.integers(0, 97, size=(rows, width)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Route.split semantics
+# ---------------------------------------------------------------------------
+
+def test_shuffle_round_robins_whole_batches():
+    route = RouteSpec("a", "b", 0, "shuffle").bind(3)
+    targets = [route.split(np.arange(4))[0][0] for _ in range(7)]
+    assert targets == [0, 1, 2, 0, 1, 2, 0]
+    # the whole batch lands on one replica per emit
+    assert all(len(route.split(np.arange(4))) == 1 for _ in range(3))
+
+
+@pytest.mark.parametrize("rows,width,k", [(1, 0, 2), (64, 0, 3), (256, 2, 4),
+                                          (1000, 3, 7), (17, 1, 5)])
+def test_key_split_conserves_and_separates(rows, width, k):
+    rng = np.random.default_rng(rows * 31 + k)
+    arr = _batch(rng, rows, width)
+    route = RouteSpec("a", "b", 0, "key").bind(k)
+    parts = route.split(arr)
+    # conservation: every tuple appears exactly once across replicas
+    assert sum(len(p) for _, p in parts) == rows
+    rebuilt = np.concatenate([p.reshape(len(p), -1) for _, p in parts])
+    orig = np.sort(arr.reshape(rows, -1), axis=0)
+    assert np.array_equal(np.sort(rebuilt, axis=0), orig)
+    # separation: each replica sees only its own key residues
+    for j, p in parts:
+        assert np.all(extract_keys(p, None) % k == j)
+
+
+@pytest.mark.parametrize("rows,width,k", [(64, 0, 2), (256, 2, 4),
+                                          (999, 1, 6), (8, 4, 8)])
+def test_key_split_vectorized_matches_masks_exactly(rows, width, k):
+    """The argsort/bincount path must be row-for-row identical (same
+    replicas, same within-replica order) to the seed's per-mask path."""
+    rng = np.random.default_rng(rows + k)
+    arr = _batch(rng, rows, width)
+    keys = extract_keys(arr, None)
+    vec = split_by_key(arr, keys, k)
+    masks = split_by_key_masks(arr, keys, k)
+    assert [j for j, _ in vec] == [j for j, _ in masks]
+    for (_, a), (_, b) in zip(vec, masks):
+        assert np.array_equal(a, b)
+
+
+def test_broadcast_duplicates_to_every_replica():
+    arr = np.arange(10)
+    route = RouteSpec("a", "b", 0, "broadcast").bind(4)
+    parts = route.split(arr)
+    assert [j for j, _ in parts] == [0, 1, 2, 3]
+    for _, p in parts:
+        assert np.array_equal(p, arr)
+
+
+def test_key_by_column_and_callable():
+    rng = np.random.default_rng(0)
+    arr = rng.integers(0, 50, size=(128, 3)).astype(np.float64)
+    by_col = RouteSpec("a", "b", 0, "key", key_by=2).bind(4)
+    for j, p in by_col.split(arr):
+        assert np.all(p[:, 2].astype(np.int64) % 4 == j)
+    by_fn = RouteSpec("a", "b", 0, "key",
+                      key_by=lambda b: b[:, 0] + b[:, 1]).bind(3)
+    for j, p in by_fn.split(arr):
+        assert np.all((p[:, 0] + p[:, 1]).astype(np.int64) % 3 == j)
+
+
+def test_key_by_validation():
+    with pytest.raises(ValueError, match="1-D batch"):
+        extract_keys(np.arange(5), key_by=2)
+    with pytest.raises(ValueError, match="key extractor returned"):
+        extract_keys(np.arange(5), key_by=lambda b: np.arange(3))
+
+
+def test_fanout_one_short_circuits_every_strategy():
+    arr = np.arange(6)
+    for strategy in PARTITION_STRATEGIES:
+        parts = RouteSpec("a", "b", 0, strategy).bind(1).split(arr)
+        assert len(parts) == 1 and parts[0][0] == 0
+        assert parts[0][1] is arr          # zero-copy
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(rows=st.integers(1, 400), width=st.integers(0, 4),
+           k=st.integers(1, 9),
+           strategy=st.sampled_from(PARTITION_STRATEGIES),
+           seed=st.integers(0, 2**16))
+    def test_split_conservation_property(rows, width, k, strategy, seed):
+        rng = np.random.default_rng(seed)
+        arr = _batch(rng, rows, width)
+        parts = RouteSpec("a", "b", 0, strategy).bind(k).split(arr)
+        total = sum(len(p) for _, p in parts)
+        if strategy == "broadcast" and k > 1:
+            assert total == rows * k       # fan-out duplicates
+        else:
+            assert total == rows           # partitioning conserves
+        assert len({j for j, _ in parts}) == len(parts)
+
+
+# ---------------------------------------------------------------------------
+# one source of truth: table vs declaration vs planner vs DES
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(ALL_APPS))
+def test_routing_table_matches_declaration(name):
+    app = ALL_APPS[name]()
+    routes = compile_routes(app)
+    assert len(routes) == len(app.graph.edges)
+    for (u, v), spec in routes.items():
+        assert spec.selectivity == pytest.approx(app.graph.sel(u, v))
+        assert spec.strategy == app.partition.get(v, "shuffle")
+        assert spec.key_by == app.key_by.get(v)
+    # output-stream order == consumer declaration order (kernel contract)
+    for u in app.graph.operators:
+        assert [r.consumer for r in routes.out_routes(u)] == \
+            app.graph.consumers(u)
+
+
+@pytest.mark.parametrize("name", list(ALL_APPS))
+def test_planner_weights_and_des_delivery_agree(name):
+    """The ExecutionGraph edge weights (rate model) and the DES delivery
+    tables must be the same numbers, both derived from the compiled routes —
+    and per logical edge they must sum to the declared selectivity."""
+    app = ALL_APPS[name]()
+    routes = compile_routes(app)
+    par = {op: 1 + (i % 3) for i, op in enumerate(app.graph.operators)}
+    g = ExecutionGraph(app.graph, par, compress_ratio=2, routes=routes)
+    delivery = unit_delivery(g)
+    for u in range(g.n_units):
+        assert sorted(delivery[u]) == sorted(g.out_edges[u])
+    for (pu, cv), spec in routes.items():
+        for ui in g.units_of(pu):
+            out = sum(w for vi, w in g.out_edges[ui]
+                      if g.replicas[vi].op == cv)
+            assert out == pytest.approx(spec.selectivity), (pu, cv)
+
+
+def test_broadcast_multiplies_planner_weight():
+    app = (Topology("bc")
+           .spout("s", lambda b, s: np.arange(b), exec_ns=100.0)
+           .op("fan", lambda b, s: [b], exec_ns=100.0,
+               partition="broadcast")
+           .sink("sink", lambda b, s: [], exec_ns=50.0)
+           .build())
+    routes = compile_routes(app)
+    g = ExecutionGraph(app.graph, {"s": 1, "fan": 3, "sink": 1},
+                       routes=routes)
+    (ui,) = g.units_of("s")
+    # each fan replica receives the FULL stream: total inflow = 3x
+    weights = [w for vi, w in g.out_edges[ui] if g.replicas[vi].op == "fan"]
+    assert weights == pytest.approx([1.0, 1.0, 1.0])
+    ev = evaluate(g, server_a(), [0] * g.n_units, input_rate=1e5)
+    assert sum(ev.r_in[v] for v in g.units_of("fan")) == pytest.approx(3e5)
+
+
+def test_broadcast_end_to_end_runtime():
+    def k_seen(batch, state):
+        state["n"] = state.get("n", 0) + len(batch)
+        return []
+
+    app = (Topology("bc")
+           .spout("s", lambda b, s: np.arange(b), exec_ns=100.0)
+           .op("fan", k_seen, exec_ns=100.0, partition="broadcast")
+           .build())
+    res = run_app(app, {"fan": 3}, batch=64, duration=0.25)
+    assert res.spout_tuples > 0
+    # every replica saw the whole stream (a lane can lose at most its
+    # in-flight jumbos when stop interrupts the shutdown drain)
+    for st_ in res.states["fan"]:
+        assert res.spout_tuples - 2 * 64 <= st_.get("n", 0) \
+            <= res.spout_tuples
+
+
+# ---------------------------------------------------------------------------
+# the three execution layers agree on per-edge tuple conservation
+# ---------------------------------------------------------------------------
+
+def _contract_app(sel=3, partition="key"):
+    """spout -> expand (selectivity `sel`) -> counter (keyed) -> sink."""
+    def k_expand(batch, state):
+        return [np.repeat(batch, sel)]
+
+    def k_count(batch, state):
+        counts = state.setdefault("counts", np.zeros(97, np.int64))
+        np.add.at(counts, batch % 97, 1)
+        return [batch]
+
+    def k_sink(batch, state):
+        state["seen"] = state.get("seen", 0) + len(batch)
+        return []
+
+    return (Topology("contract")
+            .spout("spout", lambda b, s: np.random.default_rng(s)
+                   .integers(0, 97, size=b), exec_ns=300.0)
+            .op("expand", k_expand, exec_ns=400.0, selectivity=float(sel))
+            .op("counter", k_count, exec_ns=300.0, partition=partition)
+            .sink("sink", k_sink, exec_ns=100.0)
+            .build())
+
+
+@pytest.mark.parametrize("partition", ["shuffle", "key"])
+def test_runtime_des_model_tuple_conservation(partition):
+    sel = 3
+    app = _contract_app(sel, partition)
+    routes = compile_routes(app)
+    par = {"spout": 1, "expand": 1, "counter": 2, "sink": 1}
+
+    # (1) threaded runtime: counted == sel x spout, sink == counted
+    res = run_app(app, par, batch=64, duration=0.3)
+    counted = sum(int(st_["counts"].sum()) for st_ in res.states["counter"])
+    assert counted == sel * res.spout_tuples
+    assert res.sink_tuples == sum(st_.get("seen", 0)
+                                  for st_ in res.states["sink"])
+
+    # (2) rate model: processed rates scale by the same selectivity
+    g = ExecutionGraph(app.graph, par, routes=routes)
+    ev = evaluate(g, server_a(), [0] * g.n_units, input_rate=1e5)
+    spout_rate = sum(ev.processed[v] for v in g.units_of("spout"))
+    counter_rate = sum(ev.processed[v] for v in g.units_of("counter"))
+    assert counter_rate == pytest.approx(sel * spout_rate)
+
+    # (3) DES: under-fed, the sink rate is sel x ingress
+    des = des_simulate(g, server_a(), [0] * g.n_units, input_rate=1e5,
+                       batch=64, horizon=0.05)
+    assert des.R == pytest.approx(sel * 1e5, rel=0.2)
+
+
+def test_non_first_stream_selectivity_reaches_all_layers():
+    """The ROADMAP contract hole: an edge_selectivity override on a
+    producer's SECOND output stream must shape planner weights and DES
+    delivery exactly like the first one."""
+    t = (Topology("two-streams")
+         .spout("s", lambda b, sd: np.arange(b, dtype=np.int64),
+                exec_ns=200.0)
+         .op("split", lambda b, st_: [b, np.repeat(b, 2)], exec_ns=200.0)
+         .op("a", lambda b, st_: [b], inputs={"split": 1.0}, exec_ns=200.0)
+         .op("b", lambda b, st_: [b], inputs={"split": 2.0}, exec_ns=200.0))
+    app = t.build()
+    routes = compile_routes(app)
+    assert routes.sel("split", "a") == 1.0
+    assert routes.sel("split", "b") == 2.0
+    g = ExecutionGraph(app.graph, {"s": 1, "split": 1, "a": 2, "b": 2},
+                       routes=routes)
+    delivery = unit_delivery(g)
+    (ui,) = g.units_of("split")
+    to_b = sum(w for vi, w in delivery[ui] if g.replicas[vi].op == "b")
+    assert to_b == pytest.approx(2.0)
+    ev = evaluate(g, server_a(), [0] * g.n_units, input_rate=1e4)
+    assert sum(ev.r_in[v] for v in g.units_of("b")) == pytest.approx(2e4)
+
+
+# ---------------------------------------------------------------------------
+# runtime parity + declaration plumbing
+# ---------------------------------------------------------------------------
+
+def test_run_app_per_mask_mode_conserves_like_vectorized():
+    app = _contract_app(3, "key")
+    res = run_app(app, {"counter": 3}, batch=64, duration=0.25,
+                  vectorized=False)
+    counted = sum(int(st_["counts"].sum()) for st_ in res.states["counter"])
+    assert counted == 3 * res.spout_tuples
+
+
+def test_key_by_round_trips_through_runtime():
+    def k_count(batch, state):
+        counts = state.setdefault("counts", np.zeros(64, np.int64))
+        np.add.at(counts, batch[:, 1].astype(np.int64) % 64, 1)
+        return [batch]
+
+    def src(b, sd):
+        rng = np.random.default_rng(sd)
+        return rng.integers(0, 64, size=(b, 2)).astype(np.float64)
+
+    app = (Topology("kb")
+           .spout("s", src, exec_ns=200.0)
+           .op("count", k_count, exec_ns=200.0, partition="key", key_by=1)
+           .sink("sink", lambda b, st_: [], exec_ns=100.0)
+           .build())
+    assert app.key_by == {"count": 1}
+    res = run_app(app, {"count": 2}, batch=64, duration=0.25)
+    c0 = res.states["count"][0].get("counts", np.zeros(64))
+    c1 = res.states["count"][1].get("counts", np.zeros(64))
+    assert int(c0.sum() + c1.sum()) == res.spout_tuples
+    assert np.logical_and(c0 > 0, c1 > 0).sum() == 0   # keyed on column 1
+
+
+def test_topology_rejects_key_by_without_key_partition():
+    t = Topology("t").spout("s", lambda b, sd: np.arange(b), exec_ns=100.0)
+    with pytest.raises(TopologyError, match="key extractors require"):
+        t.op("a", lambda b, st_: [b], exec_ns=100.0, key_by=0)
+
+
+def test_compile_routes_rejects_unknown_names():
+    app = ALL_APPS["wc"]()
+    with pytest.raises(ValueError, match="unknown operator"):
+        compile_routes(app, partition={"ghost": "key"})
+    with pytest.raises(ValueError, match="unknown partition strategy"):
+        compile_routes(app, partition={"counter": "range"})
+
+
+def test_partition_override_away_from_key_drops_declared_extractor():
+    """Regression: run_app(partition=...) must be able to switch a keyed-by
+    operator to shuffle — the declared extractor is disabled, not an error."""
+    app = ALL_APPS["lr"]()                  # toll_history: key, key_by=0
+    routes = compile_routes(app, partition={"toll_history": "shuffle"})
+    spec = routes.route("hist_spout", "toll_history")
+    assert spec.strategy == "shuffle" and spec.key_by is None
+    res = run_app(app, {"toll_history": 2}, batch=128, duration=0.2,
+                  partition={"toll_history": "shuffle"})
+    assert res.sink_tuples > 0
+    # an extractor passed EXPLICITLY with a non-key strategy stays an error
+    with pytest.raises(ValueError, match="key extractors require"):
+        compile_routes(app, partition={"toll_history": "shuffle"},
+                       key_by={"toll_history": 0})
+
+
+def test_planning_only_topology_keeps_routing_semantics():
+    """Regression: a kernel-less Topology (planning-only Job) must still
+    hand its declared partition strategies to the planner."""
+    from repro.streaming.api import Job
+
+    def topo(with_kernels):
+        t = Topology("plan-only").spout(
+            "s", (lambda b, sd: np.arange(b)) if with_kernels else None,
+            exec_ns=500.0)
+        t.op("b", (lambda b, st_: [b]) if with_kernels else None,
+             exec_ns=1000.0, partition="broadcast")
+        return t
+
+    job = Job(topo(False))
+    assert job.app is None
+    assert job.routes.strategy("s", "b") == "broadcast"
+    r_logical = job.plan(server_a(), optimizer="ff",
+                         parallelism={"b": 4}).R
+    r_executable = Job(topo(True)).plan(server_a(), optimizer="ff",
+                                        parallelism={"b": 4}).R
+    assert r_logical == pytest.approx(r_executable)
+
+
+def test_measure_capacity_forwards_des_kwargs():
+    from repro.streaming.api import Job
+    plan = Job(ALL_APPS["wc"]()).plan(server_a(), optimizer="ff")
+    m = plan.simulate(input_rate=None, horizon=0.005, queue_cap=128,
+                      warmup_frac=0.2)
+    assert m.throughput > 0
+
+
+def test_executor_rejects_kernel_stream_count_mismatch():
+    import queue as queue_mod
+    from repro.streaming.runtime import Executor, _OutPort
+    route = RouteSpec("u", "v", 0, "shuffle").bind(1)
+    port = _OutPort(route, [queue_mod.Queue()], batch=8)
+    ex = Executor("u#0", [port, ], 8, True, {},
+                  kernel=lambda b, st_: [b, b], in_q=queue_mod.Queue(),
+                  expected_poisons=1)
+    with pytest.raises(ValueError, match="output streams"):
+        ex._dispatch(ex.kernel(np.arange(4), {}), 0.0)
+
+
+def test_des_rejects_rate_dict_with_unknown_spout():
+    app = ALL_APPS["lr"]()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    with pytest.raises(ValueError, match="non-spout operators"):
+        des_simulate(g, server_a(), [0] * g.n_units,
+                     input_rate={"hist": 2e4}, horizon=0.01)

@@ -121,6 +121,36 @@ def test_runtime_lr_multi_stream():
     assert res.latency_p99 >= res.latency_p50
 
 
+def test_runtime_lr_second_spout_feeds_history_keyed():
+    """LR's historical-query stream: its own source, keyed on vehicle id."""
+    app = linear_road()
+    assert set(app.graph.spouts()) == {"spout", "hist_spout"}
+    assert app.sources.keys() >= {"spout", "hist_spout"}
+    res = run_app(app, {"toll_history": 2}, batch=128, duration=0.4)
+    queries = sum(st.get("queries", 0) for st in res.states["toll_history"])
+    assert queries > 0
+    # keyed partitioning: the two history replicas own disjoint accounts
+    a0 = res.states["toll_history"][0].get("acct", np.zeros(1))
+    a1 = res.states["toll_history"][1].get("acct", np.zeros(1))
+    assert np.logical_and(a0 > 0, a1 > 0).sum() == 0
+    assert res.sink_tuples > 0
+
+
+def test_des_lr_multi_spout_per_source_rates():
+    """DES accepts per-spout ingress rates; history tuples reach the sink
+    with selectivity one while the position stream keeps its own rate."""
+    app = linear_road()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    rates = {"spout": 5e4, "hist_spout": 2e4}
+    des = des_simulate(g, server_a(), [0] * g.n_units, input_rate=rates,
+                       batch=64, horizon=0.05)
+    # sink rate = toll (0.9 + 0.9 via its two inputs) + notification (0.1)
+    # per position report, plus history at selectivity one
+    expected = 5e4 * (0.9 + 0.9 + 0.1) + 2e4
+    assert des.R == pytest.approx(expected, rel=0.25)
+
+
 def test_runtime_jumbo_beats_per_tuple():
     """Fig. 16 factor analysis, for real: jumbo tuples amortise queue costs."""
     app = word_count()
