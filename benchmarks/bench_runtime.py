@@ -1,11 +1,14 @@
-"""Runtime routing benchmark: seed per-mask keyed split vs the vectorized
-argsort/bincount path (ISSUE 2 tentpole), micro and end-to-end.
+"""Runtime routing + state benchmark: seed per-mask keyed split vs the
+vectorized argsort/bincount path (ISSUE 2 tentpole), and the managed
+keyed-state path vs seed dict-kernel state (ISSUE 3), micro and end-to-end.
 
 Micro rows time ``Route.split`` alone (us/call) over batch-size x fan-out
 grids; end-to-end rows run WC and LR on the real threaded runtime in both
-modes and report sink throughput and p99 latency.  Results append to the
-CSV row protocol (``name,us_per_call,derived``) and are recorded in
-``BENCH_streaming.json`` for the perf trajectory.
+modes and report sink throughput and p99 latency.  The state A/B runs WC
+with its declared ``StateSpec`` KeyedStore against a seed-style variant
+whose counter mutates a bare dict-held array, at identical profile.
+Results append to the CSV row protocol (``name,us_per_call,derived``) and
+are recorded in ``BENCH_streaming.json`` for the perf trajectory.
 
 Usage::
 
@@ -28,7 +31,10 @@ except ImportError:                        # python benchmarks/bench_runtime.py
     sys.path.insert(0, os.path.dirname(__file__))
     from common import emit
 
-from repro.streaming.apps import linear_road, word_count  # noqa: E402
+from repro.streaming.api import Topology  # noqa: E402
+from repro.streaming.apps import (WC_VOCAB,  # noqa: E402
+                                  WC_WORDS_PER_SENTENCE, linear_road,
+                                  word_count)
 from repro.streaming.routing import (RouteSpec, split_by_key,  # noqa: E402
                                      split_by_key_masks)
 from repro.streaming.runtime import run_app  # noqa: E402
@@ -80,6 +86,55 @@ def bench_app(name: str, make, parallelism: dict, batch: int,
     return out
 
 
+def _dict_word_count():
+    """The seed's WC: counter state is a bare dict-held array, mem_bytes a
+    hand-tuned constant — the baseline for the managed-state A/B."""
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, WC_VOCAB,
+                            size=(batch, WC_WORDS_PER_SENTENCE))
+
+    def k_counter(batch, state):
+        counts = state.setdefault("counts", np.zeros(WC_VOCAB, np.int64))
+        np.add.at(counts, batch, 1)
+        return [counts[batch].astype(np.int64)]
+
+    def k_sink(batch, state):
+        state["seen"] = state.get("seen", 0) + len(batch)
+        return []
+
+    return (
+        Topology("wc-dict")
+        .spout("spout", source, exec_ns=500.0, tuple_bytes=120.0)
+        .op("parser", lambda b, st: [b], exec_ns=350.0, tuple_bytes=120.0)
+        .op("splitter", lambda b, st: [b.reshape(-1)], exec_ns=1612.8,
+            tuple_bytes=120.0, mem_bytes=240.0, selectivity=10.0)
+        .op("counter", k_counter, exec_ns=612.3, tuple_bytes=32.0,
+            mem_bytes=96.0, partition="key")
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=32.0)
+        .build())
+
+
+def bench_state(batch: int, duration: float, repeat: int) -> dict:
+    """End-to-end WC throughput: declared KeyedStore vs seed dict state."""
+    out = {"batch": batch, "parallelism": {"splitter": 2, "counter": 4}}
+    run_app(word_count(), out["parallelism"], batch=batch,
+            duration=min(duration, 0.2))              # warm threads
+    for label, make in [("dict", _dict_word_count), ("managed", word_count)]:
+        thr = []
+        for r in range(repeat):
+            res = run_app(make(), out["parallelism"], batch=batch,
+                          duration=duration, seed=300 + r)
+            thr.append(res.throughput)
+        out[label] = {"throughput": round(statistics.median(thr), 1)}
+        emit(f"state_wc_{label}_b{batch}", duration * 1e6,
+             f"{out[label]['throughput']:.0f}tps")
+    out["speedup"] = round(out["managed"]["throughput"] /
+                           max(out["dict"]["throughput"], 1e-9), 3)
+    emit(f"state_wc_speedup_b{batch}", 0.0, f"{out['speedup']:.3f}x")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -110,6 +165,7 @@ def main(argv=None) -> dict:
                  "repeat": repeat, "smoke": bool(args.smoke)},
         "micro": micro,
         "apps": apps,
+        "state": bench_state(256, duration, repeat),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

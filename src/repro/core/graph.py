@@ -28,6 +28,13 @@ class OperatorSpec:
     ``mem_bytes``  — M, memory traffic per processed tuple (bytes) charged
                    against the local-bandwidth budget B.
     ``selectivity`` — output tuples emitted per input tuple processed.
+    ``state_bytes`` — the share of ``mem_bytes`` attributable to *declared
+                   operator state* (``repro.streaming.state.StateSpec``):
+                   when an operator declares managed state, its topology
+                   derives ``mem_bytes = tuple_bytes + state_bytes`` from
+                   the declaration instead of a hand-tuned constant, and
+                   the model reports the state share separately
+                   (``PlanEval.state_usage``).
     """
 
     name: str
@@ -36,6 +43,7 @@ class OperatorSpec:
     mem_bytes: float = 64.0
     selectivity: float = 1.0
     is_spout: bool = False
+    state_bytes: float = 0.0
 
     @property
     def exec_s(self) -> float:

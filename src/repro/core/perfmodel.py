@@ -52,6 +52,9 @@ class PlanEval:
     chan_usage: np.ndarray            # (n,n) cross-socket bytes/s
     bottlenecks: Dict[str, float]     # logical op -> max oversupply ratio
     over_supplied: np.ndarray         # per-unit bool
+    state_usage: Optional[np.ndarray] = None  # per-socket bytes/s from
+    # declared operator state (OperatorSpec.state_bytes) — the share of
+    # mem_usage that managed keyed/broadcast/window state accounts for
 
     def summary(self) -> str:
         return (f"R={self.R:,.0f} tuples/s feasible={self.feasible} "
@@ -141,6 +144,7 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
     ns = machine.n_sockets
     cpu = np.zeros(ns)
     mem = np.zeros(ns)
+    state_mem = np.zeros(ns)
     chan = np.zeros((ns, ns))
     violations: List[str] = []
     for v in range(n):
@@ -152,6 +156,7 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
         rep = graph.replicas[v]
         cpu[s] += util[v]
         mem[s] += processed[v] * rep.spec.mem_bytes
+        state_mem[s] += processed[v] * rep.spec.state_bytes
     for (u, v), rate in edge_fetch.items():
         su, sv = placement[u], placement[v]
         if su == UNPLACED or sv == UNPLACED or su == sv:
@@ -180,7 +185,8 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
     return PlanEval(R=R, r_in=r_in, processed=processed, utilization=util,
                     feasible=not violations, violations=violations,
                     cpu_usage=cpu, mem_usage=mem, chan_usage=chan,
-                    bottlenecks=bottlenecks, over_supplied=over)
+                    bottlenecks=bottlenecks, over_supplied=over,
+                    state_usage=state_mem)
 
 
 def bound_value(graph: ExecutionGraph, machine: MachineSpec,

@@ -9,7 +9,13 @@ Preferred entry point::
 from .api import (Job, Metrics, Plan, StreamingApp, Topology, TopologyError)
 from .routing import (PARTITION_STRATEGIES, Route, RouteSpec, RoutingTable,
                       compile_routes)
+from .state import (BroadcastTable, KeyedStore, OperatorState, StateSpec,
+                    ValueStore, WindowSpec, WindowState, merge_keyed,
+                    migrate_states, repartition_keyed)
 
 __all__ = ["Job", "Metrics", "Plan", "StreamingApp", "Topology",
            "TopologyError", "PARTITION_STRATEGIES", "Route", "RouteSpec",
-           "RoutingTable", "compile_routes"]
+           "RoutingTable", "compile_routes",
+           "BroadcastTable", "KeyedStore", "OperatorState", "StateSpec",
+           "ValueStore", "WindowSpec", "WindowState", "merge_keyed",
+           "migrate_states", "repartition_keyed"]

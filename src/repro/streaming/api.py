@@ -36,9 +36,11 @@ from repro.core import (ExecutionGraph, LogicalGraph, MachineSpec,
                         OperatorSpec, bnb_place, evaluate, rlas_optimize)
 from repro.core.baselines import ff_place, random_plan, rr_place
 
-from .routing import (KeyBy, PARTITION_STRATEGIES, RoutingTable,
-                      compile_routes, validate_key_extractor,
-                      validate_operator_names, validate_strategy)
+from .routing import (KeyBy, PARTITION_STRATEGIES, PartitionDecl,
+                      RoutingTable, compile_routes, declares_key,
+                      validate_key_extractor, validate_operator_names,
+                      validate_partition_decl)
+from .state import StateSpec
 
 _UNSET = object()
 
@@ -61,9 +63,11 @@ class StreamingApp:
     graph: LogicalGraph
     kernels: Dict[str, Callable]
     make_source: Optional[Callable[[int, int], np.ndarray]] = None
-    partition: Dict[str, str] = dataclasses.field(default_factory=dict)
+    partition: Dict[str, PartitionDecl] = dataclasses.field(
+        default_factory=dict)
     sources: Dict[str, Callable] = dataclasses.field(default_factory=dict)
     key_by: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
+    state: Dict[str, StateSpec] = dataclasses.field(default_factory=dict)
 
     def source_for(self, spout: str) -> Callable[[int, int], np.ndarray]:
         fn = self.sources.get(spout, self.make_source)
@@ -84,9 +88,10 @@ class _OpDecl:
     spec: OperatorSpec
     inputs: List[str]
     edge_selectivity: Dict[str, float]      # producer -> override
-    partition: str
+    partition: PartitionDecl
     source: Optional[Callable]
     key_by: Optional[KeyBy] = None
+    state: Optional[StateSpec] = None
 
 
 class Topology:
@@ -131,34 +136,67 @@ class Topology:
                          Mapping[str, float]] = None,
            exec_ns: float, tuple_bytes: float = 64.0,
            mem_bytes: Optional[float] = None, selectivity: float = 1.0,
-           partition: str = "shuffle",
-           key_by: Optional[KeyBy] = None) -> "Topology":
+           partition: PartitionDecl = "shuffle",
+           key_by: Optional[KeyBy] = None,
+           state: Optional[StateSpec] = None) -> "Topology":
         """Declare an operator.  ``kernel(batch, state) -> [out_batch, ...]``
         emits one array per declared *downstream* stream, in the order the
         consumers were declared.  ``partition`` is how *this* operator's
-        input stream is split over its replicas ("shuffle", "key" or
-        "broadcast"); ``key_by`` names the key for ``partition="key"`` — a
-        column index into 2-D batches or a callable ``batch -> keys``
-        (default: the historical hash-column-0 convention)."""
+        input streams are split over its replicas ("shuffle", "key" or
+        "broadcast", or a ``{producer: strategy}`` mapping for per-stream
+        strategies, e.g. a shuffled data stream plus a broadcast model-sync
+        stream); ``key_by`` names the key for keyed streams — a column index
+        into 2-D batches or a callable ``batch -> keys`` (default: the
+        historical hash-column-0 convention).
+
+        ``state`` declares *managed operator state*
+        (:class:`~repro.streaming.state.StateSpec`): the runtime builds the
+        store sharded by this operator's compiled route, the planner derives
+        ``mem_bytes = tuple_bytes + state.bytes_per_tuple()`` from it, and
+        ``Plan.replan`` can migrate it to a new replica set.  Declaring both
+        ``state`` and a hand-tuned ``mem_bytes`` is an error — the point of
+        the declaration is that the constant is derived, not asserted."""
         try:
-            validate_strategy(name, partition)
+            validate_partition_decl(name, partition)
             if key_by is not None:
-                if partition != "key":
+                if not declares_key(partition):
                     raise ValueError(
                         f"operator {name!r} declares key_by but partition="
                         f"{partition!r} (key extractors require "
                         "partition='key')")
                 validate_key_extractor(name, key_by)
+            if isinstance(partition, Mapping):
+                unknown = sorted(set(partition) -
+                                 set(self._normalize_inputs(name, inputs)[0]))
+                if unknown:
+                    raise ValueError(
+                        f"operator {name!r}: partition mapping names "
+                        f"{unknown}, which are not inputs of {name!r}")
+            if state is not None:
+                if mem_bytes is not None:
+                    raise ValueError(
+                        f"operator {name!r} declares both state= and "
+                        "mem_bytes=; mem_bytes is derived from the state "
+                        "declaration (tuple_bytes + state.bytes_per_tuple())")
+                if state.kind == "keyed" and not declares_key(partition):
+                    raise ValueError(
+                        f"operator {name!r} declares keyed state but "
+                        f"partition={partition!r}: a keyed store is sharded "
+                        "by the operator's keyed route (partition='key')")
         except ValueError as e:
             raise TopologyError(str(e)) from None
+        state_bytes = state.bytes_per_tuple() if state is not None else 0.0
+        if state is not None:
+            mem = tuple_bytes + state_bytes
+        else:
+            mem = tuple_bytes if mem_bytes is None else mem_bytes
         names, esel = self._normalize_inputs(name, inputs)
         self._declare(_OpDecl(
             name, kernel,
-            OperatorSpec(name, exec_ns, tuple_bytes,
-                         tuple_bytes if mem_bytes is None else mem_bytes,
-                         selectivity),
+            OperatorSpec(name, exec_ns, tuple_bytes, mem, selectivity,
+                         state_bytes=state_bytes),
             inputs=names, edge_selectivity=esel, partition=partition,
-            source=None, key_by=key_by))
+            source=None, key_by=key_by, state=state))
         return self
 
     def sink(self, name: str, kernel: Optional[Callable] = None,
@@ -201,8 +239,9 @@ class Topology:
         return list(self._decls)
 
     @property
-    def partition(self) -> Dict[str, str]:
-        """Declared non-default partition strategies (consumer -> strategy)."""
+    def partition(self) -> Dict[str, PartitionDecl]:
+        """Declared non-default partition strategies (consumer -> strategy
+        or per-producer mapping)."""
         return {n: d.partition for n, d in self._decls.items()
                 if d.partition != "shuffle"}
 
@@ -211,6 +250,12 @@ class Topology:
         """Declared key extractors (consumer -> column index or callable)."""
         return {n: d.key_by for n, d in self._decls.items()
                 if d.key_by is not None}
+
+    @property
+    def state(self) -> Dict[str, StateSpec]:
+        """Declared managed state (operator -> StateSpec)."""
+        return {n: d.state for n, d in self._decls.items()
+                if d.state is not None}
 
     @property
     def is_executable(self) -> bool:
@@ -293,7 +338,7 @@ class Topology:
         return StreamingApp(self.name, graph, kernels,
                             make_source=next(iter(sources.values())),
                             partition=self.partition, sources=sources,
-                            key_by=self.key_by)
+                            key_by=self.key_by, state=self.state)
 
 
 # ---------------------------------------------------------------------------
@@ -623,13 +668,22 @@ class Plan:
                 partition: Optional[Dict[str, str]] = None,
                 parallelism: Optional[Dict[str, int]] = None,
                 max_threads: Optional[int] = None, seed: int = 0,
-                vectorized: bool = True) -> Metrics:
+                vectorized: bool = True,
+                batches: Optional[int] = None,
+                initial_states: Optional[Dict[str, list]] = None) -> Metrics:
         """Run the plan on the real threaded runtime of this host.
 
         The plan's replication levels target the *modelled* machine; by
-        default they are scaled down proportionally to ``max_threads``
-        (2x host cores) so a 144-thread Server-A plan deploys sanely on a
-        laptop.  Pass ``parallelism`` to override entirely.
+        default they are scaled down to ``max_threads`` (2x host cores)
+        respecting the plan evaluation's per-operator core demand —
+        bottleneck operators keep their share instead of shrinking
+        uniformly.  Pass ``parallelism`` to override entirely.
+
+        ``batches`` runs each spout for exactly that many batches instead of
+        ``duration`` seconds (deterministic input — the replay mode behind
+        state-migration conservation checks); ``initial_states`` seeds
+        per-replica operator state, typically from
+        :func:`repro.streaming.state.migrate_states` after a ``replan``.
         """
         from .runtime import run_app
         if self.job.app is None:
@@ -639,20 +693,55 @@ class Plan:
         if parallelism is None:
             budget = max_threads if max_threads is not None else \
                 2 * (os.cpu_count() or 2)
-            parallelism = _scale_parallelism(self.parallelism, budget)
+            parallelism = _scale_parallelism(self.parallelism, budget,
+                                             self.eval, self.graph)
         rt = run_app(self.job.app, parallelism=parallelism, batch=batch,
                      duration=duration, jumbo=jumbo, queue_cap=queue_cap,
-                     partition=partition, seed=seed, vectorized=vectorized)
+                     partition=partition, seed=seed, vectorized=vectorized,
+                     max_batches=batches, initial_states=initial_states)
         return Metrics("runtime", rt.throughput, rt.latency_p50,
                        rt.latency_p99, raw=rt)
 
 
-def _scale_parallelism(parallelism: Dict[str, int],
-                       budget: int) -> Dict[str, int]:
-    """Proportionally shrink replication to fit ``budget`` threads (>=1 per
-    operator)."""
+def _scale_parallelism(parallelism: Dict[str, int], budget: int,
+                       plan_eval: object = None,
+                       graph: Optional[ExecutionGraph] = None
+                       ) -> Dict[str, int]:
+    """Shrink replication to fit ``budget`` threads (>=1 per operator).
+
+    With a plan evaluation available, threads are allotted proportionally to
+    each operator's modelled core demand (``PlanEval.utilization``) by
+    largest remainder, capped at the planned replication — the bottleneck
+    ratios the optimizer balanced survive the down-mapping instead of being
+    flattened by uniform proportional scaling.  Without one (or with an
+    all-idle evaluation) the old proportional rule applies.
+    """
     total = sum(parallelism.values())
     if total <= budget:
         return dict(parallelism)
-    scale = budget / total
-    return {op: max(1, int(k * scale)) for op, k in parallelism.items()}
+    demand: Optional[Dict[str, float]] = None
+    util = getattr(plan_eval, "utilization", None)
+    if util is not None and graph is not None \
+            and len(util) == len(graph.replicas):
+        demand = {}
+        for idx, rep in enumerate(graph.replicas):
+            demand[rep.op] = demand.get(rep.op, 0.0) + float(util[idx])
+        if not all(op in demand for op in parallelism) or \
+                sum(demand.values()) <= 0:
+            demand = None
+    if demand is None or budget < len(parallelism):
+        scale = budget / total
+        return {op: max(1, int(k * scale)) for op, k in parallelism.items()}
+    tot = sum(demand.values())
+    raw = {op: budget * demand[op] / tot for op in parallelism}
+    # one thread each, then award the rest by largest unmet demand (capped
+    # at the planned replication) — never exceeds the budget, unlike
+    # rounding raw shares up per-operator
+    alloc = {op: 1 for op in parallelism}
+    for _ in range(budget - len(alloc)):
+        candidates = [o for o in parallelism if alloc[o] < parallelism[o]]
+        if not candidates:
+            break
+        best = max(candidates, key=lambda o: (raw[o] - alloc[o], o))
+        alloc[best] += 1
+    return alloc

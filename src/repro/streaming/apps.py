@@ -2,23 +2,38 @@
 the :class:`repro.streaming.api.Topology` builder.
 
 Each factory returns a built :class:`StreamingApp` — logical graph, compute
-kernels (operating on *jumbo batches*, arrays of tuples), spout sources and
-partition declarations all come from one fluent declaration, so the same
-object feeds planning (``Job(...).plan``), the simulators, and the real
-threaded runtime.
+kernels (operating on *jumbo batches*, arrays of tuples), spout sources,
+partition declarations and *managed state* all come from one fluent
+declaration, so the same object feeds planning (``Job(...).plan``), the
+simulators, and the real threaded runtime.
+
+Stateful operators declare :class:`~repro.streaming.state.StateSpec` instead
+of mutating ad-hoc dicts: WC's counter and LR's account table are keyed
+stores sharded exactly like their keyed routes (so replica stores union to
+the single-replica store and survive a replan via
+``repro.streaming.state.migrate_states``); SD's moving average is a
+declarative sliding window; FD's model weights are a broadcast-replicated
+table kept in sync by a dedicated model-sync stream.  The operators'
+``mem_bytes`` (paper Table 1 ``M``) are *derived* from these declarations —
+``tuple_bytes + state.bytes_per_tuple()`` — rather than hand-tuned.
 
 Profile provenance: the per-tuple execution times anchor on the paper's
 measurements where given — WC Splitter 1612.8 ns and Counter 612.3 ns local
 (Table 3) — and on Fig. 8's qualitative statements (Parser has little
 computation; BriskStream's T^e is 5–24% of Storm's) for the rest.  LR's
 per-stream selectivities (paper Table 8 is not included in the text) are
-plausible values documented here as assumptions.
+plausible values documented here as assumptions; state access weights
+(``item_bytes`` x reads/writes, cache-line-fraction granularity) are chosen
+to reproduce the same profiled ``M`` the seed asserted as constants.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from .api import StreamingApp, Topology
+from .state import StateSpec, WindowSpec
 
 __all__ = ["ALL_APPS", "StreamingApp", "word_count", "fraud_detection",
            "spike_detection", "linear_road"]
@@ -45,9 +60,9 @@ def word_count() -> StreamingApp:
         return [batch.reshape(-1)]           # (B, 10) words -> (10B,)
 
     def k_counter(batch, state):
-        counts = state.setdefault("counts", np.zeros(WC_VOCAB, np.int64))
-        np.add.at(counts, batch, 1)
-        return [counts[batch].astype(np.int64)]
+        counts = state.managed               # keyed store, route-sharded
+        counts.add(batch, 1)
+        return [counts.get(batch)]
 
     def k_sink(batch, state):
         state["seen"] = state.get("seen", 0) + len(batch)
@@ -60,31 +75,55 @@ def word_count() -> StreamingApp:
         .op("splitter", k_splitter, exec_ns=1612.8, tuple_bytes=120.0,
             mem_bytes=240.0, selectivity=10.0)
         .op("counter", k_counter, exec_ns=612.3, tuple_bytes=32.0,
-            mem_bytes=96.0, partition="key")
+            partition="key",
+            state=StateSpec("keyed", item_bytes=32.0, reads_per_tuple=1,
+                            writes_per_tuple=1, key_space=WC_VOCAB,
+                            dtype=np.int64))
         .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=32.0)
         .build())
 
 
 # ---------------------------------------------------------------------------
-# Fraud Detection: spout -> parser -> predictor -> sink   (Fig. 18a style)
+# Fraud Detection (Fig. 18a style):
+#   spout -> parser -> predictor -> sink
+#   model_spout -> predictor        (broadcast model-sync stream)
+# The predictor scores transactions against a weight table replicated to
+# every replica; a slow second spout streams refreshed weights, broadcast so
+# all replicas apply the same updates in order and stay identical.
 # ---------------------------------------------------------------------------
 
 FD_FEATURES = 16
 
 
-def fraud_detection() -> StreamingApp:
-    weights = np.linspace(-1.0, 1.0, FD_FEATURES)
+def fd_model_weights(version: int) -> np.ndarray:
+    """The version-``v`` model the sync stream publishes (deterministic)."""
+    rng = np.random.default_rng(10_000 + version)
+    return np.linspace(-1.0, 1.0, FD_FEATURES) * \
+        (1.0 + 0.01 * rng.standard_normal(FD_FEATURES))
 
+
+def fraud_detection() -> StreamingApp:
     def source(batch, seed):
         rng = np.random.default_rng(seed)
         return rng.normal(size=(batch, FD_FEATURES))
+
+    def model_source(batch, seed):
+        # model-sync stream: one refreshed weight vector per batch row,
+        # rows = [version, w0..w15]; throttled — retraining is slow
+        time.sleep(0.001)
+        w = fd_model_weights(seed)
+        return np.concatenate([[float(seed)], w])[None, :].repeat(batch, 0)
 
     def k_parser(batch, state):
         return [batch]
 
     def k_predictor(batch, state):
-        # Markov-model-ish scoring: logistic over transaction features.
-        score = 1.0 / (1.0 + np.exp(-batch @ weights))
+        table = state.managed                # broadcast-replicated weights
+        if batch.ndim == 2 and batch.shape[1] == FD_FEATURES + 1:
+            # a model-sync batch: apply the newest weights, emit nothing
+            table.load(batch[-1, 1:], version=int(batch[-1, 0]))
+            return [np.zeros(0, np.int8)]
+        score = 1.0 / (1.0 + np.exp(-batch @ table.data))
         # "a signal is passed to Sink ... regardless of detection"
         return [(score > 0.5).astype(np.int8)]
 
@@ -97,8 +136,14 @@ def fraud_detection() -> StreamingApp:
         Topology("fd")
         .spout("spout", source, exec_ns=400.0, tuple_bytes=160.0)
         .op("parser", k_parser, exec_ns=300.0, tuple_bytes=160.0)
-        .op("predictor", k_predictor, exec_ns=2400.0, tuple_bytes=160.0,
-            mem_bytes=480.0)
+        .spout("model_spout", model_source, exec_ns=50_000.0,
+               tuple_bytes=8.0 * (FD_FEATURES + 1))
+        .op("predictor", k_predictor, inputs=["parser", "model_spout"],
+            exec_ns=2400.0, tuple_bytes=160.0,
+            partition={"model_spout": "broadcast"},
+            state=StateSpec("broadcast", item_bytes=8.0 * FD_FEATURES,
+                            reads_per_tuple=2.5, writes_per_tuple=0,
+                            init=lambda: fd_model_weights(0)))
         .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=16.0)
         .build())
 
@@ -119,11 +164,9 @@ def spike_detection() -> StreamingApp:
         return [batch]
 
     def k_moving_avg(batch, state):
-        hist = state.get("hist", np.zeros(SD_WINDOW))
-        vals = np.concatenate([hist, batch])
+        vals = state.window.slide(batch)     # declared sliding window
         kernel = np.ones(SD_WINDOW) / SD_WINDOW
         avg = np.convolve(vals, kernel, mode="valid")[-len(batch):]
-        state["hist"] = vals[-SD_WINDOW:]
         return [np.stack([batch, avg], axis=1)]
 
     def k_spike(batch, state):
@@ -140,7 +183,8 @@ def spike_detection() -> StreamingApp:
         .spout("spout", source, exec_ns=400.0, tuple_bytes=64.0)
         .op("parser", k_parser, exec_ns=250.0, tuple_bytes=64.0)
         .op("moving_avg", k_moving_avg, exec_ns=900.0, tuple_bytes=64.0,
-            mem_bytes=192.0)
+            state=StateSpec("value", item_bytes=8.0, reads_per_tuple=0,
+                            writes_per_tuple=0, window=WindowSpec(SD_WINDOW)))
         .op("spike", k_spike, exec_ns=350.0, tuple_bytes=64.0)
         .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=16.0)
         .build())
@@ -157,7 +201,9 @@ def spike_detection() -> StreamingApp:
 #   avg_speed->toll 1.0, count->toll 1.0, accident->notification 1.0
 # The historical-query stream is the benchmark's second spout: account
 # balance requests arrive on their own source and are keyed to the replica
-# owning that vehicle's account (LRB's "Type 2/3" queries).
+# owning that vehicle's account (LRB's "Type 2/3" queries).  The account
+# table is declared keyed state, so it is sharded by the same route and can
+# be migrated across replica sets on replan.
 # ---------------------------------------------------------------------------
 
 LR_VEHICLES = 512
@@ -218,10 +264,10 @@ def linear_road() -> StreamingApp:
         if not len(batch):
             return [np.zeros((0,))]
         vid = batch[:, 0].astype(np.int64) % LR_VEHICLES
-        acct = state.setdefault("acct", np.zeros(LR_VEHICLES))
-        np.add.at(acct, vid, 0.5)      # each query accrues an assessed toll
+        acct = state.managed           # keyed account table, route-sharded
+        acct.add(vid, 0.5)             # each query accrues an assessed toll
         state["queries"] = state.get("queries", 0) + len(batch)
-        return [acct[vid]]
+        return [acct.get(vid)]
 
     def k_sink(batch, state):
         state["seen"] = state.get("seen", 0) + len(batch)
@@ -243,8 +289,10 @@ def linear_road() -> StreamingApp:
             exec_ns=300.0, tuple_bytes=48.0)
         .spout("hist_spout", hist_source, exec_ns=350.0, tuple_bytes=64.0)
         .op("toll_history", k_toll_history, inputs=["hist_spout"],
-            exec_ns=650.0, tuple_bytes=64.0, mem_bytes=160.0,
-            partition="key", key_by=0)
+            exec_ns=650.0, tuple_bytes=64.0,
+            partition="key", key_by=0,
+            state=StateSpec("keyed", item_bytes=32.0, reads_per_tuple=2,
+                            writes_per_tuple=1, key_space=LR_VEHICLES))
         .sink("sink", k_sink, inputs=["toll", "notification",
                                       "toll_history"],
               exec_ns=100.0, tuple_bytes=16.0)

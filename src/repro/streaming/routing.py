@@ -36,11 +36,47 @@ PARTITION_STRATEGIES = ("shuffle", "key", "broadcast")
 KeyBy = Union[int, Callable[[np.ndarray], np.ndarray]]
 
 
+#: a consumer's declared partitioning: one strategy for every input stream,
+#: or a per-producer mapping (e.g. FD's predictor reads a shuffled feature
+#: stream AND a broadcast model-sync stream)
+PartitionDecl = Union[str, Mapping[str, str]]
+
+
 def validate_strategy(op: str, strategy: str) -> None:
     if strategy not in PARTITION_STRATEGIES:
         raise ValueError(
             f"operator {op!r}: unknown partition strategy {strategy!r} "
             f"(choose from {PARTITION_STRATEGIES})")
+
+
+def validate_partition_decl(op: str, decl: PartitionDecl) -> None:
+    """A partition declaration is one strategy or a per-producer mapping."""
+    if isinstance(decl, str):
+        validate_strategy(op, decl)
+        return
+    if not isinstance(decl, Mapping):
+        raise ValueError(
+            f"operator {op!r}: partition must be a strategy or a "
+            f"{{producer: strategy}} mapping, got {type(decl).__name__}")
+    for producer, strategy in decl.items():
+        validate_strategy(op, strategy)
+
+
+def edge_strategy(strategies: Mapping[str, PartitionDecl], producer: str,
+                  consumer: str) -> str:
+    """Resolve the strategy of one edge from the consumer declarations
+    (per-producer mappings default unnamed producers to shuffle)."""
+    decl = strategies.get(consumer, "shuffle")
+    if isinstance(decl, Mapping):
+        return decl.get(producer, "shuffle")
+    return decl
+
+
+def declares_key(decl: PartitionDecl) -> bool:
+    """True when a partition declaration keys at least one input stream."""
+    if isinstance(decl, Mapping):
+        return "key" in decl.values()
+    return decl == "key"
 
 
 def validate_operator_names(graph, names, what: str) -> None:
@@ -243,7 +279,8 @@ class RoutingTable:
         return edge in self._routes
 
 
-def compile_routes(source, partition: Optional[Mapping[str, str]] = None,
+def compile_routes(source, partition: Optional[Mapping[str,
+                                                       PartitionDecl]] = None,
                    key_by: Optional[Mapping[str, KeyBy]] = None
                    ) -> RoutingTable:
     """Compile the routing table for an app or logical graph.
@@ -251,26 +288,37 @@ def compile_routes(source, partition: Optional[Mapping[str, str]] = None,
     ``source`` is a ``StreamingApp`` (whose declared ``partition`` /
     ``key_by`` travel with it) or a bare ``LogicalGraph``.  The ``partition``
     and ``key_by`` arguments override per *consumer* operator (that is how
-    ``run_app(partition=...)`` overrides a declaration).
+    ``run_app(partition=...)`` overrides a declaration); an override
+    replaces the consumer's whole declaration, including a per-producer
+    mapping.
     """
     graph = getattr(source, "graph", source)
-    strategies = dict(getattr(source, "partition", None) or {})
+    strategies: Dict[str, PartitionDecl] = \
+        dict(getattr(source, "partition", None) or {})
     strategies.update(partition or {})
     extractors = dict(getattr(source, "key_by", None) or {})
     validate_operator_names(graph, strategies, "partition")
-    for op, strat in strategies.items():
-        validate_strategy(op, strat)
+    for op, decl in strategies.items():
+        validate_partition_decl(op, decl)
+        if isinstance(decl, Mapping):
+            producers = set(graph.producers(op))
+            unknown = sorted(set(decl) - producers)
+            if unknown:
+                raise ValueError(
+                    f"operator {op!r}: partition mapping names {unknown}, "
+                    f"which are not producers of {op!r} "
+                    f"(producers: {sorted(producers)})")
     # a partition override away from "key" disables the *declared* extractor
     # (so run_app(partition={'op': 'shuffle'}) A/Bs keyed-by apps cleanly);
     # an extractor passed explicitly alongside a non-key strategy is a
     # caller error and is rejected below
     for op in [o for o, kb in extractors.items()
-               if strategies.get(o, "shuffle") != "key"]:
+               if not declares_key(strategies.get(o, "shuffle"))]:
         del extractors[op]
     extractors.update(key_by or {})
     validate_operator_names(graph, extractors, "key_by")
     for op, kb in extractors.items():
-        if strategies.get(op, "shuffle") != "key":
+        if not declares_key(strategies.get(op, "shuffle")):
             raise ValueError(
                 f"operator {op!r} declares key_by but its partition "
                 f"strategy is {strategies.get(op, 'shuffle')!r} (key "
@@ -279,11 +327,12 @@ def compile_routes(source, partition: Optional[Mapping[str, str]] = None,
     routes: Dict[Tuple[str, str], RouteSpec] = {}
     for u in graph.operators:
         for stream, v in enumerate(graph.consumers(u)):
+            strategy = edge_strategy(strategies, u, v)
             routes[(u, v)] = RouteSpec(
                 producer=u, consumer=v, stream=stream,
-                strategy=strategies.get(v, "shuffle"),
+                strategy=strategy,
                 selectivity=graph.sel(u, v),
-                key_by=extractors.get(v))
+                key_by=extractors.get(v) if strategy == "key" else None)
     return RoutingTable(graph, routes)
 
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from .apps import StreamingApp
 from .routing import Route, compile_routes, validate_operator_names
+from .state import OperatorState, make_operator_state
 
 _POISON = object()
 
@@ -43,7 +44,9 @@ class RuntimeResult:
     throughput: float               # sink tuples/sec
     latency_p50: float
     latency_p99: float
-    states: Dict[str, List[dict]]   # per-operator replica states (counts etc.)
+    states: Dict[str, List[dict]]   # per-operator replica OperatorStates
+    # (dict-compatible; .managed holds declared KeyedStore/BroadcastTable/
+    #  ValueStore instances — see repro.streaming.state)
 
 
 class _JumboBuffer:
@@ -135,7 +138,8 @@ class Executor(threading.Thread):
                  stop: Optional[threading.Event] = None,
                  seed: int = 0,
                  lat_sink: Optional[List[float]] = None,
-                 on_delivered: Optional[Callable[[int], None]] = None):
+                 on_delivered: Optional[Callable[[int], None]] = None,
+                 max_batches: Optional[int] = None):
         super().__init__(daemon=True, name=name)
         self.ports = ports
         self.batch = batch
@@ -149,6 +153,7 @@ class Executor(threading.Thread):
         self.seed = seed
         self.lat_sink = lat_sink
         self.on_delivered = on_delivered
+        self.max_batches = max_batches
 
     @property
     def is_spout(self) -> bool:
@@ -162,7 +167,8 @@ class Executor(threading.Thread):
 
     def _run_spout(self):
         b = 0
-        while not self.stop_event.is_set():
+        while not self.stop_event.is_set() and \
+                (self.max_batches is None or b < self.max_batches):
             arr = self.source(self.batch, self.seed + b)
             b += 1
             t0 = time.perf_counter()
@@ -252,7 +258,10 @@ class Executor(threading.Thread):
 def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             batch: int = 256, duration: float = 1.0, jumbo: bool = True,
             queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
-            seed: int = 0, vectorized: bool = True) -> RuntimeResult:
+            seed: int = 0, vectorized: bool = True,
+            max_batches: Optional[int] = None,
+            initial_states: Optional[Dict[str, List[dict]]] = None
+            ) -> RuntimeResult:
     """Execute ``app`` for ``duration`` seconds and return measured stats.
 
     Partition strategies and key extractors come from the app's Topology
@@ -260,6 +269,18 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     the ``partition`` argument overrides per operator.  ``vectorized=False``
     selects the seed's per-mask keyed split (kept for the
     ``bench_runtime.py`` A/B comparison only).
+
+    Declared operator state (``Topology.op(state=StateSpec(...))``) becomes
+    managed stores on the replica state handles: keyed stores are sharded
+    exactly like the compiled keyed route, so the union of the replica
+    stores equals a single-replica run's store.
+
+    ``max_batches`` switches to *deterministic replay*: every spout emits
+    exactly that many batches (seeds ``seed .. seed+max_batches-1``) and the
+    run drains fully — no drops, no duration cutoff — which makes keyed
+    state byte-reproducible across replica counts.  ``initial_states`` seeds
+    per-replica state (one entry per replica, e.g. from
+    :func:`repro.streaming.state.migrate_states` after a replan).
     """
     lg = app.graph
     parallelism = dict(parallelism or {})
@@ -275,9 +296,19 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             for i in range(parallelism[name]):
                 in_qs[(name, i)] = queue.Queue(maxsize=queue_cap)
 
-    states: Dict[str, List[dict]] = {
-        name: [dict() for _ in range(parallelism[name])]
+    states: Dict[str, List[OperatorState]] = {
+        name: [make_operator_state(app.state.get(name), parallelism[name], j)
+               for j in range(parallelism[name])]
         for name in lg.operators}
+    if initial_states:
+        validate_operator_names(lg, initial_states, "initial_states")
+        for name, reps in initial_states.items():
+            if len(reps) != parallelism[name]:
+                raise ValueError(
+                    f"initial_states[{name!r}] has {len(reps)} replica "
+                    f"states for parallelism {parallelism[name]} "
+                    "(migrate_states targets one replica set)")
+            states[name] = list(reps)
     latencies: List[float] = []
     stop = threading.Event()
     spout_counts = [0]
@@ -305,7 +336,8 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                 spouts.append(Executor(
                     f"{name}#{i}", make_ports(name), batch, jumbo,
                     states[name][i], source=app.source_for(name), stop=stop,
-                    seed=seed + 7919 * i, on_delivered=add_spout_count))
+                    seed=seed + 7919 * i, on_delivered=add_spout_count,
+                    max_batches=max_batches))
             else:
                 tasks.append(Executor(
                     f"{name}#{i}", make_ports(name), batch, jumbo,
@@ -319,12 +351,19 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     t_start = time.perf_counter()
     for th in spouts:
         th.start()
-    time.sleep(duration)
-    stop.set()
+    if max_batches is None:
+        time.sleep(duration)
+        stop.set()
+        join_timeout = 5.0
+    else:
+        # deterministic replay: spouts finish their batch budget on their
+        # own (backpressure, no drops); stop only guards a crashed consumer
+        join_timeout = 60.0
     for th in spouts:
-        th.join(timeout=5.0)
+        th.join(timeout=join_timeout)
+    stop.set()
     for t in tasks:
-        t.join(timeout=5.0)
+        t.join(timeout=join_timeout)
     wall = time.perf_counter() - t_start
 
     sink_ops = lg.sinks()

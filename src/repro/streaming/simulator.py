@@ -40,9 +40,31 @@ class FluidResult:
     converged: bool
 
 
+def _validate_spout_rates(graph: ExecutionGraph, input_rate) -> None:
+    """Per-spout rate dicts must name spout operators only (spouts absent
+    from the mapping are fed at rate 0) — one rule for DES and fluid."""
+    spout_ops = set(graph.logical.spouts())
+    unknown = sorted(set(input_rate) - spout_ops)
+    if unknown:
+        raise ValueError(
+            f"input_rate names non-spout operators {unknown} "
+            f"(spouts: {sorted(spout_ops)}); spouts absent from the "
+            "mapping are fed at rate 0")
+
+
 def fluid_solve(graph: ExecutionGraph, machine: MachineSpec,
-                placement: List[int], input_rate: Optional[float] = None,
+                placement: List[int], input_rate=None,
                 max_iters: int = 200, tol: float = 1e-6) -> FluidResult:
+    """Damped fixed-point rate solver (see module docstring).
+
+    ``input_rate`` is the external ingress: ``None`` (saturation), a float
+    feeding every spout operator at that rate, or a ``{spout_op: rate}``
+    mapping feeding each spout its own stream — the same contract
+    :func:`des_simulate` honours, so under-fed multi-spout studies are
+    uniform across backends.
+    """
+    if isinstance(input_rate, dict):
+        _validate_spout_rates(graph, input_rate)
     n = graph.n_units
     order = graph.topo_unit_order()
     te = np.array([r.spec.exec_s for r in graph.replicas])
@@ -83,9 +105,11 @@ def fluid_solve(graph: ExecutionGraph, machine: MachineSpec,
         for v in order:
             if is_spout[v]:
                 cap = group[v] / te[v] if te[v] > 0 else math.inf
-                share = math.inf if input_rate is None else \
-                    input_rate * group[v] / graph.parallelism[
-                        graph.replicas[v].op]
+                op = graph.replicas[v].op
+                rate = input_rate.get(op, 0.0) \
+                    if isinstance(input_rate, dict) else input_rate
+                share = math.inf if rate is None else \
+                    rate * group[v] / graph.parallelism[op]
                 desired[v] = min(share, cap)
                 util[v] = desired[v] * te[v]
                 continue
@@ -137,6 +161,10 @@ class DesResult:
     queue_drops: int                # jumbos dropped at full queues
     busy_s: Optional[np.ndarray] = None       # per-unit busy seconds
     unit_tuples: Optional[np.ndarray] = None  # per-unit processed tuples
+    mem_rate: Optional[np.ndarray] = None     # per-socket bytes/s (M traffic)
+    state_bytes: float = 0.0        # total declared-state bytes charged
+    # (OperatorSpec.state_bytes x tuples — the DES-side ledger of the same
+    #  StateSpec-derived traffic the §3.3 constraint and fluid solver charge)
 
 
 def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
@@ -162,21 +190,24 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     spout operator at that rate; a ``{spout_op: rate}`` mapping feeds each
     spout its own stream (multi-spout apps, e.g. Linear Road's
     historical-query source).
+
+    Memory traffic is charged per processed tuple from the operator specs
+    (``mem_bytes``, which topologies with declared state derive from their
+    ``StateSpec``): when a socket's cumulative byte rate exceeds its local
+    bandwidth, service times on that socket stretch by the oversubscription
+    factor — the DES-side analogue of the fluid solver's ``mem_mult`` and
+    the §3.3 constraint.
     """
     rng = np.random.default_rng(seed)
     n = graph.n_units
     sock = list(placement)
     te = [r.spec.exec_s for r in graph.replicas]
     group = [r.group for r in graph.replicas]
+    mbytes = [r.spec.mem_bytes for r in graph.replicas]
+    sbytes = [r.spec.state_bytes for r in graph.replicas]
     delivery = unit_delivery(graph, routes)
     if isinstance(input_rate, dict):
-        spout_ops = set(graph.logical.spouts())
-        unknown = sorted(set(input_rate) - spout_ops)
-        if unknown:
-            raise ValueError(
-                f"input_rate names non-spout operators {unknown} "
-                f"(spouts: {sorted(spout_ops)}); spouts absent from the "
-                "mapping are fed at rate 0")
+        _validate_spout_rates(graph, input_rate)
 
     def spout_rate(v: int) -> float:
         op = graph.replicas[v].op
@@ -209,9 +240,19 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
         heapq.heappush(heap, (t, seq, kind, unit, t0, prod))
         seq += 1
 
-    def service_time(v: int, prod: int) -> float:
-        over = max(1.0, sock_busy[sock[v]] / machine.cores_per_socket) \
-            if sock[v] != UNPLACED else 1.0
+    mem_acc = [0.0] * machine.n_sockets   # cumulative M bytes per socket
+    state_total = 0.0
+
+    def service_time(v: int, prod: int, now: float) -> float:
+        s = sock[v]
+        over = 1.0
+        if s != UNPLACED:
+            over = max(1.0, sock_busy[s] / machine.cores_per_socket)
+            if now > 1e-6:
+                # bandwidth contention: stretch by the socket's cumulative
+                # memory-rate oversubscription (state + tuple traffic per
+                # the specs), mirroring fluid_solve's mem_mult
+                over *= max(1.0, mem_acc[s] / now / machine.local_bw)
         base = te[v] + (tf[prod][v] if prod >= 0 else 0.0)
         return batch * base * over
 
@@ -219,15 +260,18 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     unit_tuples = [0.0] * n
 
     def try_start(v: int, now: float):
+        nonlocal state_total
         while busy[v] < group[v] and queues[v]:
             t0, prod = queues[v].pop(0)
             busy[v] += 1
             if sock[v] != UNPLACED:
                 sock_busy[sock[v]] += 1
-            svc = service_time(v, prod)
+                mem_acc[sock[v]] += batch * mbytes[v]
+            svc = service_time(v, prod, now)
             if now >= warm:
                 busy_s[v] += svc
                 unit_tuples[v] += batch
+                state_total += batch * sbytes[v]
             push(now + svc, "done", v, t0, prod)
 
     def deliver(u: int, v: int, amount: float, t0: float, now: float):
@@ -282,7 +326,8 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
         latency_p50=float(np.percentile(lat_arr, 50)),
         latency_p99=float(np.percentile(lat_arr, 99)),
         sim_time=horizon, sink_tuples=sink_count, queue_drops=drops,
-        busy_s=np.array(busy_s), unit_tuples=np.array(unit_tuples))
+        busy_s=np.array(busy_s), unit_tuples=np.array(unit_tuples),
+        mem_rate=np.array(mem_acc) / horizon, state_bytes=state_total)
 
 
 def measure_capacity(graph: ExecutionGraph, machine: MachineSpec,

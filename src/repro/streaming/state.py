@@ -1,0 +1,402 @@
+"""Managed keyed operator state: declared, partitioned, migratable.
+
+BriskStream's benchmark operators are stateful (WC's counter, LR's account
+balances) and the paper's memory-bandwidth constraint (§3.3, ``mem_bytes``)
+exists precisely because state access dominates NUMA cost — yet ad-hoc
+per-kernel dicts are invisible to the planner, duplicated per replica and
+silently discarded on replan.  This module makes operator state a *declared*
+artefact that every layer shares:
+
+* :class:`StateSpec` — the declaration, attached to an operator via
+  ``Topology.op(state=...)``.  Three kinds:
+
+  - ``"keyed"``  — a dense table sharded **by the operator's compiled keyed
+    route**: replica ``j`` of ``k`` owns exactly the keys ``key % k == j``
+    that the router delivers to it, so the keyed tuple-conservation contract
+    extends to state (the ownership-union of the replica stores equals the
+    single-replica store, byte for byte).
+  - ``"value"``  — a private per-replica value (running aggregates, window
+    history); not merged across replicas.
+  - ``"broadcast"`` — a read-mostly table replicated to every replica and
+    kept in sync by a broadcast-partitioned update stream (every replica
+    applies the same updates in lane-FIFO order), e.g. FD's model weights.
+
+  The declaration also *prices* the state: ``bytes_per_tuple()`` feeds the
+  operator's ``mem_bytes`` (paper Table 1 ``M``) so the §3.3 bandwidth
+  constraint, the fluid solver and the DES all charge state traffic from the
+  declaration instead of a hand-tuned constant.
+
+* :class:`WindowSpec` / :class:`WindowState` — declarative tumbling/sliding
+  count windows (``moving_avg``-style history without hand-rolled buffers).
+
+* :class:`KeyedStore` / :class:`ValueStore` / :class:`BroadcastTable` — the
+  runtime stores.  Kernels receive them through the dict-compatible
+  :class:`OperatorState` handle (``state.managed`` / ``state.window``), so
+  undeclared scratch keys keep working as plain dict entries.
+
+* :func:`merge_keyed` / :func:`repartition_keyed` / :func:`migrate_states` —
+  elastic state migration: merge the old shards by key ownership, repartition
+  onto the new replica set (``Plan.replan`` then ``Plan.execute(
+  initial_states=...)``), and a WC/LR run interrupted mid-stream resumes with
+  byte-identical keyed state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+STATE_KINDS = ("keyed", "value", "broadcast")
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Count-based window declaration.
+
+    ``size`` tuples per window; ``slide`` is the hop between emitted windows
+    (``1`` = per-tuple sliding, the default; ``slide == size`` = tumbling).
+    """
+
+    size: int
+    slide: int = 1
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"window size must be >= 1, got {self.size}")
+        if not 1 <= self.slide <= self.size:
+            raise ValueError(
+                f"window slide must be in [1, size={self.size}], "
+                f"got {self.slide}")
+
+    @classmethod
+    def tumbling(cls, size: int) -> "WindowSpec":
+        return cls(size, slide=size)
+
+    @property
+    def is_tumbling(self) -> bool:
+        return self.slide == self.size
+
+    def bytes_per_tuple(self, item_bytes: float) -> float:
+        """Window-history bytes scanned per input tuple: each emitted window
+        touches ``size`` items and one window is emitted every ``slide``
+        tuples."""
+        return item_bytes * self.size / self.slide
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    """Declared operator state (see module docstring for the three kinds).
+
+    ``item_bytes``  — bytes charged per state access, as profiled (cache-line
+                      -fraction granularity, the paper's ``M`` provenance).
+    ``reads_per_tuple`` / ``writes_per_tuple`` — average state touches per
+                      processed tuple.
+    ``key_space``   — dense table size (required for "keyed", optional
+                      sizing hint for "broadcast").
+    ``dtype``/``fill`` — table element type and initial value.
+    ``init``        — factory for the initial table/value (overrides
+                      ``fill``; required shape ``(key_space,)`` for keyed).
+    ``window``      — optional :class:`WindowSpec`; its history scan is
+                      added to ``bytes_per_tuple``.
+    """
+
+    kind: str
+    item_bytes: float = 8.0
+    reads_per_tuple: float = 1.0
+    writes_per_tuple: float = 1.0
+    key_space: Optional[int] = None
+    dtype: object = np.float64
+    fill: float = 0.0
+    init: Optional[Callable[[], np.ndarray]] = None
+    window: Optional[WindowSpec] = None
+
+    def __post_init__(self):
+        if self.kind not in STATE_KINDS:
+            raise ValueError(
+                f"unknown state kind {self.kind!r} "
+                f"(choose from {STATE_KINDS})")
+        if self.item_bytes <= 0:
+            raise ValueError("state item_bytes must be positive")
+        if self.reads_per_tuple < 0 or self.writes_per_tuple < 0:
+            raise ValueError("state reads/writes per tuple must be >= 0")
+        if self.kind == "keyed" and (self.key_space is None
+                                     or self.key_space < 1):
+            raise ValueError(
+                "keyed state requires key_space= (the dense table size the "
+                "compiled route's keys index into)")
+
+    def bytes_per_tuple(self) -> float:
+        """State traffic per processed tuple, charged into ``mem_bytes``."""
+        b = self.item_bytes * (self.reads_per_tuple + self.writes_per_tuple)
+        if self.window is not None:
+            b += self.window.bytes_per_tuple(self.item_bytes)
+        return b
+
+    def initial_table(self) -> np.ndarray:
+        if self.init is not None:
+            return np.asarray(self.init()).copy()
+        assert self.key_space is not None
+        return np.full(self.key_space, self.fill, dtype=self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Runtime stores
+# ---------------------------------------------------------------------------
+
+
+class KeyedStore:
+    """Dense keyed table sharded exactly like the operator's keyed route.
+
+    Shard ``shard`` of ``n_shards`` owns keys ``key % n_shards == shard`` —
+    the same assignment :func:`repro.streaming.routing.split_by_key` makes —
+    so under keyed routing each key is only ever touched by its owner and
+    :func:`merge_keyed` reconstructs the single-replica store exactly.
+    """
+
+    __slots__ = ("spec", "n_shards", "shard", "table")
+
+    def __init__(self, spec: StateSpec, n_shards: int = 1, shard: int = 0,
+                 table: Optional[np.ndarray] = None):
+        assert spec.kind == "keyed"
+        assert 0 <= shard < n_shards
+        self.spec = spec
+        self.n_shards = n_shards
+        self.shard = shard
+        self.table = spec.initial_table() if table is None else table
+        if len(self.table) != spec.key_space:
+            raise ValueError(
+                f"keyed table has {len(self.table)} entries for "
+                f"key_space={spec.key_space}")
+
+    def owned_mask(self) -> np.ndarray:
+        return np.arange(len(self.table)) % self.n_shards == self.shard
+
+    def get(self, keys: np.ndarray) -> np.ndarray:
+        return self.table[keys]
+
+    def add(self, keys: np.ndarray, amounts=1) -> None:
+        np.add.at(self.table, keys, amounts)
+
+    def put(self, keys: np.ndarray, values) -> None:
+        self.table[keys] = values
+
+    def snapshot(self) -> np.ndarray:
+        return self.table.copy()
+
+    def __repr__(self) -> str:
+        return (f"KeyedStore(shard {self.shard}/{self.n_shards}, "
+                f"{len(self.table)} keys)")
+
+
+class ValueStore:
+    """Private per-replica value (running aggregate, model residuals, ...)."""
+
+    __slots__ = ("spec", "value")
+
+    def __init__(self, spec: StateSpec):
+        assert spec.kind == "value"
+        self.spec = spec
+        self.value = spec.init() if spec.init is not None else None
+
+
+class BroadcastTable:
+    """Read-replicated table, synced by a broadcast update stream.
+
+    Every replica receives every update (broadcast partitioning), and
+    ``load`` applies them *last-writer-wins by version*: an update older
+    than the installed one is ignored.  Since all replicas eventually see
+    the same update set, they converge to the same (data, version) no
+    matter how updates from concurrent producers interleave — replicas may
+    differ transiently mid-stream, but drained runs end identical, which is
+    what ``migrate_states`` relies on when it copies one replica's table.
+    """
+
+    __slots__ = ("spec", "data", "version")
+
+    def __init__(self, spec: StateSpec,
+                 data: Optional[np.ndarray] = None, version: int = 0):
+        assert spec.kind == "broadcast"
+        self.spec = spec
+        if data is not None:
+            self.data = data
+        elif spec.init is not None:
+            self.data = np.asarray(spec.init()).copy()
+        elif spec.key_space is not None:
+            self.data = np.full(spec.key_space, spec.fill, dtype=spec.dtype)
+        else:
+            self.data = None
+        self.version = version
+
+    def load(self, data: np.ndarray, version: Optional[int] = None) -> None:
+        """Install an update.  ``version=None`` bumps the local counter
+        (single-producer streams); versioned updates below the installed
+        version are stale and dropped."""
+        if version is not None and int(version) < self.version:
+            return
+        self.data = np.asarray(data).copy()
+        self.version = self.version + 1 if version is None else int(version)
+
+
+class WindowState:
+    """Runtime buffer behind a :class:`WindowSpec`.
+
+    ``slide(batch)`` is the vectorized per-tuple sliding path (slide == 1):
+    returns ``concat(history, batch)`` — one aggregate per input tuple over
+    the trailing ``size`` values — and retains the last ``size`` values,
+    exactly the seed ``moving_avg`` convention (history starts as zeros).
+
+    ``tumble(batch)`` is the general hop path: buffers tuples and returns
+    every complete window (``size`` rows, advancing by ``slide``).
+    """
+
+    __slots__ = ("spec", "_hist", "_buf")
+
+    def __init__(self, spec: WindowSpec, dtype=np.float64):
+        self.spec = spec
+        self._hist = np.zeros(spec.size, dtype=dtype)
+        self._buf: Optional[np.ndarray] = None
+
+    def slide(self, batch: np.ndarray) -> np.ndarray:
+        if self.spec.slide != 1:
+            raise ValueError(
+                f"slide() is the per-tuple sliding path (slide=1); this "
+                f"window hops by {self.spec.slide} — use tumble()")
+        vals = np.concatenate([self._hist, batch])
+        self._hist = vals[-self.spec.size:]
+        return vals
+
+    def tumble(self, batch: np.ndarray) -> List[np.ndarray]:
+        buf = batch if self._buf is None else \
+            np.concatenate([self._buf, batch])
+        size, hop = self.spec.size, self.spec.slide
+        out = []
+        while len(buf) >= size:
+            out.append(buf[:size].copy())
+            buf = buf[hop:]
+        self._buf = buf
+        return out
+
+
+class OperatorState(dict):
+    """Per-replica state handle a kernel receives.
+
+    A plain ``dict`` for undeclared scratch keys (the seed convention keeps
+    working), plus the declared artefacts:
+
+    ``managed`` — :class:`KeyedStore` / :class:`ValueStore` /
+    :class:`BroadcastTable` per the operator's :class:`StateSpec`;
+    ``window`` — :class:`WindowState` when the spec declares one;
+    ``replica`` / ``fanout`` — this replica's position in the operator.
+    """
+
+    managed: Optional[object]
+    window: Optional[WindowState]
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.managed = None
+        self.window = None
+        self.replica = 0
+        self.fanout = 1
+
+
+def make_operator_state(spec: Optional[StateSpec], fanout: int = 1,
+                        replica: int = 0) -> OperatorState:
+    """Build one replica's state handle from its declaration (or a bare
+    dict-compatible handle when no state is declared)."""
+    st = OperatorState()
+    st.replica, st.fanout = replica, fanout
+    if spec is None:
+        return st
+    if spec.window is not None:
+        st.window = WindowState(spec.window, dtype=spec.dtype)
+    if spec.kind == "keyed":
+        st.managed = KeyedStore(spec, n_shards=fanout, shard=replica)
+    elif spec.kind == "broadcast":
+        st.managed = BroadcastTable(spec)
+    else:
+        st.managed = ValueStore(spec)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Elastic migration: merge by ownership, repartition onto the new replica set
+# ---------------------------------------------------------------------------
+
+
+def merge_keyed(stores: Sequence[KeyedStore]) -> np.ndarray:
+    """Union of keyed shards by ownership: entry ``key`` comes from the shard
+    with ``key % n_shards == shard``.  Under route-aligned keyed execution
+    this equals the single-replica table byte for byte."""
+    if not stores:
+        raise ValueError("merge_keyed needs at least one shard")
+    spec = stores[0].spec
+    merged = spec.initial_table()
+    for s in stores:
+        if s.spec.key_space != spec.key_space:
+            raise ValueError("cannot merge keyed stores of different "
+                             "key spaces")
+        mask = s.owned_mask()
+        merged[mask] = s.table[mask]
+    return merged
+
+
+def repartition_keyed(spec: StateSpec, merged: np.ndarray,
+                      n_shards: int) -> List[KeyedStore]:
+    """Split a merged table onto ``n_shards`` new owners; entries outside a
+    shard's residue class reset to the initial value (they are unreachable
+    under the new route and must not leak into a later merge)."""
+    fresh = spec.initial_table()
+    out = []
+    for j in range(n_shards):
+        table = fresh.copy()
+        mask = np.arange(len(merged)) % n_shards == j
+        table[mask] = merged[mask]
+        out.append(KeyedStore(spec, n_shards=n_shards, shard=j, table=table))
+    return out
+
+
+def migrate_states(app, states: Dict[str, List[OperatorState]],
+                   parallelism: Dict[str, int]
+                   ) -> Dict[str, List[OperatorState]]:
+    """Repartition a finished run's states onto a new replica set.
+
+    The elastic half of ``Plan.replan``: ``keyed`` stores are merged by key
+    ownership and re-sharded to the new fan-out; ``broadcast`` tables are
+    copied to every new replica (replicas are identical by construction);
+    ``value`` states are per-replica by definition — the first
+    ``min(k_old, k_new)`` replicas carry over, the rest start fresh.
+    Undeclared dict scratch state does not migrate (declare it if it must
+    survive a replan).  Feed the result to ``run_app(initial_states=...)`` /
+    ``Plan.execute(initial_states=...)``.
+    """
+    specs: Dict[str, StateSpec] = getattr(app, "state", {}) or {}
+    out: Dict[str, List[OperatorState]] = {}
+    for name in app.graph.operators:
+        k_new = parallelism.get(name, 1)
+        spec = specs.get(name)
+        old = states.get(name, [])
+        fresh = [make_operator_state(spec, k_new, j) for j in range(k_new)]
+        if spec is None or not old:
+            out[name] = fresh
+            continue
+        if spec.kind == "keyed":
+            merged = merge_keyed([st.managed for st in old
+                                  if st.managed is not None])
+            shards = repartition_keyed(spec, merged, k_new)
+            for st, shard in zip(fresh, shards):
+                st.managed = shard
+        elif spec.kind == "broadcast":
+            src = old[0].managed
+            for st in fresh:
+                st.managed = BroadcastTable(
+                    spec,
+                    data=None if src.data is None else src.data.copy(),
+                    version=src.version)
+        else:                                   # value: best-effort carry
+            for j in range(min(len(old), k_new)):
+                fresh[j].managed = old[j].managed
+                fresh[j].window = old[j].window
+        out[name] = fresh
+    return out

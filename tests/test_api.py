@@ -176,8 +176,8 @@ def test_run_app_partition_arg_overrides_declaration():
     app = word_count()                       # declares counter: key
     res = run_app(app, {"counter": 2}, batch=64, duration=0.25,
                   partition={"counter": "shuffle"})
-    c0 = res.states["counter"][0].get("counts", np.zeros(4096))
-    c1 = res.states["counter"][1].get("counts", np.zeros(4096))
+    c0 = res.states["counter"][0].managed.table
+    c1 = res.states["counter"][1].managed.table
     # shuffle spreads every key over both replicas -> overlap appears
     assert np.logical_and(c0 > 0, c1 > 0).sum() > 0
 
@@ -214,7 +214,7 @@ def test_plan_execute_scales_to_host(wc_plan):
     rt = wc_plan.execute(duration=0.25, batch=128, max_threads=6)
     assert rt.source == "runtime"
     assert rt.throughput > 0
-    total = sum(int(st.get("counts", np.zeros(1)).sum())
+    total = sum(int(st.managed.table.sum())
                 for st in rt.raw.states["counter"])
     assert total == 10 * rt.raw.spout_tuples
 
@@ -380,7 +380,7 @@ def test_migrated_apps_execute_and_conserve_counts(name):
     seen = sum(st.get("seen", 0) for st in rt_res.states["sink"])
     assert seen == rt_res.sink_tuples
     if name == "wc":
-        counted = sum(int(st.get("counts", np.zeros(1)).sum())
+        counted = sum(int(st.managed.table.sum())
                       for st in rt_res.states["counter"])
         assert counted == 10 * rt_res.spout_tuples      # exact word counts
     if name == "fd":

@@ -9,9 +9,9 @@ from repro.core import ExecutionGraph, evaluate, server_a
 from repro.streaming.api import Topology, TopologyError
 from repro.streaming.apps import ALL_APPS
 from repro.streaming.routing import (PARTITION_STRATEGIES, RouteSpec,
-                                     compile_routes, extract_keys,
-                                     split_by_key, split_by_key_masks,
-                                     unit_delivery)
+                                     compile_routes, edge_strategy,
+                                     extract_keys, split_by_key,
+                                     split_by_key_masks, unit_delivery)
 from repro.streaming.runtime import run_app
 from repro.streaming.simulator import des_simulate
 
@@ -137,8 +137,11 @@ def test_routing_table_matches_declaration(name):
     assert len(routes) == len(app.graph.edges)
     for (u, v), spec in routes.items():
         assert spec.selectivity == pytest.approx(app.graph.sel(u, v))
-        assert spec.strategy == app.partition.get(v, "shuffle")
-        assert spec.key_by == app.key_by.get(v)
+        assert spec.strategy == edge_strategy(app.partition, u, v)
+        if spec.strategy == "key":
+            assert spec.key_by == app.key_by.get(v)
+        else:
+            assert spec.key_by is None
     # output-stream order == consumer declaration order (kernel contract)
     for u in app.graph.operators:
         assert [r.consumer for r in routes.out_routes(u)] == \

@@ -1,0 +1,384 @@
+"""Managed keyed state contract: declaration validation, mem_bytes
+derivation, keyed-store union invariance under parallelism sweeps, elastic
+replan/migration round-trips (byte-identical state), window determinism vs
+the seed moving_avg, broadcast model-sync, and the satellite plumbing
+(fluid per-spout rates, bottleneck-aware down-mapping, DES state charge)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ExecutionGraph, server_a, subset
+from repro.streaming.api import Job, Topology, TopologyError, \
+    _scale_parallelism
+from repro.streaming.apps import (ALL_APPS, LR_VEHICLES, SD_WINDOW, WC_VOCAB,
+                                  fd_model_weights, linear_road, word_count)
+from repro.streaming.runtime import run_app
+from repro.streaming.simulator import des_simulate, fluid_solve
+from repro.streaming.state import (BroadcastTable, KeyedStore, OperatorState,
+                                   StateSpec, WindowSpec, WindowState,
+                                   make_operator_state, merge_keyed,
+                                   migrate_states, repartition_keyed)
+
+
+# ---------------------------------------------------------------------------
+# declaration validation + derived planner weights
+# ---------------------------------------------------------------------------
+
+def test_statespec_validation():
+    with pytest.raises(ValueError, match="unknown state kind"):
+        StateSpec("sharded")
+    with pytest.raises(ValueError, match="requires key_space"):
+        StateSpec("keyed")
+    with pytest.raises(ValueError, match="window size"):
+        WindowSpec(0)
+    with pytest.raises(ValueError, match="window slide"):
+        WindowSpec(4, slide=5)
+    assert WindowSpec.tumbling(8).is_tumbling
+
+
+def test_topology_rejects_state_plus_hand_tuned_mem_bytes():
+    t = Topology("t").spout("s", lambda b, sd: np.arange(b), exec_ns=100.0)
+    with pytest.raises(TopologyError, match="derived from the state"):
+        t.op("a", lambda b, st: [b], exec_ns=100.0, mem_bytes=96.0,
+             partition="key",
+             state=StateSpec("keyed", key_space=16))
+
+
+def test_topology_rejects_keyed_state_without_keyed_route():
+    t = Topology("t").spout("s", lambda b, sd: np.arange(b), exec_ns=100.0)
+    with pytest.raises(TopologyError, match="sharded\n?.*by the operator"):
+        t.op("a", lambda b, st: [b], exec_ns=100.0,
+             state=StateSpec("keyed", key_space=16))
+
+
+def test_mem_bytes_derived_from_state_declarations():
+    """The paper's M is tuple_bytes + declared state traffic — the seed's
+    hand-tuned constants, now derived."""
+    expected = {
+        "wc": ("counter", 32.0 + 64.0, 64.0),
+        "sd": ("moving_avg", 64.0 + 128.0, 128.0),
+        "lr": ("toll_history", 64.0 + 96.0, 96.0),
+        "fd": ("predictor", 160.0 + 320.0, 320.0),
+    }
+    for name, (op, mem, state_bytes) in expected.items():
+        spec = ALL_APPS[name]().graph.operators[op]
+        assert spec.mem_bytes == pytest.approx(mem), (name, op)
+        assert spec.state_bytes == pytest.approx(state_bytes), (name, op)
+
+
+def test_planner_reports_state_usage_share():
+    app = word_count()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    ev = Job(app).plan(server_a(), optimizer="ff").estimate().raw
+    assert ev.state_usage is not None
+    assert ev.state_usage.sum() > 0                 # counter state traffic
+    assert np.all(ev.state_usage <= ev.mem_usage + 1e-9)
+    del g
+
+
+# ---------------------------------------------------------------------------
+# keyed store: union invariant under parallelism sweeps
+# ---------------------------------------------------------------------------
+
+def _wc_counts(parallelism, batches, seed=11, **kw):
+    res = run_app(word_count(), parallelism, batch=64,
+                  max_batches=batches, **kw)
+    return res, merge_keyed([st.managed
+                             for st in res.states["counter"]])
+
+
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_keyed_union_invariant_across_parallelism(k):
+    """Deterministic replay: the ownership-union of k counter shards equals
+    the single-replica table byte for byte — keyed conservation extended to
+    state."""
+    _, ref = _wc_counts({"counter": 1}, batches=6)
+    res, merged = _wc_counts({"counter": k, "splitter": 2}, batches=6)
+    assert int(merged.sum()) == 10 * res.spout_tuples
+    assert merged.tobytes() == ref.tobytes()
+    # and each shard only ever touched the keys its route delivers
+    for st in res.states["counter"]:
+        store = st.managed
+        foreign = store.table[~store.owned_mask()]
+        assert not foreign.any()
+
+
+def test_merge_and_repartition_round_trip():
+    spec = StateSpec("keyed", key_space=97, dtype=np.int64)
+    rng = np.random.default_rng(3)
+    full = rng.integers(0, 50, size=97)
+    for k in (1, 2, 4, 7):
+        shards = repartition_keyed(spec, full, k)
+        assert all(s.n_shards == k for s in shards)
+        merged = merge_keyed(shards)
+        assert merged.tobytes() == full.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# elastic migration: interrupted + replanned == uninterrupted (CI acceptance)
+# ---------------------------------------------------------------------------
+
+def test_wc_migration_conservation_through_replan():
+    """A WC run interrupted mid-stream, replanned onto a smaller machine via
+    Plan.replan and resumed with migrated state yields byte-identical keyed
+    state to an uninterrupted single-replica run."""
+    total, cut, seed = 8, 3, 42
+    app = word_count()
+    ref = run_app(word_count(), {n: 1 for n in app.graph.operators},
+                  batch=64, max_batches=total, seed=seed)
+    ref_counts = ref.states["counter"][0].managed.table
+
+    job = Job(app)
+    par1 = {"spout": 1, "parser": 1, "splitter": 2, "counter": 3, "sink": 1}
+    plan1 = job.plan(server_a(), optimizer="ff", parallelism=par1)
+    r1 = plan1.execute(batches=cut, batch=64, seed=seed,
+                       parallelism=par1).raw
+
+    plan2 = plan1.replan(subset(server_a(), 2))     # elastic: lose 6 sockets
+    assert plan2.machine.n_sockets == 2
+    par2 = {"spout": 1, "parser": 1, "splitter": 1, "counter": 2, "sink": 1}
+    seeded = migrate_states(app, r1.states, par2)
+    r2 = plan2.execute(batches=total - cut, batch=64, seed=seed + cut,
+                       parallelism=par2, initial_states=seeded).raw
+
+    merged = merge_keyed([st.managed for st in r2.states["counter"]])
+    assert merged.tobytes() == ref_counts.tobytes()
+    # tuple conservation survives the cut too
+    assert r1.spout_tuples + r2.spout_tuples == ref.spout_tuples
+    assert int(merged.sum()) == 10 * ref.spout_tuples
+
+
+def test_lr_account_balances_survive_replan():
+    """LR: account balances (keyed toll_history store) survive a mid-run
+    replan onto a different replica count, byte for byte."""
+    total, cut, seed = 6, 2, 7
+    app = linear_road()
+    base = {n: 1 for n in app.graph.operators}
+    ref = run_app(linear_road(), dict(base), batch=64,
+                  max_batches=total, seed=seed)
+    ref_acct = ref.states["toll_history"][0].managed.table
+
+    r1 = run_app(app, dict(base, toll_history=3), batch=64,
+                 max_batches=cut, seed=seed)
+    seeded = migrate_states(app, r1.states, dict(base, toll_history=2))
+    r2 = run_app(app, dict(base, toll_history=2), batch=64,
+                 max_batches=total - cut, seed=seed + cut,
+                 initial_states=seeded)
+    merged = merge_keyed([st.managed for st in r2.states["toll_history"]])
+    assert merged.tobytes() == ref_acct.tobytes()
+
+
+def test_migrate_states_broadcast_and_value_semantics():
+    spec_b = StateSpec("broadcast", init=lambda: np.arange(4.0))
+    spec_v = StateSpec("value", init=lambda: np.zeros(2))
+
+    class _App:
+        pass
+
+    t = (Topology("m")
+         .spout("s", lambda b, sd: np.arange(b), exec_ns=100.0)
+         .op("bc", lambda b, st: [b], exec_ns=100.0,
+             partition="broadcast", state=spec_b)
+         .op("val", lambda b, st: [b], exec_ns=100.0, state=spec_v))
+    app = t.build()
+    old = {"s": [make_operator_state(None)],
+           "bc": [make_operator_state(spec_b)],
+           "val": [make_operator_state(spec_v), make_operator_state(spec_v)]}
+    old["bc"][0].managed.load(np.full(4, 9.0), version=5)
+    old["val"][0].managed.value[:] = 3.0
+    out = migrate_states(app, old, {"s": 1, "bc": 3, "val": 1})
+    for st in out["bc"]:            # broadcast: every new replica synced
+        assert st.managed.version == 5
+        assert np.array_equal(st.managed.data, np.full(4, 9.0))
+    # value: per-replica, best-effort carry of the surviving replicas
+    assert np.array_equal(out["val"][0].managed.value, np.full(2, 3.0))
+
+
+# ---------------------------------------------------------------------------
+# windows: declarative sliding == seed moving_avg; tumbling chunks
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_matches_seed_moving_avg():
+    rng = np.random.default_rng(0)
+    batches = [rng.normal(10.0, 2.0, size=n) for n in (64, 7, 128, 1)]
+    win = WindowState(WindowSpec(SD_WINDOW))
+    hist = np.zeros(SD_WINDOW)                      # the seed's hand-rolled path
+    kernel = np.ones(SD_WINDOW) / SD_WINDOW
+    for batch in batches:
+        vals_seed = np.concatenate([hist, batch])
+        avg_seed = np.convolve(vals_seed, kernel, "valid")[-len(batch):]
+        hist = vals_seed[-SD_WINDOW:]
+        vals_win = win.slide(batch)
+        avg_win = np.convolve(vals_win, kernel, "valid")[-len(batch):]
+        assert np.array_equal(avg_win, avg_seed)
+
+
+def test_tumbling_window_emits_complete_chunks():
+    win = WindowState(WindowSpec.tumbling(8), dtype=np.int64)
+    out = win.tumble(np.arange(5))
+    assert out == []
+    out = win.tumble(np.arange(5, 20))
+    assert [w.tolist() for w in out] == [list(range(0, 8)),
+                                         list(range(8, 16))]
+    out = win.tumble(np.arange(20, 24))
+    assert [w.tolist() for w in out] == [list(range(16, 24))]
+
+
+def test_sliding_path_rejects_hopping_window():
+    win = WindowState(WindowSpec(8, slide=4))
+    with pytest.raises(ValueError, match="tumble"):
+        win.slide(np.arange(4))
+    # hop-4 windows advance by 4
+    out = win.tumble(np.arange(12))
+    assert [w.tolist() for w in out] == [list(range(0, 8)),
+                                         list(range(4, 12))]
+
+
+# ---------------------------------------------------------------------------
+# broadcast state: FD's model-sync stream keeps replicas identical
+# ---------------------------------------------------------------------------
+
+def test_fd_broadcast_model_sync_keeps_replicas_identical():
+    app = ALL_APPS["fd"]()
+    assert set(app.graph.spouts()) == {"spout", "model_spout"}
+    assert app.routes().strategy("model_spout", "predictor") == "broadcast"
+    assert app.routes().strategy("parser", "predictor") == "shuffle"
+    n_upd = 4
+    res = run_app(app, {"predictor": 3}, batch=64, max_batches=n_upd,
+                  seed=2)
+    tables = [st.managed for st in res.states["predictor"]]
+    # every replica applied the same final update (lane-FIFO broadcast)
+    last = fd_model_weights(2 + n_upd - 1)
+    for t in tables:
+        assert t.version == 2 + n_upd - 1
+        assert np.array_equal(t.data, last)
+    seen = sum(st.get("seen", 0) for st in res.states["sink"])
+    assert seen == res.spout_tuples - n_upd * 64    # updates emit no scores
+
+
+# ---------------------------------------------------------------------------
+# satellites: fluid per-spout rates, down-mapping, DES state charge
+# ---------------------------------------------------------------------------
+
+def test_fluid_accepts_per_spout_rate_dicts_like_des():
+    app = linear_road()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    m = server_a()
+    rates = {"spout": 5e4, "hist_spout": 2e4}
+    fl = fluid_solve(g, m, [0] * g.n_units, input_rate=rates)
+    assert fl.converged
+    expected = 5e4 * (0.9 + 0.9 + 0.1) + 2e4
+    assert fl.R == pytest.approx(expected, rel=0.01)
+    des = des_simulate(g, m, [0] * g.n_units, input_rate=rates,
+                       batch=64, horizon=0.05)
+    assert des.R == pytest.approx(fl.R, rel=0.25)    # uniform across backends
+    with pytest.raises(ValueError, match="non-spout operators"):
+        fluid_solve(g, m, [0] * g.n_units, input_rate={"ghost": 1e4})
+
+
+def test_fluid_rate_dict_matches_scalar_when_uniform():
+    app = word_count()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    m = server_a()
+    a = fluid_solve(g, m, [0] * g.n_units, input_rate=1e5)
+    b = fluid_solve(g, m, [0] * g.n_units, input_rate={"spout": 1e5})
+    assert a.R == pytest.approx(b.R)
+
+
+def test_scale_parallelism_respects_bottleneck_ratios():
+    plan = Job(word_count()).plan(server_a(), optimizer="rlas",
+                                  compress_ratio=5, bestfit=True,
+                                  max_nodes=5000)
+    budget = max(len(plan.parallelism) + 2, plan.total_threads // 4)
+    smart = _scale_parallelism(plan.parallelism, budget, plan.eval,
+                               plan.graph)
+    uniform = _scale_parallelism(plan.parallelism, budget)
+    assert sum(smart.values()) <= budget
+    assert all(v >= 1 for v in smart.values())
+    assert all(smart[op] <= plan.parallelism[op] for op in smart)
+    # the modelled bottleneck keeps the largest thread share under the
+    # demand-aware rule (WC: the counter — 10 words per sentence x 612 ns)
+    demand = {}
+    for idx, rep in enumerate(plan.graph.replicas):
+        demand[rep.op] = demand.get(rep.op, 0.0) + \
+            float(plan.eval.utilization[idx])
+    heaviest = max(plan.parallelism, key=lambda o: smart[o])
+    assert heaviest == max(demand, key=demand.get) == "counter"
+    # and the demand-aware allocation packs the budget at least as well
+    assert sum(smart.values()) >= sum(
+        min(u, plan.parallelism[o]) for o, u in uniform.items()) - len(smart)
+
+
+def test_scale_parallelism_never_exceeds_budget_under_skew():
+    """Regression: rounding sub-1 raw shares up to 1 each must not push the
+    allocation past the thread budget."""
+    from types import SimpleNamespace
+
+    from repro.core import LogicalGraph, OperatorSpec
+
+    lg = LogicalGraph({"a": OperatorSpec("a", 100.0, is_spout=True),
+                       "b": OperatorSpec("b", 100.0),
+                       "c": OperatorSpec("c", 100.0)},
+                      [("a", "b"), ("b", "c")])
+    par = {"a": 4, "b": 4, "c": 4}
+    g = ExecutionGraph(lg, par)
+    util = np.concatenate([np.full(4, 0.9 / 4), np.full(4, 0.05 / 4),
+                           np.full(4, 0.05 / 4)])
+    ev = SimpleNamespace(utilization=util)
+    alloc = _scale_parallelism(par, 4, ev, g)
+    assert sum(alloc.values()) == 4
+    assert alloc == {"a": 2, "b": 1, "c": 1}        # skew goes to the hog
+
+
+def test_broadcast_table_drops_stale_versions():
+    """Regression: updates apply last-writer-wins by version, so replicas
+    fed the same update set converge regardless of producer interleaving."""
+    spec = StateSpec("broadcast", init=lambda: np.zeros(2))
+    orders = [[(1, 10.0), (3, 30.0), (2, 20.0)],
+              [(2, 20.0), (1, 10.0), (3, 30.0)]]
+    finals = []
+    for order in orders:
+        t = BroadcastTable(spec)
+        for v, x in order:
+            t.load(np.full(2, x), version=v)
+        finals.append((t.version, t.data.copy()))
+    assert finals[0][0] == finals[1][0] == 3
+    assert np.array_equal(finals[0][1], finals[1][1])
+    # unversioned loads keep the local-bump convention
+    t = BroadcastTable(spec)
+    t.load(np.ones(2))
+    assert t.version == 1
+
+
+def test_des_charges_declared_state_bytes():
+    """Squeezing local bandwidth stretches DES service times through the
+    state-derived mem_bytes — the same spec the §3.3 constraint charges."""
+    app = word_count()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    m = server_a()
+    starved = dataclasses.replace(m, local_bw=m.local_bw / 5000.0)
+    fast = des_simulate(g, m, [0] * g.n_units, input_rate=2e5,
+                        batch=64, horizon=0.03)
+    slow = des_simulate(g, starved, [0] * g.n_units, input_rate=2e5,
+                        batch=64, horizon=0.03)
+    assert fast.state_bytes > 0
+    assert slow.R < 0.8 * fast.R
+
+
+def test_operator_state_stays_dict_compatible():
+    st = OperatorState()
+    st["scratch"] = 1
+    st.setdefault("x", []).append(2)
+    assert dict(st) == {"scratch": 1, "x": [2]}
+    assert st.managed is None and st.window is None
+
+
+def test_keyed_store_rejects_size_mismatch():
+    spec = StateSpec("keyed", key_space=8)
+    with pytest.raises(ValueError, match="key_space"):
+        KeyedStore(spec, table=np.zeros(9))

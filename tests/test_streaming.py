@@ -89,13 +89,13 @@ def test_runtime_wc_counts_are_exact():
     res = run_app(app, {"splitter": 2, "counter": 2}, batch=128,
                   duration=0.4)
     assert res.spout_tuples > 0
-    total_counted = sum(int(st.get("counts", np.zeros(1)).sum())
+    total_counted = sum(int(st.managed.table.sum())
                         for st in res.states["counter"])
     # every parsed sentence yields exactly 10 words, all of which are counted
     assert total_counted == 10 * res.spout_tuples
     # keyed partitioning: the two counters saw disjoint key ranges
-    c0 = res.states["counter"][0].get("counts", np.zeros(4096))
-    c1 = res.states["counter"][1].get("counts", np.zeros(4096))
+    c0 = res.states["counter"][0].managed.table
+    c1 = res.states["counter"][1].managed.table
     overlap = np.logical_and(c0 > 0, c1 > 0).sum()
     assert overlap == 0
 
@@ -130,8 +130,9 @@ def test_runtime_lr_second_spout_feeds_history_keyed():
     queries = sum(st.get("queries", 0) for st in res.states["toll_history"])
     assert queries > 0
     # keyed partitioning: the two history replicas own disjoint accounts
-    a0 = res.states["toll_history"][0].get("acct", np.zeros(1))
-    a1 = res.states["toll_history"][1].get("acct", np.zeros(1))
+    a0 = res.states["toll_history"][0].managed.table
+    a1 = res.states["toll_history"][1].managed.table
+    assert a0.sum() + a1.sum() > 0
     assert np.logical_and(a0 > 0, a1 > 0).sum() == 0
     assert res.sink_tuples > 0
 

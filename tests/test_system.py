@@ -19,6 +19,6 @@ def test_end_to_end_wordcount_pipeline():
                            horizon=0.006)
     assert abs(des.R - res.R) / des.R < 0.2         # model tracks measurement
     rt = run_app(app, {"splitter": 2, "counter": 2}, batch=256, duration=0.3)
-    counted = sum(int(st.get("counts", np.zeros(1)).sum())
+    counted = sum(int(st.managed.table.sum())
                   for st in rt.states["counter"])
     assert counted == 10 * rt.spout_tuples           # exact semantics
