@@ -35,6 +35,13 @@ class OperatorSpec:
                    the declaration instead of a hand-tuned constant, and
                    the model reports the state share separately
                    (``PlanEval.state_usage``).
+    ``state_residency_s`` — seconds one tuple stays resident in declared
+                   window buffers (event-time windows hold tuples for
+                   ``size + lateness`` of event time before their panes can
+                   fire; count windows report 0).  The model multiplies it
+                   by the processed rate and tuple size to expose the
+                   memory held by in-flight panes
+                   (``PlanEval.state_resident_bytes``).
     """
 
     name: str
@@ -44,6 +51,7 @@ class OperatorSpec:
     selectivity: float = 1.0
     is_spout: bool = False
     state_bytes: float = 0.0
+    state_residency_s: float = 0.0
 
     @property
     def exec_s(self) -> float:

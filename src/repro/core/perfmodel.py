@@ -55,6 +55,11 @@ class PlanEval:
     state_usage: Optional[np.ndarray] = None  # per-socket bytes/s from
     # declared operator state (OperatorSpec.state_bytes) — the share of
     # mem_usage that managed keyed/broadcast/window state accounts for
+    state_resident_bytes: Optional[np.ndarray] = None  # per-socket bytes
+    # held RESIDENT by in-flight window panes: rate x residency x tuple
+    # size (Little's law over OperatorSpec.state_residency_s) — how much
+    # memory event-time buffering pins on each socket, reported so RLAS
+    # plans see the cost of waiting for completeness
 
     def summary(self) -> str:
         return (f"R={self.R:,.0f} tuples/s feasible={self.feasible} "
@@ -145,6 +150,7 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
     cpu = np.zeros(ns)
     mem = np.zeros(ns)
     state_mem = np.zeros(ns)
+    state_resident = np.zeros(ns)
     chan = np.zeros((ns, ns))
     violations: List[str] = []
     for v in range(n):
@@ -157,6 +163,8 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
         cpu[s] += util[v]
         mem[s] += processed[v] * rep.spec.mem_bytes
         state_mem[s] += processed[v] * rep.spec.state_bytes
+        state_resident[s] += processed[v] * rep.spec.state_residency_s \
+            * rep.spec.tuple_bytes
     for (u, v), rate in edge_fetch.items():
         su, sv = placement[u], placement[v]
         if su == UNPLACED or sv == UNPLACED or su == sv:
@@ -186,7 +194,8 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
                     feasible=not violations, violations=violations,
                     cpu_usage=cpu, mem_usage=mem, chan_usage=chan,
                     bottlenecks=bottlenecks, over_supplied=over,
-                    state_usage=state_mem)
+                    state_usage=state_mem,
+                    state_resident_bytes=state_resident)
 
 
 def bound_value(graph: ExecutionGraph, machine: MachineSpec,

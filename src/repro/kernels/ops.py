@@ -22,6 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as _shard_map
+
 from . import ref as _ref
 
 NEG_INF = -1e30
@@ -182,7 +184,7 @@ def cp_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ba = None
     spec = P(ba, None, axis, None)
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(_shard_map, mesh=mesh,
                        in_specs=(spec, spec, spec), out_specs=spec,
                        check_vma=False)
     def f(ql, kl, vl):

@@ -147,10 +147,9 @@ class CellResult:
 
 
 def _cost(compiled) -> Dict[str, float]:
+    from repro.compat import cost_analysis
     try:
-        c = compiled.cost_analysis()
-        if isinstance(c, list):
-            c = c[0]
+        c = cost_analysis(compiled)
         return {"flops": float(c.get("flops", 0.0)),
                 "bytes": float(c.get("bytes accessed", 0.0))}
     except Exception:

@@ -8,14 +8,19 @@ Preferred entry point::
 """
 from .api import (Job, Metrics, Plan, StreamingApp, Topology, TopologyError)
 from .routing import (PARTITION_STRATEGIES, Route, RouteSpec, RoutingTable,
-                      compile_routes)
-from .state import (BroadcastTable, KeyedStore, OperatorState, StateSpec,
-                    ValueStore, WindowSpec, WindowState, merge_keyed,
-                    migrate_states, repartition_keyed)
+                      WatermarkMerger, compile_routes, extract_event_times)
+from .state import (BroadcastTable, EventTimeWindowState, KeyedStore,
+                    OperatorState, StateSpec, UndeclaredStateError,
+                    ValueStore, WindowSpec, WindowState, grid_pane_ends,
+                    merge_keyed, migrate_states, pane_range,
+                    repartition_keyed)
 
 __all__ = ["Job", "Metrics", "Plan", "StreamingApp", "Topology",
            "TopologyError", "PARTITION_STRATEGIES", "Route", "RouteSpec",
-           "RoutingTable", "compile_routes",
-           "BroadcastTable", "KeyedStore", "OperatorState", "StateSpec",
-           "ValueStore", "WindowSpec", "WindowState", "merge_keyed",
-           "migrate_states", "repartition_keyed"]
+           "RoutingTable", "WatermarkMerger", "compile_routes",
+           "extract_event_times",
+           "BroadcastTable", "EventTimeWindowState", "KeyedStore",
+           "OperatorState", "StateSpec", "UndeclaredStateError",
+           "ValueStore", "WindowSpec", "WindowState", "grid_pane_ends",
+           "merge_keyed", "migrate_states", "pane_range",
+           "repartition_keyed"]

@@ -39,8 +39,8 @@ from repro.core.baselines import ff_place, random_plan, rr_place
 from .routing import (KeyBy, PARTITION_STRATEGIES, PartitionDecl,
                       RoutingTable, compile_routes, declares_key,
                       validate_key_extractor, validate_operator_names,
-                      validate_partition_decl)
-from .state import StateSpec
+                      validate_partition_decl, validate_time_extractor)
+from .state import StateSpec, WindowSpec
 
 _UNSET = object()
 
@@ -68,6 +68,13 @@ class StreamingApp:
     sources: Dict[str, Callable] = dataclasses.field(default_factory=dict)
     key_by: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
     state: Dict[str, StateSpec] = dataclasses.field(default_factory=dict)
+    event_time: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
+
+    def time_windows(self) -> Dict[str, WindowSpec]:
+        """Declared event-time windows (operator -> WindowSpec) — what
+        ``Plan.simulate(backend='des')`` hands the DES for pane pacing."""
+        return {op: sp.window for op, sp in self.state.items()
+                if sp.window is not None and sp.window.time}
 
     def source_for(self, spout: str) -> Callable[[int, int], np.ndarray]:
         fn = self.sources.get(spout, self.make_source)
@@ -92,6 +99,7 @@ class _OpDecl:
     source: Optional[Callable]
     key_by: Optional[KeyBy] = None
     state: Optional[StateSpec] = None
+    event_time: Optional[KeyBy] = None      # spouts: event-time extractor
 
 
 class Topology:
@@ -120,15 +128,28 @@ class Topology:
               source: Optional[Callable[[int, int], np.ndarray]] = None, *,
               exec_ns: float, tuple_bytes: float = 64.0,
               mem_bytes: Optional[float] = None,
-              selectivity: float = 1.0) -> "Topology":
-        """Declare a source operator.  ``source(batch, seed) -> array``."""
+              selectivity: float = 1.0,
+              event_time: Optional[KeyBy] = None) -> "Topology":
+        """Declare a source operator.  ``source(batch, seed) -> array``.
+
+        ``event_time`` names the event-time column of the spout's output
+        batches (column index or callable, same shape rule as ``key_by``).
+        A spout that declares it emits *low-watermarks*: after each batch
+        the runtime forwards ``max(event time emitted so far)`` along every
+        compiled route, which is what fires downstream event-time window
+        panes (``WindowSpec(time=True)``)."""
+        if event_time is not None:
+            try:
+                validate_time_extractor(name, event_time)
+            except ValueError as e:
+                raise TopologyError(str(e)) from None
         self._declare(_OpDecl(
             name, None,
             OperatorSpec(name, exec_ns, tuple_bytes,
                          tuple_bytes if mem_bytes is None else mem_bytes,
                          selectivity, is_spout=True),
             inputs=[], edge_selectivity={}, partition="shuffle",
-            source=source))
+            source=source, event_time=event_time))
         return self
 
     def op(self, name: str, kernel: Optional[Callable] = None, *,
@@ -186,6 +207,7 @@ class Topology:
         except ValueError as e:
             raise TopologyError(str(e)) from None
         state_bytes = state.bytes_per_tuple() if state is not None else 0.0
+        residency = state.residency_s() if state is not None else 0.0
         if state is not None:
             mem = tuple_bytes + state_bytes
         else:
@@ -194,7 +216,8 @@ class Topology:
         self._declare(_OpDecl(
             name, kernel,
             OperatorSpec(name, exec_ns, tuple_bytes, mem, selectivity,
-                         state_bytes=state_bytes),
+                         state_bytes=state_bytes,
+                         state_residency_s=residency),
             inputs=names, edge_selectivity=esel, partition=partition,
             source=None, key_by=key_by, state=state))
         return self
@@ -258,6 +281,12 @@ class Topology:
                 if d.state is not None}
 
     @property
+    def event_time(self) -> Dict[str, KeyBy]:
+        """Declared spout event-time extractors (spout -> column/callable)."""
+        return {n: d.event_time for n, d in self._decls.items()
+                if d.event_time is not None}
+
+    @property
     def is_executable(self) -> bool:
         """True when every non-spout op has a kernel and every spout a
         source — i.e. ``build()`` would succeed where ``build_logical()``
@@ -291,8 +320,42 @@ class Topology:
                 raise TopologyError(f"spout {v!r} cannot have inputs "
                                     f"(edge {u!r} -> {v!r})")
         self._check_acyclic(edges)
+        self._check_watermark_coverage(edges)
         ops = {n: d.spec for n, d in self._decls.items()}
         return LogicalGraph(ops, edges, esel)
+
+    def _check_watermark_coverage(self, edges) -> None:
+        """Every spout upstream of an event-time window must declare
+        ``event_time=``: the merged watermark is a *min* over input lanes,
+        so one watermark-less ancestor pins it at -inf forever and no pane
+        can ever fire — the classic stuck-watermark deadlock, rejected at
+        build time instead of hanging at run time."""
+        windowed = [n for n, d in self._decls.items()
+                    if d.state is not None and d.state.window is not None
+                    and d.state.window.time]
+        if not windowed:
+            return
+        producers: Dict[str, List[str]] = {}
+        for u, v in edges:
+            producers.setdefault(v, []).append(u)
+        for op in windowed:
+            frontier, seen = [op], set()
+            while frontier:
+                n = frontier.pop()
+                if n in seen:
+                    continue
+                seen.add(n)
+                frontier.extend(producers.get(n, []))
+            silent = sorted(
+                n for n in seen
+                if self._decls[n].spec.is_spout
+                and self._decls[n].event_time is None)
+            if silent:
+                raise TopologyError(
+                    f"operator {op!r} declares an event-time window but "
+                    f"upstream spouts {silent} declare no event_time= — "
+                    "their watermark lanes would stay at -inf and the "
+                    "window could never fire")
 
     def _check_acyclic(self, edges) -> None:
         indeg = {n: 0 for n in self._decls}
@@ -338,7 +401,8 @@ class Topology:
         return StreamingApp(self.name, graph, kernels,
                             make_source=next(iter(sources.values())),
                             partition=self.partition, sources=sources,
-                            key_by=self.key_by, state=self.state)
+                            key_by=self.key_by, state=self.state,
+                            event_time=self.event_time)
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +460,7 @@ class Job:
     def __init__(self, source: Union[Topology, StreamingApp, LogicalGraph]):
         declared_partition: Dict[str, str] = {}
         declared_key_by: Dict[str, KeyBy] = {}
+        declared_state: Dict[str, StateSpec] = {}
         if isinstance(source, Topology):
             if source.is_executable:
                 self.app: Optional[StreamingApp] = source.build()
@@ -407,6 +472,7 @@ class Job:
                 self.graph = source.build_logical()
                 declared_partition = source.partition
                 declared_key_by = source.key_by
+                declared_state = source.state
             self.name = source.name
         elif isinstance(source, StreamingApp):
             self.app = source
@@ -423,6 +489,12 @@ class Job:
         self.routes = compile_routes(
             self.app if self.app is not None else self.graph,
             partition=declared_partition, key_by=declared_key_by)
+        if self.app is not None:
+            self.time_windows = self.app.time_windows()
+        else:
+            self.time_windows = {
+                op: sp.window for op, sp in declared_state.items()
+                if sp.window is not None and sp.window.time}
         self._plan_cache: Dict[tuple, "Plan"] = {}
 
     def plan(self, machine: MachineSpec, optimizer: str = "rlas", *,
@@ -652,6 +724,10 @@ class Plan:
         batch = 64 if batch is None else batch
         horizon = 0.02 if horizon is None else horizon
         seed = 0 if seed is None else seed
+        # declared event-time windows ride along so the DES paces pane
+        # firing and reports pane latency (DesResult.pane_latency_*)
+        if self.job.time_windows and "time_windows" not in kw:
+            kw["time_windows"] = self.job.time_windows
         if rate is None:
             des = measure_capacity(self.graph, self.machine, self.placement,
                                    batch=batch, horizon=horizon, seed=seed,
@@ -695,6 +771,16 @@ class Plan:
                 2 * (os.cpu_count() or 2)
             parallelism = _scale_parallelism(self.parallelism, budget,
                                              self.eval, self.graph)
+            # auto-derived plans clamp non-keyed event-time windowed ops
+            # to one replica (run_app rejects them outright): panes fire
+            # per replica, so a shuffle split would shatter every pane
+            for op in self.job.time_windows:
+                prods = self.job.graph.producers(op)
+                keyed = bool(prods) and all(
+                    self.job.routes.strategy(u, op) == "key"
+                    for u in prods)
+                if not keyed:
+                    parallelism[op] = 1
         rt = run_app(self.job.app, parallelism=parallelism, batch=batch,
                      duration=duration, jumbo=jumbo, queue_cap=queue_cap,
                      partition=partition, seed=seed, vectorized=vectorized,

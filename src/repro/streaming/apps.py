@@ -36,7 +36,8 @@ from .api import StreamingApp, Topology
 from .state import StateSpec, WindowSpec
 
 __all__ = ["ALL_APPS", "StreamingApp", "word_count", "fraud_detection",
-           "spike_detection", "linear_road"]
+           "spike_detection", "spike_detection_eventtime", "linear_road",
+           "shuffle_within_skew"]
 
 
 # ---------------------------------------------------------------------------
@@ -299,5 +300,90 @@ def linear_road() -> StreamingApp:
         .build())
 
 
+# ---------------------------------------------------------------------------
+# Spike Detection, event-time variant: an out-of-order sensor stream with
+# configurable skew, watermark-fired sliding panes instead of arrival-count
+# history — the first benchmark user of the event-time substrate.
+#   spout (event_time=col 0) -> parser -> pane_stats (time window) -> sink
+# ---------------------------------------------------------------------------
+
+SD_ET_SIZE = 64.0       # pane span, event-time ticks (1 tick per reading)
+SD_ET_SLIDE = 16.0      # sliding hop
+SD_ET_SKEW = 8.0        # default max out-of-orderness of the sensor stream
+
+
+def shuffle_within_skew(ets: np.ndarray, bound: float,
+                        rng: np.random.Generator) -> np.ndarray:
+    """Permutation that delays each tuple by at most ``bound`` event-time
+    units: sort by ``et + U(0, bound)`` (stable).  In the permuted stream a
+    tuple can be preceded by tuples up to ``bound`` ticks younger, so the
+    running max event time never exceeds any pending tuple's by more than
+    ``bound`` — the seeded out-of-order harness behind the determinism
+    tests and the SD event-time source."""
+    if bound <= 0 or len(ets) < 2:
+        return np.arange(len(ets))
+    return np.argsort(np.asarray(ets, np.float64)
+                      + rng.uniform(0.0, bound, len(ets)), kind="stable")
+
+
+def spike_detection_eventtime(skew: float = SD_ET_SKEW,
+                              lateness: float = None) -> StreamingApp:
+    """SD over an out-of-order sensor stream (event-time windows).
+
+    ``skew`` bounds the stream's out-of-orderness (tuples are permuted
+    within it, seeded); ``lateness`` is the window's lateness allowance and
+    defaults to ``skew`` — the bound under which pane contents are provably
+    identical to an ordered run.  The permutation is intra-batch and the
+    spout emits its watermark *after* each batch, so this stream never
+    produces late tuples regardless of ``lateness`` (which still delays
+    firing and prices the buffer); the late-drop path needs disorder that
+    crosses watermark emissions — see the cross-batch straggler source in
+    ``tests/test_eventtime.py`` for that harness.
+    """
+    lateness = skew if lateness is None else lateness
+
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        # one reading per tick; the batch's ticks follow on from the seed so
+        # event time is globally increasing before the skew permutation
+        ets = np.abs(seed) * batch + np.arange(batch, dtype=np.float64)
+        vals = rng.normal(loc=10.0, scale=2.0, size=batch)
+        vals = np.where(rng.random(batch) < 0.05, vals * 3.0, vals)  # spikes
+        rows = np.stack([ets, vals], axis=1)
+        return rows[shuffle_within_skew(ets, skew, rng)]
+
+    def k_parser(batch, state):
+        return [batch]
+
+    def k_pane_stats(pane, state):
+        # invoked once per fired pane (complete, canonically ordered rows);
+        # state.pane carries the (start, end) event-time span
+        vals = pane[:, 1]
+        avg = float(vals.mean())
+        mx = float(vals.max())
+        end = state.pane[1] if state.pane is not None else 0.0
+        return [np.array([[end, avg, mx, float(mx > 1.5 * avg)]])]
+
+    def k_sink(batch, state):
+        state["seen"] = state.get("seen", 0) + len(batch)
+        state["spikes"] = state.get("spikes", 0) + int(batch[:, 3].sum())
+        return []
+
+    return (
+        Topology("sd_et")
+        .spout("spout", source, exec_ns=400.0, tuple_bytes=64.0,
+               event_time=0)
+        .op("parser", k_parser, exec_ns=250.0, tuple_bytes=64.0)
+        .op("pane_stats", k_pane_stats, exec_ns=900.0, tuple_bytes=64.0,
+            selectivity=1.0 / SD_ET_SLIDE,   # one aggregate per slide ticks
+            state=StateSpec("value", item_bytes=16.0, reads_per_tuple=0,
+                            writes_per_tuple=0,
+                            window=WindowSpec.time_sliding(
+                                SD_ET_SIZE, SD_ET_SLIDE, lateness=lateness,
+                                time_by=0)))
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=32.0)
+        .build())
+
+
 ALL_APPS = {"wc": word_count, "fd": fraud_detection, "sd": spike_detection,
-            "lr": linear_road}
+            "sd_et": spike_detection_eventtime, "lr": linear_road}

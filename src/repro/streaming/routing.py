@@ -26,6 +26,7 @@ and makes every later routing feature a one-place change.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
@@ -120,6 +121,76 @@ def extract_keys(arr: np.ndarray, key_by: Optional[KeyBy]) -> np.ndarray:
                 f"key_by column {col} requested on a 1-D batch")
         return arr.astype(np.int64, copy=False)
     return arr[:, col].astype(np.int64, copy=False)
+
+
+def validate_time_extractor(op: str, event_time) -> None:
+    """An event-time extractor is a column index or a callable (same shape
+    rule as key extractors, distinct message)."""
+    if callable(event_time):
+        return
+    if isinstance(event_time, bool) or \
+            not isinstance(event_time, (int, np.integer)):
+        raise ValueError(
+            f"operator {op!r}: event_time must be a column index or a "
+            f"callable, got {type(event_time).__name__}")
+
+
+def extract_event_times(arr: np.ndarray, time_by) -> np.ndarray:
+    """Float event times for ``arr`` under a declared extractor.
+
+    ``None`` mirrors :func:`extract_keys`: the tuple itself for 1-D
+    batches, column 0 for 2-D batches.
+    """
+    if callable(time_by):
+        ets = np.asarray(time_by(arr), dtype=np.float64)
+        if ets.shape != arr.shape[:1]:
+            raise ValueError(
+                f"event-time extractor returned {ets.shape} times for a "
+                f"batch of {len(arr)} tuples")
+        return ets
+    col = 0 if time_by is None else int(time_by)
+    if arr.ndim == 1:
+        if col != 0:
+            raise ValueError(
+                f"event_time column {col} requested on a 1-D batch")
+        return arr.astype(np.float64, copy=False)
+    return arr[:, col].astype(np.float64, copy=False)
+
+
+class WatermarkMerger:
+    """Min-merge of per-lane low-watermarks, monotone per lane.
+
+    One lane per producer execution unit.  A lane's watermark never
+    regresses (stale values are ignored), and the merged watermark is the
+    minimum over *all* expected lanes — ``-inf`` until every lane has
+    reported, because an unheard-from producer may still hold arbitrarily
+    old tuples.  Min-merge is associative and commutative, so replica
+    fan-in can be merged in any grouping (the property test pins this
+    down); that is what lets watermarks ride the same compiled routes as
+    data with no ordering coordination across lanes.
+    """
+
+    __slots__ = ("expected", "_lanes")
+
+    def __init__(self, expected: int):
+        self.expected = expected
+        self._lanes: Dict[str, float] = {}
+
+    def update(self, lane: str, value: float) -> float:
+        """Advance ``lane`` to ``value`` (monotone) and return the merged
+        watermark."""
+        if value > self._lanes.get(lane, -math.inf):
+            self._lanes[lane] = value
+        return self.merged
+
+    @property
+    def merged(self) -> float:
+        if len(self._lanes) < self.expected:
+            return -math.inf
+        return min(self._lanes.values())
+
+    def lane(self, name: str) -> float:
+        return self._lanes.get(name, -math.inf)
 
 
 def split_by_key(arr: np.ndarray, keys: np.ndarray,
@@ -225,6 +296,13 @@ class Route:
         j = self._rr % k                 # shuffle: whole batch round-robin
         self._rr += 1
         return [(j, arr)]
+
+    def watermark_lanes(self) -> range:
+        """Lanes a low-watermark is forwarded on: *every* consumer replica,
+        regardless of the data strategy — a watermark is a promise about
+        the whole stream, so each replica needs it even when the data split
+        sends it only a subset of tuples."""
+        return range(self.fanout)
 
     def tuples_entered(self, lane_counts) -> int:
         """Distinct tuples that entered this stream, given per-replica

@@ -22,6 +22,7 @@ container has a single socket — see DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
 import time
@@ -30,10 +31,22 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .apps import StreamingApp
-from .routing import Route, compile_routes, validate_operator_names
-from .state import OperatorState, make_operator_state
+from .routing import (Route, WatermarkMerger, compile_routes,
+                      extract_event_times, validate_operator_names)
+from .state import EventTimeWindowState, OperatorState, make_operator_state
 
 _POISON = object()
+
+
+class _Watermark:
+    """In-band low-watermark message: ``lane`` is the producer executor's
+    unique name (one merge lane per producer replica)."""
+
+    __slots__ = ("lane", "value")
+
+    def __init__(self, lane: str, value: float):
+        self.lane = lane
+        self.value = value
 
 
 @dataclasses.dataclass
@@ -47,6 +60,8 @@ class RuntimeResult:
     states: Dict[str, List[dict]]   # per-operator replica OperatorStates
     # (dict-compatible; .managed holds declared KeyedStore/BroadcastTable/
     #  ValueStore instances — see repro.streaming.state)
+    late_drops: int = 0             # event-time tuples past their last pane
+    panes_fired: int = 0            # event-time panes emitted
 
 
 class _JumboBuffer:
@@ -139,7 +154,8 @@ class Executor(threading.Thread):
                  seed: int = 0,
                  lat_sink: Optional[List[float]] = None,
                  on_delivered: Optional[Callable[[int], None]] = None,
-                 max_batches: Optional[int] = None):
+                 max_batches: Optional[int] = None,
+                 event_time=None):
         super().__init__(daemon=True, name=name)
         self.ports = ports
         self.batch = batch
@@ -154,6 +170,15 @@ class Executor(threading.Thread):
         self.lat_sink = lat_sink
         self.on_delivered = on_delivered
         self.max_batches = max_batches
+        # event-time plumbing: spouts with a declared extractor emit
+        # low-watermarks; tasks min-merge them per producer lane and fire
+        # event-time window panes on passage
+        self.event_time = event_time
+        self._wm = -math.inf
+        self._wm_merge = WatermarkMerger(max(expected_poisons, 1))
+        self._wm_fwd = -math.inf
+        win = getattr(state, "window", None)
+        self._et_win = win if isinstance(win, EventTimeWindowState) else None
 
     @property
     def is_spout(self) -> bool:
@@ -174,7 +199,14 @@ class Executor(threading.Thread):
             t0 = time.perf_counter()
             # logical fan-out: every output stream carries the same batch
             self._dispatch([arr] * len(self.ports), t0)
+            if self.event_time is not None and len(arr):
+                ets = extract_event_times(arr, self.event_time)
+                self._wm = max(self._wm, float(ets.max()))
+                self._emit_watermark(self._wm)
         self._drain()
+        if self.event_time is not None:
+            # end of stream: +inf flushes every buffered pane downstream
+            self._emit_watermark(math.inf)
         if self.on_delivered is not None:
             # tuples that entered the dataflow: max over streams — fan-out
             # duplicates tuples, it does not multiply them — and only what
@@ -195,10 +227,80 @@ class Executor(threading.Thread):
                     continue         # wait for every producer replica to end
                 self._shutdown()
                 return
+            if isinstance(item, _Watermark):
+                self._on_watermark(item)
+                continue
             arr, t0 = item
             if self.lat_sink is not None:
                 self.lat_sink.append(time.perf_counter() - t0)
+            if self._et_win is not None:
+                # event-time windowed operator: arriving batches only fill
+                # the buffer; the kernel runs per fired pane on watermark
+                # passage (complete panes in, whatever the batch cut was)
+                self._et_win.insert(arr, t0)
+                continue
             self._dispatch(self.kernel(arr, self.state), t0)
+
+    def _on_watermark(self, msg: _Watermark) -> None:
+        """Merge one lane's watermark; on advance, fire panes and forward.
+
+        The merged watermark is min over producer lanes (monotone per lane,
+        see :class:`~.routing.WatermarkMerger`); panes fire through the
+        kernel in pane order with ``state.pane`` set to the pane's
+        ``(start, end)`` span, and the advanced watermark is forwarded along
+        every compiled route *after* the panes it released."""
+        merged = self._wm_merge.update(msg.lane, msg.value)
+        if not merged > self._wm_fwd:
+            return
+        self._wm_fwd = merged
+        if self._et_win is not None:
+            panes = self._et_win.on_watermark(merged)
+            if panes:
+                # one kernel call per pane (the semantic contract), one
+                # batched dispatch per watermark (the jumbo economics) —
+                # the flush timestamp is the oldest pane's, as everywhere
+                acc: List[List[np.ndarray]] = [[] for _ in self.ports]
+                t0_min = math.inf
+                for rows, t0, span in panes:
+                    self.state.pane = span
+                    outs = self.kernel(rows, self.state)
+                    if len(outs) != len(self.ports):
+                        self._dispatch(outs, t0)     # raises the mismatch
+                    for i, arr in enumerate(outs):
+                        if arr is not None and len(arr):
+                            acc[i].append(arr)
+                    t0_min = min(t0_min, t0)
+                self.state.pane = None
+                self._dispatch(
+                    [np.concatenate(a) if len(a) > 1 else
+                     (a[0] if a else None) for a in acc], t0_min)
+        if self.ports:
+            self._emit_watermark(merged)
+
+    def _emit_watermark(self, value: float) -> None:
+        """Flush buffered jumbos, then forward ``value`` on every lane of
+        every output route (a watermark is a promise about the whole
+        stream; buffered tuples logically precede it and must not be
+        overtaken)."""
+        self._drain()
+        for port in self.ports:
+            for j in port.route.watermark_lanes():
+                self._put_wm(port.queues[j], _Watermark(self.name, value))
+
+    def _put_wm(self, q: queue.Queue, msg: _Watermark) -> None:
+        if self.is_spout:                # interruptible put: stop wins
+            while True:
+                try:
+                    q.put(msg, timeout=0.02)
+                    return
+                except queue.Full:
+                    if self.stop_event.is_set():
+                        # dropped: in duration mode tail panes may stay
+                        # buffered (non-deterministic cut anyway);
+                        # deterministic replay (max_batches) never drops —
+                        # spouts finish their budget and block here freely
+                        return
+        q.put(msg)
 
     # -- the one emit path -------------------------------------------------
     def _dispatch(self, outs, t0: float) -> None:
@@ -288,6 +390,24 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     for name in lg.operators:
         parallelism.setdefault(name, 1)
     routes = compile_routes(app, partition=partition)
+    # event-time panes fire per replica from per-replica buffers: a
+    # non-keyed split would scatter each pane's rows over replicas and
+    # every replica would fire its own partial pane — reject instead of
+    # silently aggregating subsets (keyed inputs give *sharded* panes,
+    # one per key-residue owner, which is a coherent semantic)
+    for name, sspec in (getattr(app, "state", None) or {}).items():
+        if sspec.window is not None and sspec.window.time \
+                and parallelism[name] > 1:
+            strategies = {routes.strategy(u, name)
+                          for u in lg.producers(name)}
+            if strategies != {"key"}:
+                raise ValueError(
+                    f"operator {name!r} declares an event-time window at "
+                    f"parallelism {parallelism[name]} with "
+                    f"{sorted(strategies)} input routing: replicas would "
+                    "each fire partial panes over an arbitrary subset of "
+                    "rows. Key every input stream (sharded panes) or keep "
+                    "parallelism 1")
 
     # one input queue per non-spout replica
     in_qs: Dict[Tuple[str, int], queue.Queue] = {}
@@ -337,7 +457,8 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                     f"{name}#{i}", make_ports(name), batch, jumbo,
                     states[name][i], source=app.source_for(name), stop=stop,
                     seed=seed + 7919 * i, on_delivered=add_spout_count,
-                    max_batches=max_batches))
+                    max_batches=max_batches,
+                    event_time=getattr(app, "event_time", {}).get(name)))
             else:
                 tasks.append(Executor(
                     f"{name}#{i}", make_ports(name), batch, jumbo,
@@ -369,6 +490,13 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     sink_ops = lg.sinks()
     sink_tuples = sum(st.get("seen", 0)
                       for op in sink_ops for st in states[op])
+    late = panes = 0
+    for reps in states.values():
+        for st in reps:
+            win = getattr(st, "window", None)
+            if isinstance(win, EventTimeWindowState):
+                late += win.late_drops
+                panes += win.panes_fired
     lat = np.array(latencies) if latencies else np.array([0.0])
     return RuntimeResult(
         duration=wall, sink_tuples=int(sink_tuples),
@@ -376,4 +504,4 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         throughput=sink_tuples / max(wall, 1e-9),
         latency_p50=float(np.percentile(lat, 50)),
         latency_p99=float(np.percentile(lat, 99)),
-        states=states)
+        states=states, late_drops=late, panes_fired=panes)

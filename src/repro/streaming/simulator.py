@@ -18,6 +18,7 @@ Table 4 relative-error analysis.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import math
@@ -29,6 +30,7 @@ from repro.core import ExecutionGraph, MachineSpec
 from repro.core.perfmodel import UNPLACED
 
 from .routing import RoutingTable, unit_delivery
+from .state import WindowSpec, grid_pane_ends
 
 
 @dataclasses.dataclass
@@ -165,6 +167,9 @@ class DesResult:
     state_bytes: float = 0.0        # total declared-state bytes charged
     # (OperatorSpec.state_bytes x tuples — the DES-side ledger of the same
     #  StateSpec-derived traffic the §3.3 constraint and fluid solver charge)
+    pane_latency_p50: float = math.nan  # seconds, pane-end event generated
+    pane_latency_p99: float = math.nan  # at the spout -> pane fired
+    panes_fired: int = 0            # event-time panes fired (post-warmup)
 
 
 def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
@@ -172,7 +177,9 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                  batch: int = 64, horizon: float = 0.02,
                  queue_cap: int = 64, warmup_frac: float = 0.3,
                  seed: int = 0,
-                 routes: Optional[RoutingTable] = None) -> DesResult:
+                 routes: Optional[RoutingTable] = None,
+                 time_windows: Optional[Dict[str, WindowSpec]] = None,
+                 et_spacing: float = 1.0) -> DesResult:
     """Simulate ``horizon`` seconds of plan execution.
 
     Jumbo tuples of ``batch`` tuples flow through bounded FCFS queues.  CPU
@@ -197,6 +204,21 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     bandwidth, service times on that socket stretch by the oversubscription
     factor — the DES-side analogue of the fluid solver's ``mem_mult`` and
     the §3.3 constraint.
+
+    ``time_windows`` (``{operator: WindowSpec(time=True)}``, what
+    ``Plan.simulate`` passes from the app's declarations) turns on
+    *watermark delivery*: each spout unit's low-watermark advances with its
+    emitted tuples (``et_spacing`` event-time units per tuple — the SD
+    event-time convention of one tick per reading), rides the same
+    ``unit_delivery`` edges as the jumbo tuples (one hop per service
+    completion), and is min-merged per consumer unit exactly like the
+    threaded runtime's :class:`~.routing.WatermarkMerger`.  Windowed units
+    fire panes on the same grid arithmetic the runtime uses
+    (:func:`repro.streaming.state.grid_pane_ends`), and
+    ``DesResult.pane_latency_p50/p99`` report pane-end generation at the
+    spout -> pane firing — the latency cost of waiting for completeness
+    (batching + queueing + lateness wait), which no other layer models.
+    Panes are paced on the dense grid (the DES tracks rates, not contents).
     """
     rng = np.random.default_rng(seed)
     n = graph.n_units
@@ -208,6 +230,77 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     delivery = unit_delivery(graph, routes)
     if isinstance(input_rate, dict):
         _validate_spout_rates(graph, input_rate)
+
+    # -- event-time windows: watermark state (see docstring) ---------------
+    win_units: Dict[int, WindowSpec] = {}
+    if time_windows:
+        unknown = sorted(set(time_windows) - set(graph.logical.operators))
+        if unknown:
+            raise ValueError(
+                f"time_windows names unknown operators {unknown}")
+        for op, wspec in time_windows.items():
+            if not wspec.time:
+                raise ValueError(
+                    f"time_windows[{op!r}] is a count window; the DES "
+                    "paces event-time panes only")
+            for vi in graph.units_of(op):
+                win_units[vi] = wspec
+    track_wm = bool(win_units)
+    unit_wm = [-math.inf] * n
+    lane_wm: Dict[Tuple[int, int], float] = {}
+    unit_producers = {v: sorted({u for u, _ in graph.in_edges[v]})
+                      for v in range(n)}
+    fired_bound = {v: -math.inf for v in win_units}
+    spout_count = {v: 0 for v in graph.spout_units()}
+    et_log_e: Dict[int, List[float]] = {v: [] for v in spout_count}
+    et_log_t: Dict[int, List[float]] = {v: [] for v in spout_count}
+    pane_lat: List[float] = []
+    panes_fired = 0
+    anc: Dict[int, List[int]] = {}          # windowed unit -> spout units
+    if track_wm:
+        lg = graph.logical
+        for vi in win_units:
+            seen, frontier = set(), [graph.replicas[vi].op]
+            while frontier:
+                x = frontier.pop()
+                if x in seen:
+                    continue
+                seen.add(x)
+                frontier.extend(lg.producers(x))
+            anc[vi] = [u for sp in lg.spouts() if sp in seen
+                       for u in graph.units_of(sp)]
+
+    def _complete_wall(vi: int, end: float, now: float) -> float:
+        """Wall time the *slowest* ancestor source generated the pane-end
+        event (the moment the pane was complete in the outside world)."""
+        t = 0.0
+        for s in anc[vi]:
+            i = bisect.bisect_left(et_log_e[s], end - 1e-9)
+            t = max(t, et_log_t[s][i] if i < len(et_log_t[s]) else now)
+        return t
+
+    def _propagate_wm(u: int, now: float) -> None:
+        """One watermark hop along the same delivery edges as the jumbos:
+        min-merge per consumer unit, fire panes the merged mark passed."""
+        nonlocal panes_fired
+        for cv, _ in delivery[u]:
+            lane_wm[(u, cv)] = unit_wm[u]
+            merged = min(lane_wm.get((p, cv), -math.inf)
+                         for p in unit_producers[cv])
+            if not merged > unit_wm[cv]:
+                continue
+            unit_wm[cv] = merged
+            wspec = win_units.get(cv)
+            if wspec is None:
+                continue
+            bound = merged - wspec.lateness
+            ends = grid_pane_ends(fired_bound[cv], bound,
+                                  wspec.size, wspec.slide)
+            if len(ends) and now >= warm:
+                panes_fired += len(ends)
+                for e in ends:
+                    pane_lat.append(now - _complete_wall(cv, e, now))
+            fired_bound[cv] = max(fired_bound[cv], bound)
 
     def spout_rate(v: int) -> float:
         op = graph.replicas[v].op
@@ -302,6 +395,13 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
             break
         if kind == "arrive":
             push(now + 1.0 / spout_rate(v), "arrive", v, 0.0)
+            if track_wm:
+                # the source generated `batch` more tuples: its event clock
+                # (and low-watermark) advances whether or not the jumbo fits
+                spout_count[v] += batch
+                unit_wm[v] = spout_count[v] * et_spacing
+                et_log_e[v].append(unit_wm[v])
+                et_log_t[v].append(now)
             if len(queues[v]) >= queue_cap:
                 drops += 1
             else:
@@ -317,17 +417,25 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                     lat.append(now - t0)
             for cv, w in delivery[v]:
                 deliver(v, cv, batch * w, t0, now)
+            if track_wm:
+                _propagate_wm(v, now)
             try_start(v, now)
 
     span = max(horizon - warm, 1e-9)
     lat_arr = np.array(lat) if lat else np.array([0.0])
+    pane_arr = np.array(pane_lat) if pane_lat else None
     return DesResult(
         R=sink_count / span,
         latency_p50=float(np.percentile(lat_arr, 50)),
         latency_p99=float(np.percentile(lat_arr, 99)),
         sim_time=horizon, sink_tuples=sink_count, queue_drops=drops,
         busy_s=np.array(busy_s), unit_tuples=np.array(unit_tuples),
-        mem_rate=np.array(mem_acc) / horizon, state_bytes=state_total)
+        mem_rate=np.array(mem_acc) / horizon, state_bytes=state_total,
+        pane_latency_p50=(math.nan if pane_arr is None else
+                          float(np.percentile(pane_arr, 50))),
+        pane_latency_p99=(math.nan if pane_arr is None else
+                          float(np.percentile(pane_arr, 99))),
+        panes_fired=int(panes_fired))
 
 
 def measure_capacity(graph: ExecutionGraph, machine: MachineSpec,

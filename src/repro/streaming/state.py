@@ -29,6 +29,19 @@ artefact that every layer shares:
 * :class:`WindowSpec` / :class:`WindowState` — declarative tumbling/sliding
   count windows (``moving_avg``-style history without hand-rolled buffers).
 
+* Event-time windows (``WindowSpec(..., time=True)`` or the
+  ``WindowSpec.time_tumbling`` / ``time_sliding`` constructors) — panes over
+  an *event-time column* rather than arrival counts, fired by low-watermark
+  passage (see :mod:`repro.streaming.routing` for merge semantics).  The
+  runtime buffer is :class:`EventTimeWindowState`: out-of-order tuples are
+  held until the merged watermark passes ``pane_end + lateness``, pane
+  contents are emitted in a *canonical order* (event time, then row bytes)
+  so they are byte-identical no matter how arrivals were shuffled, and
+  tuples arriving after their last pane fired are **counted**
+  (``late_drops``), never silently discarded.  The pane-frontier arithmetic
+  (:func:`pane_range`, :func:`fired_bound`) is shared with the DES so both
+  layers assign tuples to panes identically.
+
 * :class:`KeyedStore` / :class:`ValueStore` / :class:`BroadcastTable` — the
   runtime stores.  Kernels receive them through the dict-compatible
   :class:`OperatorState` handle (``state.managed`` / ``state.window``), so
@@ -43,25 +56,62 @@ artefact that every layer shares:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .routing import extract_event_times
 
 STATE_KINDS = ("keyed", "value", "broadcast")
 
 
 @dataclasses.dataclass(frozen=True)
 class WindowSpec:
-    """Count-based window declaration.
+    """Count- or event-time-based window declaration.
 
-    ``size`` tuples per window; ``slide`` is the hop between emitted windows
-    (``1`` = per-tuple sliding, the default; ``slide == size`` = tumbling).
+    Count windows (the default): ``size`` tuples per window; ``slide`` is
+    the hop between emitted windows (``1`` = per-tuple sliding;
+    ``slide == size`` = tumbling).
+
+    Event-time windows (``time=True``, or the :meth:`time_tumbling` /
+    :meth:`time_sliding` constructors): ``size`` and ``slide`` are spans of
+    the *event-time column* over the pane grid ``[k*slide, k*slide + size)``
+    anchored at event time 0.  A pane fires when the operator's merged
+    low-watermark (see :class:`repro.streaming.routing.WatermarkMerger`)
+    passes ``pane_end + lateness`` — so any arrival skew up to ``lateness``
+    cannot change pane contents — and tuples whose every pane has already
+    fired are *counted* (:attr:`EventTimeWindowState.late_drops`), never
+    silently dropped.  ``time_by`` names the event-time column of the
+    operator's input batches (column index or callable; default: column 0
+    of 2-D batches, the tuple value itself for 1-D).
     """
 
-    size: int
-    slide: int = 1
+    size: float
+    slide: float = 1
+    time: bool = False
+    lateness: float = 0.0
+    time_by: object = None
 
     def __post_init__(self):
+        if self.time:
+            if not self.size > 0:
+                raise ValueError(
+                    f"time window size must be > 0, got {self.size}")
+            if not 0 < self.slide <= self.size:
+                raise ValueError(
+                    f"time window slide must be in (0, size={self.size}], "
+                    f"got {self.slide}")
+            if self.lateness < 0:
+                raise ValueError(
+                    f"window lateness must be >= 0, got {self.lateness}")
+            return
+        if self.lateness:
+            raise ValueError("lateness is an event-time concept; declare "
+                             "the window with time=True")
+        if self.time_by is not None:
+            raise ValueError("time_by is an event-time concept; declare "
+                             "the window with time=True")
         if self.size < 1:
             raise ValueError(f"window size must be >= 1, got {self.size}")
         if not 1 <= self.slide <= self.size:
@@ -73,15 +123,78 @@ class WindowSpec:
     def tumbling(cls, size: int) -> "WindowSpec":
         return cls(size, slide=size)
 
+    @classmethod
+    def time_tumbling(cls, size: float, *, lateness: float = 0.0,
+                      time_by: object = None) -> "WindowSpec":
+        return cls(size, slide=size, time=True, lateness=lateness,
+                   time_by=time_by)
+
+    @classmethod
+    def time_sliding(cls, size: float, slide: float, *,
+                     lateness: float = 0.0,
+                     time_by: object = None) -> "WindowSpec":
+        return cls(size, slide=slide, time=True, lateness=lateness,
+                   time_by=time_by)
+
     @property
     def is_tumbling(self) -> bool:
         return self.slide == self.size
 
     def bytes_per_tuple(self, item_bytes: float) -> float:
-        """Window-history bytes scanned per input tuple: each emitted window
-        touches ``size`` items and one window is emitted every ``slide``
-        tuples."""
+        """Window bytes charged per input tuple.
+
+        Count windows: each emitted window touches ``size`` items and one
+        window is emitted every ``slide`` tuples.  Event-time windows: one
+        buffered write, one read per pane the tuple joins (``size/slide``
+        panes on the grid), plus the re-scan share of lateness-held
+        stragglers — this is how the in-flight pane buffer reaches the
+        planner's ``OperatorSpec.state_bytes`` / ``PlanEval.state_usage``.
+        """
+        if self.time:
+            return item_bytes * (1.0 + self.size / self.slide
+                                 + self.lateness / self.size)
         return item_bytes * self.size / self.slide
+
+    def residency_s(self) -> float:
+        """Seconds one tuple stays resident in the window buffer (event-time
+        units read as seconds): a tuple is held until the watermark passes
+        its last pane end plus the lateness allowance.  Count windows buffer
+        by arrival, not time — reported as 0."""
+        return (self.size + self.lateness) if self.time else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Event-time pane arithmetic — shared by the runtime window state and the DES
+# ---------------------------------------------------------------------------
+
+_GRID_EPS = 1e-9
+
+
+def pane_range(ets: np.ndarray, size: float,
+               slide: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Inclusive pane-index range ``[k_lo, k_hi]`` containing each event
+    time: pane ``k`` spans ``[k*slide, k*slide + size)`` on the grid
+    anchored at 0.  The same arithmetic assigns tuples to panes in the
+    threaded runtime and paces pane firing in the DES, which is what the
+    runtime==DES pane-assignment equivalence tests pin down."""
+    ets = np.asarray(ets, dtype=np.float64)
+    k_hi = np.floor(ets / slide + _GRID_EPS).astype(np.int64)
+    k_lo = np.floor((ets - size) / slide + _GRID_EPS).astype(np.int64) + 1
+    return np.maximum(k_lo, 0), k_hi
+
+
+def grid_pane_ends(lo: float, hi: float, size: float,
+                   slide: float) -> np.ndarray:
+    """Grid pane ends ``e = k*slide + size`` with ``lo < e <= hi`` (k >= 0).
+    The DES walks this grid to fire panes as unit watermarks advance."""
+    if not hi > lo or math.isinf(hi):
+        return np.zeros(0)
+    k1 = math.floor((hi - size) / slide + _GRID_EPS)
+    k0 = max(0, math.floor((lo - size) / slide + _GRID_EPS) + 1) \
+        if math.isfinite(lo) else 0
+    if k1 < k0:
+        return np.zeros(0)
+    return np.arange(k0, k1 + 1, dtype=np.float64) * slide + size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +245,12 @@ class StateSpec:
         if self.window is not None:
             b += self.window.bytes_per_tuple(self.item_bytes)
         return b
+
+    def residency_s(self) -> float:
+        """Seconds a tuple stays resident in declared window buffers —
+        the planner-side capacity view of in-flight event-time panes
+        (``OperatorSpec.state_residency_s`` / ``PlanEval.state_resident_bytes``)."""
+        return self.window.residency_s() if self.window is not None else 0.0
 
     def initial_table(self) -> np.ndarray:
         if self.init is not None:
@@ -278,6 +397,129 @@ class WindowState:
         return out
 
 
+class EventTimeWindowState:
+    """Runtime buffer behind an event-time :class:`WindowSpec`.
+
+    Out-of-order tuples are buffered with their event times and wall-clock
+    arrival stamps; :meth:`on_watermark` fires every non-empty pane whose
+    end the merged watermark has passed by ``lateness``.  Fired pane rows
+    are returned in a *canonical order* — ascending event time, ties broken
+    by the full row contents — so pane bytes are identical no matter how
+    arrivals were permuted within the lateness bound.  Tuples whose every
+    pane has already fired are counted in :attr:`late_drops` and never
+    silently discarded.  Event times must be >= 0 (the pane grid anchors
+    at 0).
+    """
+
+    __slots__ = ("spec", "_pending", "_ets", "_rows", "_t0s",
+                 "_fired_bound", "late_drops", "panes_fired")
+
+    def __init__(self, spec: WindowSpec):
+        # (no dtype parameter: pane rows keep the arriving batches' dtype,
+        # unlike the count WindowState whose history buffer needs one)
+        assert spec.time, "EventTimeWindowState requires a time window"
+        self.spec = spec
+        self._pending: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._ets: Optional[np.ndarray] = None
+        self._rows: Optional[np.ndarray] = None
+        self._t0s: Optional[np.ndarray] = None
+        self._fired_bound = -math.inf     # every pane end <= this has fired
+        self.late_drops = 0
+        self.panes_fired = 0
+
+    def insert(self, arr: np.ndarray, t0: float = 0.0) -> int:
+        """Buffer a batch (``t0`` = wall arrival, for pane latency
+        accounting downstream).  Returns the number of late tuples —
+        counted in :attr:`late_drops`, excluded from the buffer."""
+        ets = extract_event_times(arr, self.spec.time_by)
+        if len(ets) and float(ets.min()) < 0:
+            raise ValueError("event times must be >= 0 (the pane grid "
+                             "anchors at event time 0)")
+        _, k_hi = pane_range(ets, self.spec.size, self.spec.slide)
+        last_end = k_hi * self.spec.slide + self.spec.size
+        late = last_end <= self._fired_bound
+        n_late = int(late.sum())
+        if n_late:
+            self.late_drops += n_late
+            keep = ~late
+            arr, ets = arr[keep], ets[keep]
+        if len(arr):
+            self._pending.append((ets, arr,
+                                  np.full(len(arr), float(t0))))
+        return n_late
+
+    def _compact(self) -> None:
+        if not self._pending:
+            return
+        chunks = self._pending
+        self._pending = []
+        if self._ets is not None and len(self._ets):
+            chunks.insert(0, (self._ets, self._rows, self._t0s))
+        self._ets = np.concatenate([c[0] for c in chunks])
+        self._rows = np.concatenate([c[1] for c in chunks])
+        self._t0s = np.concatenate([c[2] for c in chunks])
+
+    @staticmethod
+    def _canonical_order(ets: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Deterministic within-pane order: event time, then row contents."""
+        if rows.ndim == 1:
+            keys: Tuple[np.ndarray, ...] = (rows, ets)
+        else:
+            keys = tuple(rows[:, c] for c in range(rows.shape[1] - 1, -1, -1)
+                         ) + (ets,)
+        return np.lexsort(keys)
+
+    def on_watermark(self, wm: float
+                     ) -> List[Tuple[np.ndarray, float, Tuple[float, float]]]:
+        """Fire every pane the watermark has passed.
+
+        Returns ``[(rows, t0, (pane_start, pane_end)), ...]`` in pane order;
+        ``t0`` is the earliest wall arrival among the pane's tuples, so
+        downstream latency includes the time spent waiting for completeness.
+        A ``+inf`` watermark (end of stream) flushes every buffered pane.
+        """
+        size, slide = self.spec.size, self.spec.slide
+        bound = wm - self.spec.lateness
+        if not bound > self._fired_bound:
+            return []
+        self._compact()
+        fired: List[Tuple[np.ndarray, float, Tuple[float, float]]] = []
+        if self._ets is None or not len(self._ets):
+            self._fired_bound = bound
+            return fired
+        # one canonical sort; panes are then contiguous et ranges, sliced
+        # by searchsorted instead of one boolean mask per pane
+        order = self._canonical_order(self._ets, self._rows)
+        ets = self._ets = self._ets[order]
+        rows = self._rows = self._rows[order]
+        t0s = self._t0s = self._t0s[order]
+        _, k_hi = pane_range(ets, size, slide)
+        if math.isinf(bound):
+            k_last = int(k_hi[-1])
+        else:
+            k_last = math.floor((bound - size) / slide + _GRID_EPS)
+        k_first = 0 if math.isinf(self._fired_bound) else max(
+            0, math.floor((self._fired_bound - size) / slide + _GRID_EPS) + 1)
+        k_first = max(k_first, int(pane_range(ets[:1], size, slide)[0][0]))
+        if k_last >= k_first:
+            ends = np.arange(k_first, k_last + 1) * slide + size
+            los = np.searchsorted(ets, ends - size, side="left")
+            his = np.searchsorted(ets, ends, side="left")
+            for end, lo, hi in zip(ends, los, his):
+                if hi <= lo:
+                    continue
+                fired.append((rows[lo:hi], float(t0s[lo:hi].min()),
+                              (end - size, end)))
+        self._fired_bound = bound
+        self.panes_fired += len(fired)
+        keep = int(np.searchsorted(
+            k_hi * slide + size, self._fired_bound, side="right"))
+        self._ets = ets[keep:].copy()
+        self._rows = rows[keep:].copy()
+        self._t0s = t0s[keep:].copy()
+        return fired
+
+
 class OperatorState(dict):
     """Per-replica state handle a kernel receives.
 
@@ -286,17 +528,21 @@ class OperatorState(dict):
 
     ``managed`` — :class:`KeyedStore` / :class:`ValueStore` /
     :class:`BroadcastTable` per the operator's :class:`StateSpec`;
-    ``window`` — :class:`WindowState` when the spec declares one;
+    ``window`` — :class:`WindowState` (count) or
+    :class:`EventTimeWindowState` (time) when the spec declares one;
+    ``pane`` — the ``(start, end)`` event-time span of the pane a kernel is
+    currently invoked on (event-time windowed operators only, else None);
     ``replica`` / ``fanout`` — this replica's position in the operator.
     """
 
     managed: Optional[object]
-    window: Optional[WindowState]
+    window: Optional[object]
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
         self.managed = None
         self.window = None
+        self.pane = None
         self.replica = 0
         self.fanout = 1
 
@@ -310,7 +556,8 @@ def make_operator_state(spec: Optional[StateSpec], fanout: int = 1,
     if spec is None:
         return st
     if spec.window is not None:
-        st.window = WindowState(spec.window, dtype=spec.dtype)
+        st.window = EventTimeWindowState(spec.window) if spec.window.time \
+            else WindowState(spec.window, dtype=spec.dtype)
     if spec.kind == "keyed":
         st.managed = KeyedStore(spec, n_shards=fanout, shard=replica)
     elif spec.kind == "broadcast":
@@ -357,8 +604,24 @@ def repartition_keyed(spec: StateSpec, merged: np.ndarray,
     return out
 
 
+class UndeclaredStateError(RuntimeError):
+    """``migrate_states(audit=True)`` found non-empty undeclared scratch
+    state that would be silently left behind by the migration."""
+
+
+def _has_content(value) -> bool:
+    if value is None:
+        return False
+    if isinstance(value, np.ndarray):
+        return value.size > 0 and bool(np.any(value))
+    try:
+        return bool(value)
+    except Exception:
+        return True
+
+
 def migrate_states(app, states: Dict[str, List[OperatorState]],
-                   parallelism: Dict[str, int]
+                   parallelism: Dict[str, int], *, audit: bool = False
                    ) -> Dict[str, List[OperatorState]]:
     """Repartition a finished run's states onto a new replica set.
 
@@ -370,8 +633,28 @@ def migrate_states(app, states: Dict[str, List[OperatorState]],
     Undeclared dict scratch state does not migrate (declare it if it must
     survive a replan).  Feed the result to ``run_app(initial_states=...)`` /
     ``Plan.execute(initial_states=...)``.
+
+    ``audit=True`` raises :class:`UndeclaredStateError` when any replica
+    holds non-empty undeclared dict scratch entries — the ROADMAP's audit
+    mode for apps that forgot to declare.  Metric counters ("seen" tallies
+    and the like) count too: they are state the migration loses, and the
+    audit's job is to make that loss explicit, not to guess which keys were
+    disposable.
     """
     specs: Dict[str, StateSpec] = getattr(app, "state", {}) or {}
+    if audit:
+        leftover = []
+        for name in app.graph.operators:
+            for j, st in enumerate(states.get(name, [])):
+                keys = sorted(k for k, v in dict(st).items()
+                              if _has_content(v))
+                if keys:
+                    leftover.append(f"{name}#{j}: {keys}")
+        if leftover:
+            raise UndeclaredStateError(
+                "non-empty undeclared scratch state would not survive this "
+                "migration (declare it via Topology.op(state=StateSpec(...))"
+                " or drop it before migrating): " + "; ".join(leftover))
     out: Dict[str, List[OperatorState]] = {}
     for name in app.graph.operators:
         k_new = parallelism.get(name, 1)

@@ -1,0 +1,461 @@
+"""Event-time windows with watermarks, hardened by an out-of-order harness.
+
+The determinism contract (ISSUE 4 acceptance): for any skew within the
+lateness bound, event-time pane contents are byte-identical between ordered
+and shuffled input; watermarks are monotone per lane; late tuples beyond the
+bound are counted, never silently dropped; and the runtime and the DES
+assign tuples to panes with the same arithmetic.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ExecutionGraph, server_a
+from repro.streaming import Job
+from repro.streaming.api import Topology, TopologyError
+from repro.streaming.apps import (SD_ET_SIZE, SD_ET_SLIDE,
+                                  shuffle_within_skew,
+                                  spike_detection_eventtime)
+from repro.streaming.routing import WatermarkMerger, extract_event_times
+from repro.streaming.runtime import Executor, run_app
+from repro.streaming.simulator import des_simulate
+from repro.streaming.state import (EventTimeWindowState, StateSpec,
+                                   UndeclaredStateError, WindowSpec,
+                                   grid_pane_ends, migrate_states,
+                                   pane_range)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# the out-of-order harness itself
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bound", [0.0, 1.0, 4.0, 16.0])
+def test_shuffle_within_skew_respects_bound(bound):
+    """The seeded shuffler's promise: in the permuted stream, the running
+    max event time never exceeds a pending tuple's by more than ``bound``."""
+    rng = np.random.default_rng(7)
+    ets = np.arange(500, dtype=np.float64)
+    perm = shuffle_within_skew(ets, bound, rng)
+    assert sorted(perm) == list(range(500))            # a permutation
+    shuffled = ets[perm]
+    disorder = np.maximum.accumulate(shuffled) - shuffled
+    assert float(disorder.max()) <= bound + 1e-9
+    if bound >= 4.0:
+        assert float(disorder.max()) > 0               # actually shuffles
+
+
+def _sd_et_sink_rows(skew, lateness, batches=6, seed=3, parallelism=None):
+    """Run sd_et and capture the exact bytes the sink receives."""
+    app = spike_detection_eventtime(skew=skew, lateness=lateness)
+    rows = []
+    k = app.kernels["sink"]
+
+    def spy(batch, state):
+        rows.append(batch.copy())
+        return k(batch, state)
+
+    app.kernels["sink"] = spy
+    res = run_app(app, parallelism or {n: 1 for n in app.graph.operators},
+                  batch=64, max_batches=batches, seed=seed)
+    return (np.concatenate(rows) if rows else np.zeros((0, 4))), res
+
+
+# ---------------------------------------------------------------------------
+# determinism contract (CI acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("skew", [1.0, 4.0, 8.0])
+def test_pane_bytes_identical_ordered_vs_shuffled(skew):
+    """Any skew within the lateness bound cannot change pane contents:
+    shuffled input produces byte-identical sink rows to ordered input."""
+    ordered, r0 = _sd_et_sink_rows(skew=0.0, lateness=8.0)
+    shuffled, r1 = _sd_et_sink_rows(skew=skew, lateness=8.0)
+    assert len(ordered) > 0
+    assert ordered.tobytes() == shuffled.tobytes()
+    assert r1.late_drops == 0                          # within the bound
+    assert r0.panes_fired == r1.panes_fired
+
+
+def test_pane_bytes_identical_across_parallelism():
+    """The watermark min-merge across replica fan-in preserves the same
+    panes when the pipeline runs wider (sink rows arrive jumbo-reordered,
+    so compare as multisets of rows)."""
+    a, _ = _sd_et_sink_rows(skew=4.0, lateness=8.0)
+    b, _ = _sd_et_sink_rows(skew=4.0, lateness=8.0,
+                            parallelism={"parser": 3})
+    assert np.array_equal(a[np.lexsort(a.T[::-1])],
+                          b[np.lexsort(b.T[::-1])])
+
+
+def test_watermarks_monotone_per_lane(monkeypatch):
+    """Every lane's watermark sequence observed at every merging executor
+    is non-decreasing (the substrate's monotonicity invariant)."""
+    seen = {}
+    orig = Executor._on_watermark
+
+    def spy(self, msg):
+        seen.setdefault((self.name, msg.lane), []).append(msg.value)
+        return orig(self, msg)
+
+    monkeypatch.setattr(Executor, "_on_watermark", spy)
+    _sd_et_sink_rows(skew=4.0, lateness=8.0, parallelism={"parser": 2})
+    assert seen                                        # watermarks flowed
+    for (consumer, lane), values in seen.items():
+        assert values == sorted(values), (consumer, lane)
+        assert values[-1] == math.inf                  # end-of-stream flush
+
+
+def test_late_tuples_counted_not_silently_dropped():
+    """Stragglers that cross watermark emissions beyond the lateness bound
+    are tallied per replica and surfaced on the RuntimeResult — never
+    silently discarded.  (Intra-batch skew can never be late: the spout
+    emits its watermark after the batch, so only cross-batch disorder
+    races the frontier.)"""
+    batch, batches = 64, 8
+
+    def straggler_source(n, seed):
+        ets = seed * n + np.arange(n, dtype=np.float64)
+        if seed >= 3:
+            ets[0] = (seed - 3) * n     # 3 batches stale: beyond any pane
+        return ets
+
+    def k_pane(pane, state):
+        return [np.array([float(len(pane))])]
+
+    app = (Topology("straggler")
+           .spout("s", straggler_source, exec_ns=100.0, event_time=0)
+           .op("w", k_pane, exec_ns=100.0,
+               state=StateSpec("value",
+                               window=WindowSpec.time_sliding(
+                                   8.0, 4.0, lateness=4.0)))
+           .sink("sink", lambda b, st_: [], exec_ns=50.0)
+           .build())
+    res = run_app(app, {n: 1 for n in app.graph.operators}, batch=batch,
+                  max_batches=batches, seed=0)
+    assert res.late_drops == batches - 3               # one per stale batch
+    assert res.states["w"][0].window.late_drops == res.late_drops
+    # within the bound nothing is late
+    _, res_ok = _sd_et_sink_rows(skew=8.0, lateness=8.0, batches=8)
+    assert res_ok.late_drops == 0
+
+
+# ---------------------------------------------------------------------------
+# EventTimeWindowState unit contract
+# ---------------------------------------------------------------------------
+
+def _brute_force_panes(ets, rows, size, slide, bound):
+    """Independent pane assignment: tuple t is in pane k iff
+    k*slide <= t < k*slide + size; pane fires iff its end <= bound."""
+    out = {}
+    for k in range(0, int(max(ets) / slide) + 1):
+        end = k * slide + size
+        if not end <= bound:
+            continue
+        mask = (ets >= end - size) & (ets < end)
+        if mask.any():
+            out[round(end, 9)] = np.sort(rows[mask])
+    return out
+
+
+def test_window_state_matches_brute_force():
+    rng = np.random.default_rng(5)
+    ets = rng.uniform(0, 100, size=300)
+    st_ = EventTimeWindowState(WindowSpec.time_sliding(7.0, 3.0))
+    st_.insert(ets, 0.0)
+    fired = st_.on_watermark(80.0)
+    expected = _brute_force_panes(ets, ets, 7.0, 3.0, 80.0)
+    assert {round(span[1], 9) for _, _, span in fired} == set(expected)
+    for rows, _, span in fired:
+        assert np.array_equal(np.sort(rows), expected[round(span[1], 9)])
+
+
+def test_window_state_skips_empty_panes_and_flushes_on_inf():
+    st_ = EventTimeWindowState(WindowSpec.time_tumbling(4.0))
+    st_.insert(np.array([1.0, 2.0, 100.0]), 0.0)
+    fired = st_.on_watermark(np.inf)
+    spans = [span for _, _, span in fired]
+    assert spans == [(0.0, 4.0), (100.0, 104.0)]       # no empty panes
+    assert st_.panes_fired == 2
+    # the frontier is closed: everything later is late, and counted
+    assert st_.insert(np.array([3.0]), 0.0) == 1
+    assert st_.late_drops == 1
+
+
+def test_window_state_rejects_negative_event_times():
+    st_ = EventTimeWindowState(WindowSpec.time_tumbling(4.0))
+    with pytest.raises(ValueError, match=">= 0"):
+        st_.insert(np.array([-1.0]), 0.0)
+
+
+def test_window_pane_t0_is_oldest_arrival():
+    st_ = EventTimeWindowState(WindowSpec.time_tumbling(4.0))
+    st_.insert(np.array([0.5]), t0=10.0)
+    st_.insert(np.array([1.5]), t0=3.0)
+    [(rows, t0, span)] = st_.on_watermark(4.0)
+    assert t0 == 3.0 and span == (0.0, 4.0) and len(rows) == 2
+
+
+def test_time_windowspec_validation():
+    with pytest.raises(ValueError, match="time window size"):
+        WindowSpec.time_tumbling(0.0)
+    with pytest.raises(ValueError, match="time window slide"):
+        WindowSpec.time_sliding(4.0, 5.0)
+    with pytest.raises(ValueError, match="lateness"):
+        WindowSpec.time_sliding(4.0, 2.0, lateness=-1.0)
+    with pytest.raises(ValueError, match="time=True"):
+        WindowSpec(8, lateness=1.0)                    # count + lateness
+    with pytest.raises(ValueError, match="time=True"):
+        WindowSpec(8, time_by=0)                       # count + time_by
+    assert WindowSpec.time_tumbling(4.0).is_tumbling
+
+
+def test_runtime_rejects_shuffled_parallel_time_window():
+    """Panes fire per replica from per-replica buffers, so replicating an
+    event-time windowed operator behind a shuffle route would shatter
+    every pane into partial aggregates — rejected, not silently wrong."""
+    app = spike_detection_eventtime()
+    with pytest.raises(ValueError, match="partial panes"):
+        run_app(app, {"pane_stats": 2}, batch=64, max_batches=1)
+    # keyed inputs shard panes by key ownership — a coherent semantic
+    def k_pane(pane, state):
+        return [np.array([float(len(pane))])]
+
+    def src(b, sd):
+        ets = sd * b + np.arange(b, dtype=np.float64)
+        keys = np.arange(b, dtype=np.float64) % 7
+        return np.stack([ets, keys], axis=1)
+
+    keyed = (Topology("keyed-panes")
+             .spout("s", src, exec_ns=100.0, event_time=0)
+             .op("w", k_pane, exec_ns=100.0, partition="key", key_by=1,
+                 state=StateSpec("value",
+                                 window=WindowSpec.time_tumbling(
+                                     16.0, time_by=0)))
+             .sink("sink", lambda b, st_: [], exec_ns=50.0)
+             .build())
+    res = run_app(keyed, {"w": 2}, batch=64, max_batches=4)
+    assert res.panes_fired > 0
+
+
+def test_plan_execute_clamps_auto_parallelism_for_time_windows():
+    """Plan.execute's host down-mapping must not replicate a shuffled
+    event-time windowed operator behind the user's back."""
+    plan = Job(spike_detection_eventtime()).plan(
+        server_a(), optimizer="rlas", compress_ratio=5, bestfit=True,
+        max_nodes=2000)
+    assert plan.parallelism["pane_stats"] > 1       # the model wants more
+    res = plan.execute(batches=2, batch=64).raw     # ...the host clamps
+    assert res.panes_fired == res.sink_tuples > 0
+
+
+def test_build_rejects_time_window_without_watermark_source():
+    """The classic stuck-watermark deadlock is a build error, not a hang:
+    a silent spout pins the merged watermark at -inf forever."""
+    t = (Topology("stuck")
+         .spout("s", lambda b, sd: np.arange(b, dtype=np.float64),
+                exec_ns=100.0)                          # no event_time=
+         .op("w", lambda p, st_: [p], exec_ns=100.0,
+             state=StateSpec("value", window=WindowSpec.time_tumbling(8.0))))
+    with pytest.raises(TopologyError, match="never fire"):
+        t.build()
+
+
+# ---------------------------------------------------------------------------
+# watermark merge (runtime) — monotone lanes, min fan-in
+# ---------------------------------------------------------------------------
+
+def test_watermark_merger_min_and_monotone():
+    m = WatermarkMerger(expected=2)
+    assert m.update("a", 5.0) == -math.inf             # lane b unheard
+    assert m.update("b", 3.0) == 3.0                   # min over lanes
+    assert m.update("b", 1.0) == 3.0                   # regressions ignored
+    assert m.lane("b") == 3.0
+    assert m.update("a", 7.0) == 3.0
+    assert m.update("b", 9.0) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# planner + DES integration
+# ---------------------------------------------------------------------------
+
+def test_planner_prices_pane_buffer_and_residency():
+    app = spike_detection_eventtime()
+    spec = app.graph.operators["pane_stats"]
+    w = app.state["pane_stats"].window
+    expected_state = 16.0 * (1.0 + w.size / w.slide + w.lateness / w.size)
+    assert spec.state_bytes == pytest.approx(expected_state)
+    assert spec.mem_bytes == pytest.approx(64.0 + expected_state)
+    assert spec.state_residency_s == pytest.approx(w.size + w.lateness)
+    ev = Job(app).plan(server_a(), optimizer="ff").estimate(
+        input_rate=1e5).raw
+    assert ev.state_resident_bytes is not None
+    assert ev.state_resident_bytes.sum() > 0
+    # count-window WC pins nothing resident (arrival-bounded history)
+    from repro.streaming.apps import word_count
+    ev_wc = Job(word_count()).plan(server_a(), optimizer="ff").estimate(
+        input_rate=1e5).raw
+    assert ev_wc.state_resident_bytes.sum() == 0
+
+
+def test_des_reports_pane_firing_latency():
+    """Plan.simulate hands the declared time windows to the DES, which
+    fires panes on watermark passage along the delivery tables and reports
+    the completeness-wait latency no other layer models."""
+    plan = Job(spike_detection_eventtime()).plan(server_a(), optimizer="ff")
+    des = plan.simulate(input_rate=2e5, horizon=0.03).raw
+    assert des.panes_fired > 0
+    assert des.pane_latency_p99 >= des.pane_latency_p50 > 0
+    # an explicit empty mapping disables pane pacing
+    des_off = plan.simulate(input_rate=2e5, horizon=0.03,
+                            time_windows=None).raw
+    assert des_off.panes_fired == 0
+    assert math.isnan(des_off.pane_latency_p50)
+
+
+def test_des_rejects_bad_time_windows():
+    app = spike_detection_eventtime()
+    g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators},
+                       routes=app.routes())
+    with pytest.raises(ValueError, match="unknown operators"):
+        des_simulate(g, server_a(), [0] * g.n_units, input_rate=1e5,
+                     time_windows={"ghost": WindowSpec.time_tumbling(4.0)})
+    with pytest.raises(ValueError, match="count window"):
+        des_simulate(g, server_a(), [0] * g.n_units, input_rate=1e5,
+                     time_windows={"pane_stats": WindowSpec(8)})
+
+
+def test_runtime_and_des_agree_on_pane_pacing():
+    """Same ingest volume -> same pane cadence: the runtime's fired pane
+    count matches the grid arithmetic the DES walks (up to the end-of-
+    stream flush, which the runtime's +inf watermark completes and the
+    finite-horizon DES does not see)."""
+    batches, batch, seed = 8, 64, 3
+    _, res = _sd_et_sink_rows(skew=0.0, lateness=0.0, batches=batches,
+                              seed=seed)
+    # the sd_et source ticks once per reading starting at seed*batch
+    ets = np.arange(seed * batch, (seed + batches) * batch,
+                    dtype=np.float64)
+    ends = grid_pane_ends(-math.inf, ets[-1] + SD_ET_SIZE,
+                          SD_ET_SIZE, SD_ET_SLIDE)
+    k_lo, k_hi = pane_range(ets, SD_ET_SIZE, SD_ET_SLIDE)
+    non_empty = {e for e in ends
+                 if np.any((k_lo <= (e - SD_ET_SIZE) / SD_ET_SLIDE)
+                           & ((e - SD_ET_SIZE) / SD_ET_SLIDE <= k_hi))}
+    assert res.panes_fired == len(non_empty)
+
+
+# ---------------------------------------------------------------------------
+# migration audit mode (ROADMAP follow-on)
+# ---------------------------------------------------------------------------
+
+def _forgetful_app():
+    """An app whose counter mutates undeclared dict scratch state."""
+    def k_count(batch, state):
+        c = state.setdefault("counts", np.zeros(32, np.int64))
+        np.add.at(c, batch.astype(np.int64) % 32, 1)
+        return [batch]
+
+    return (Topology("forgetful")
+            .spout("s", lambda b, sd: np.random.default_rng(sd)
+                   .integers(0, 32, size=b).astype(np.float64),
+                   exec_ns=100.0)
+            .op("count", k_count, exec_ns=100.0)
+            .sink("sink", lambda b, st_: [], exec_ns=50.0)
+            .build())
+
+
+def test_migration_audit_catches_forgetful_app():
+    app = _forgetful_app()
+    res = run_app(app, {n: 1 for n in app.graph.operators}, batch=64,
+                  max_batches=2)
+    # default: silent best-effort (seed behaviour, scratch left behind)
+    migrate_states(app, res.states, {n: 1 for n in app.graph.operators})
+    with pytest.raises(UndeclaredStateError, match="count#0.*counts"):
+        migrate_states(app, res.states, {n: 1 for n in app.graph.operators},
+                       audit=True)
+
+
+def test_migration_audit_passes_declared_only_states():
+    from repro.streaming.apps import word_count
+    app = word_count()
+    res = run_app(app, {n: 1 for n in app.graph.operators}, batch=64,
+                  max_batches=2)
+    for st_ in res.states["sink"]:
+        st_.pop("seen", None)          # metric counters count as state too
+    out = migrate_states(app, res.states,
+                         {n: 1 for n in app.graph.operators}, audit=True)
+    assert int(out["counter"][0].managed.table.sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skipped when unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(size_n=st.integers(1, 40), slide_n=st.integers(1, 40),
+           lateness_n=st.integers(0, 10), wm=st.floats(0.0, 300.0),
+           skew=st.floats(0.0, 20.0), seed=st.integers(0, 2**16))
+    def test_pane_assignment_equivalence_runtime_vs_des(
+            size_n, slide_n, lateness_n, wm, skew, seed):
+        """For random tumbling/sliding (size, slide) pairs, the runtime's
+        fired panes are exactly the non-empty panes of the grid the DES
+        walks (same `grid_pane_ends` arithmetic), and membership matches
+        the pane definition — under shuffled arrival order."""
+        slide = min(slide_n, size_n) * 0.5
+        size = size_n * 0.5
+        lateness = lateness_n * 0.5
+        rng = np.random.default_rng(seed)
+        ets = rng.uniform(0, 200, size=80)
+        perm = shuffle_within_skew(ets, skew, rng)
+        spec = WindowSpec.time_sliding(size, slide, lateness=lateness)
+        st_ = EventTimeWindowState(spec)
+        for chunk in np.array_split(ets[perm], 5):
+            st_.insert(chunk, 0.0)
+        fired = st_.on_watermark(wm)
+        grid = set(np.round(grid_pane_ends(-math.inf, wm - lateness,
+                                           size, slide), 9))
+        k_lo, k_hi = pane_range(ets, size, slide)
+        for rows, _, (start, end) in fired:
+            assert round(end, 9) in grid               # DES grid == runtime
+            k = round((end - size) / slide)
+            member = ets[(k_lo <= k) & (k <= k_hi)]
+            assert np.array_equal(np.sort(rows), np.sort(member))
+        # completeness: every non-empty grid pane fired
+        ends_fired = {round(end, 9) for _, _, (s0, end) in fired}
+        for e in grid:
+            k = round((e - size) / slide)
+            if np.any((k_lo <= k) & (k <= k_hi)):
+                assert round(e, 9) in ends_fired
+
+    @settings(max_examples=80, deadline=None)
+    @given(updates=st.lists(
+        st.tuples(st.sampled_from(["a", "b", "c", "d"]),
+                  st.floats(-100, 100)), min_size=4, max_size=40),
+        seed=st.integers(0, 2**16))
+    def test_watermark_merge_associativity(updates, seed):
+        """Min-merge across replica fan-in is order- and grouping-
+        independent: any interleaving of lane updates and any two-level
+        merge tree yield the same final watermark."""
+        lanes = {"a", "b", "c", "d"}
+        if {u[0] for u in updates} != lanes:
+            updates = updates + [(ln, -50.0) for ln in lanes]
+        rng = np.random.default_rng(seed)
+        flat = WatermarkMerger(expected=4)
+        for lane, v in updates:
+            flat.update(lane, v)
+        shuffled = WatermarkMerger(expected=4)
+        for i in rng.permutation(len(updates)):
+            shuffled.update(*updates[i])
+        # two-level tree: merge {a,b} and {c,d} then min the groups
+        g1, g2 = WatermarkMerger(2), WatermarkMerger(2)
+        for lane, v in updates:
+            (g1 if lane in ("a", "b") else g2).update(lane, v)
+        assert flat.merged == shuffled.merged == min(g1.merged, g2.merged)
