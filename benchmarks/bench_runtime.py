@@ -35,7 +35,7 @@ from repro.streaming.api import Topology  # noqa: E402
 from repro.streaming.apps import (WC_VOCAB,  # noqa: E402
                                   WC_WORDS_PER_SENTENCE, linear_road,
                                   spike_detection, spike_detection_eventtime,
-                                  word_count)
+                                  spike_detection_keyed, word_count)
 from repro.streaming.routing import (RouteSpec, split_by_key,  # noqa: E402
                                      split_by_key_masks)
 from repro.streaming.runtime import run_app  # noqa: E402
@@ -64,10 +64,12 @@ def bench_split(rows: int, k: int, iters: int) -> dict:
 
 def bench_app(name: str, make, parallelism: dict, batch: int,
               duration: float, repeat: int) -> dict:
-    """Median end-to-end throughput/p99 in both routing modes."""
+    """Median end-to-end throughput/p99 in both forced routing modes plus
+    the per-edge auto selection (``vectorized=None``, the default)."""
     out = {"batch": batch, "parallelism": parallelism}
     run_app(make(), parallelism, batch=batch, duration=min(duration, 0.2))
-    for mode, vectorized in [("masks", False), ("vectorized", True)]:
+    for mode, vectorized in [("masks", False), ("vectorized", True),
+                             ("auto", None)]:
         # a throwaway warm run above stabilises thread startup; repeat
         # medians absorb scheduler noise
         thr, p99 = [], []
@@ -83,6 +85,10 @@ def bench_app(name: str, make, parallelism: dict, batch: int,
              duration * 1e6, f"{out[mode]['throughput']:.0f}tps")
     out["speedup"] = round(out["vectorized"]["throughput"] /
                            max(out["masks"]["throughput"], 1e-9), 3)
+    out["auto_vs_best"] = round(
+        out["auto"]["throughput"] /
+        max(out["masks"]["throughput"],
+            out["vectorized"]["throughput"], 1e-9), 3)
     emit(f"runtime_{name}_speedup_b{batch}", 0.0, f"{out['speedup']:.3f}x")
     return out
 
@@ -138,16 +144,19 @@ def bench_state(batch: int, duration: float, repeat: int) -> dict:
 
 def bench_eventtime(batch: int, duration: float, repeat: int) -> dict:
     """SD A/B: event-time sliding panes (watermark-fired, out-of-order
-    input) vs the seed's count-based sliding window, end to end on the
-    threaded runtime.  The ratio prices what watermarking costs (per-batch
-    jumbo flushes + pane buffering) against the count path that cannot
-    tolerate disorder at all; late/pane tallies confirm the event-time run
-    actually exercised the substrate."""
+    input, segmented kernel — one stacked call per watermark) vs the
+    seed's count-based sliding window, end to end on the threaded
+    runtime, plus the keyed-pane variant (sd_key, per-device sessions).
+    The ratio prices what watermarking costs (per-batch jumbo flushes +
+    pane buffering) against the count path that cannot tolerate disorder
+    at all; late/pane tallies confirm the event-time run actually
+    exercised the substrate."""
     out = {"batch": batch, "parallelism": {"parser": 2}}
     run_app(spike_detection_eventtime(), out["parallelism"], batch=batch,
             duration=min(duration, 0.2))               # warm threads
     for label, make in [("count", spike_detection),
-                        ("eventtime", spike_detection_eventtime)]:
+                        ("eventtime", spike_detection_eventtime),
+                        ("keyed", spike_detection_keyed)]:
         ingest, thr, panes, late = [], [], 0, 0
         for r in range(repeat):
             res = run_app(make(), out["parallelism"], batch=batch,
@@ -158,7 +167,7 @@ def bench_eventtime(batch: int, duration: float, repeat: int) -> dict:
             late += res.late_drops
         out[label] = {"ingest": round(statistics.median(ingest), 1),
                       "throughput": round(statistics.median(thr), 1)}
-        if label == "eventtime":
+        if label != "count":
             out[label]["panes_fired"] = panes
             out[label]["late_drops"] = late
         emit(f"eventtime_sd_{label}_b{batch}", duration * 1e6,
@@ -181,6 +190,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--repeat", type=int, default=None)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_streaming.json"))
+    ap.add_argument("--floor-eventtime", type=float, default=None,
+                    metavar="RATIO",
+                    help="exit nonzero unless eventtime.ingest_ratio >= "
+                         "RATIO (the CI guard against the pane-at-a-time "
+                         "regression sneaking back)")
     args = ap.parse_args(argv)
     duration = args.duration or (0.1 if args.smoke else 0.8)
     repeat = args.repeat or (1 if args.smoke else 7)
@@ -198,18 +212,34 @@ def main(argv=None) -> dict:
                         {"dispatcher": 2, "toll_history": 4}, 1024,
                         duration, repeat),
     }
+    # the floor gate needs a window long enough to amortize thread startup
+    # and the first pane-firing ramp: smoke durations systematically
+    # under-report the event-time path (~0.35x at 0.1s vs ~0.55x at 0.8s),
+    # so the gated section runs at bench-grade settings even under --smoke
+    # (medians over 5 runs keep the scheduler-noise tail off the gate)
+    et_duration = max(duration, 0.8) if args.floor_eventtime else duration
+    et_repeat = max(repeat, 5) if args.floor_eventtime else repeat
     report = {
         "meta": {"cpus": os.cpu_count(), "duration_s": duration,
                  "repeat": repeat, "smoke": bool(args.smoke)},
         "micro": micro,
         "apps": apps,
         "state": bench_state(256, duration, repeat),
-        "eventtime": bench_eventtime(256, duration, repeat),
+        "eventtime": bench_eventtime(256, et_duration, et_repeat),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {os.path.abspath(args.out)}")
+    if args.floor_eventtime is not None:
+        ratio = report["eventtime"]["ingest_ratio"]
+        if ratio < args.floor_eventtime:
+            print(f"# FAIL eventtime ingest_ratio {ratio:.3f} < floor "
+                  f"{args.floor_eventtime:.3f} (segmented pane engine "
+                  "regressed toward pane-at-a-time cost)")
+            sys.exit(1)
+        print(f"# eventtime ingest_ratio {ratio:.3f} >= floor "
+              f"{args.floor_eventtime:.3f}")
     return report
 
 

@@ -35,13 +35,20 @@ class OperatorSpec:
                    the declaration instead of a hand-tuned constant, and
                    the model reports the state share separately
                    (``PlanEval.state_usage``).
-    ``state_residency_s`` — seconds one tuple stays resident in declared
-                   window buffers (event-time windows hold tuples for
-                   ``size + lateness`` of event time before their panes can
-                   fire; count windows report 0).  The model multiplies it
-                   by the processed rate and tuple size to expose the
-                   memory held by in-flight panes
-                   (``PlanEval.state_resident_bytes``).
+    ``state_resident_tuples`` — window-buffer *occupancy* in tuples: how
+                   many rows the operator's declared window holds resident
+                   at once (event-time windows buffer ``size + lateness``
+                   event-time units of stream awaiting watermark passage;
+                   count windows hold ``size`` arrivals of history — the
+                   degenerate segmented case).  The model multiplies it by
+                   the tuple size (shared across an operator's replicas —
+                   each shard buffers its slice of the stream) to expose
+                   the memory pinned by in-flight pane batches
+                   (``PlanEval.state_resident_bytes``).  Occupancy is
+                   rate-independent: pricing residency in wall-seconds
+                   Little's-law style over-charged event-time operators by
+                   orders of magnitude (a 64-tick pane is microseconds of
+                   buffering at realistic rates, not 64 seconds).
     """
 
     name: str
@@ -51,7 +58,13 @@ class OperatorSpec:
     selectivity: float = 1.0
     is_spout: bool = False
     state_bytes: float = 0.0
-    state_residency_s: float = 0.0
+    state_resident_tuples: float = 0.0
+    #: True when the occupancy is a property of the *stream* and shards
+    #: across the operator's replicas (event-time pane buffers: each keyed
+    #: shard holds its slice of the same size+lateness span); False when
+    #: every replica holds its own full buffer (count-window history is
+    #: per-replica arrival position, so replication multiplies it)
+    state_resident_shared: bool = True
 
     @property
     def exec_s(self) -> float:

@@ -56,10 +56,12 @@ class PlanEval:
     # declared operator state (OperatorSpec.state_bytes) — the share of
     # mem_usage that managed keyed/broadcast/window state accounts for
     state_resident_bytes: Optional[np.ndarray] = None  # per-socket bytes
-    # held RESIDENT by in-flight window panes: rate x residency x tuple
-    # size (Little's law over OperatorSpec.state_residency_s) — how much
-    # memory event-time buffering pins on each socket, reported so RLAS
-    # plans see the cost of waiting for completeness
+    # held RESIDENT by in-flight window pane batches: buffer occupancy in
+    # tuples x tuple size (OperatorSpec.state_resident_tuples, shared
+    # across an operator's replicas) — how much memory window buffering
+    # pins on each socket.  Occupancy is rate-independent: the retired
+    # wall-seconds Little's-law form priced panes, not pane batches, and
+    # over-charged event-time operators by orders of magnitude.
 
     def summary(self) -> str:
         return (f"R={self.R:,.0f} tuples/s feasible={self.feasible} "
@@ -163,8 +165,15 @@ def evaluate(graph: ExecutionGraph, machine: MachineSpec,
         cpu[s] += util[v]
         mem[s] += processed[v] * rep.spec.mem_bytes
         state_mem[s] += processed[v] * rep.spec.state_bytes
-        state_resident[s] += processed[v] * rep.spec.state_residency_s \
-            * rep.spec.tuple_bytes
+        # occupancy is a property of the window, not the rate.  Stream-
+        # sharded buffers (event-time panes) split across the operator's
+        # replicas, so a unit's share scales with group/fan-out; per-
+        # replica buffers (count-window history) replicate with the group
+        occ = rep.spec.state_resident_tuples * rep.spec.tuple_bytes \
+            * rep.group
+        if rep.spec.state_resident_shared:
+            occ /= graph.parallelism[rep.op]
+        state_resident[s] += occ
     for (u, v), rate in edge_fetch.items():
         su, sv = placement[u], placement[v]
         if su == UNPLACED or sv == UNPLACED or su == sv:

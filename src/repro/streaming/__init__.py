@@ -10,17 +10,19 @@ from .api import (Job, Metrics, Plan, StreamingApp, Topology, TopologyError)
 from .routing import (PARTITION_STRATEGIES, Route, RouteSpec, RoutingTable,
                       WatermarkMerger, compile_routes, extract_event_times)
 from .state import (BroadcastTable, EventTimeWindowState, KeyedStore,
-                    OperatorState, StateSpec, UndeclaredStateError,
-                    ValueStore, WindowSpec, WindowState, grid_pane_ends,
+                    OperatorState, PaneBatch, PaneSegments, StateSpec,
+                    UndeclaredStateError, ValueStore, WindowSpec,
+                    WindowState, gather_segments, grid_pane_ends,
                     merge_keyed, migrate_states, pane_range,
-                    repartition_keyed)
+                    repartition_keyed, segmented)
 
 __all__ = ["Job", "Metrics", "Plan", "StreamingApp", "Topology",
            "TopologyError", "PARTITION_STRATEGIES", "Route", "RouteSpec",
            "RoutingTable", "WatermarkMerger", "compile_routes",
            "extract_event_times",
            "BroadcastTable", "EventTimeWindowState", "KeyedStore",
-           "OperatorState", "StateSpec", "UndeclaredStateError",
-           "ValueStore", "WindowSpec", "WindowState", "grid_pane_ends",
+           "OperatorState", "PaneBatch", "PaneSegments", "StateSpec",
+           "UndeclaredStateError", "ValueStore", "WindowSpec",
+           "WindowState", "gather_segments", "grid_pane_ends",
            "merge_keyed", "migrate_states", "pane_range",
-           "repartition_keyed"]
+           "repartition_keyed", "segmented"]

@@ -69,6 +69,9 @@ class StreamingApp:
     key_by: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
     state: Dict[str, StateSpec] = dataclasses.field(default_factory=dict)
     event_time: Dict[str, KeyBy] = dataclasses.field(default_factory=dict)
+    watermark_every: Dict[str, int] = dataclasses.field(default_factory=dict)
+    watermark_interval: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def time_windows(self) -> Dict[str, WindowSpec]:
         """Declared event-time windows (operator -> WindowSpec) — what
@@ -100,6 +103,8 @@ class _OpDecl:
     key_by: Optional[KeyBy] = None
     state: Optional[StateSpec] = None
     event_time: Optional[KeyBy] = None      # spouts: event-time extractor
+    watermark_every: int = 1                # spouts: mark every N batches
+    watermark_interval: Optional[float] = None   # ... or every T et units
 
 
 class Topology:
@@ -129,27 +134,61 @@ class Topology:
               exec_ns: float, tuple_bytes: float = 64.0,
               mem_bytes: Optional[float] = None,
               selectivity: float = 1.0,
-              event_time: Optional[KeyBy] = None) -> "Topology":
+              event_time: Optional[KeyBy] = None,
+              watermark_every: int = 1,
+              watermark_interval: Optional[float] = None) -> "Topology":
         """Declare a source operator.  ``source(batch, seed) -> array``.
 
         ``event_time`` names the event-time column of the spout's output
         batches (column index or callable, same shape rule as ``key_by``).
-        A spout that declares it emits *low-watermarks*: after each batch
-        the runtime forwards ``max(event time emitted so far)`` along every
-        compiled route, which is what fires downstream event-time window
-        panes (``WindowSpec(time=True)``)."""
-        if event_time is not None:
-            try:
+        A spout that declares it emits *low-watermarks*: the runtime
+        forwards ``max(event time emitted so far)`` along every compiled
+        route, which is what fires downstream event-time window panes
+        (``WindowSpec(time=True)``).
+
+        ``watermark_every=N`` emits the mark every N batches instead of
+        every batch; ``watermark_interval=T`` emits whenever the spout's
+        event clock advanced by at least T event-time units since the last
+        mark (declare one or the other).  Each mark flushes the spout's
+        buffered jumbos — a watermark never overtakes its tuples — so a
+        coarser cadence amortizes flushes against pane-firing latency.
+        The defaults preserve the per-batch behavior, and end of stream
+        always emits a final ``+inf`` mark."""
+        try:
+            if event_time is not None:
                 validate_time_extractor(name, event_time)
-            except ValueError as e:
-                raise TopologyError(str(e)) from None
+            if isinstance(watermark_every, bool) or \
+                    not isinstance(watermark_every, int) or \
+                    watermark_every < 1:
+                raise ValueError(
+                    f"spout {name!r}: watermark_every must be an int >= 1, "
+                    f"got {watermark_every!r}")
+            if watermark_interval is not None and \
+                    not watermark_interval > 0:
+                raise ValueError(
+                    f"spout {name!r}: watermark_interval must be > 0, "
+                    f"got {watermark_interval!r}")
+            if watermark_every != 1 and watermark_interval is not None:
+                raise ValueError(
+                    f"spout {name!r}: declare watermark_every or "
+                    "watermark_interval, not both (batch-count and "
+                    "event-time cadences would race)")
+            if (watermark_every != 1 or watermark_interval is not None) \
+                    and event_time is None:
+                raise ValueError(
+                    f"spout {name!r}: a watermark cadence requires "
+                    "event_time= (no event clock, no watermarks)")
+        except ValueError as e:
+            raise TopologyError(str(e)) from None
         self._declare(_OpDecl(
             name, None,
             OperatorSpec(name, exec_ns, tuple_bytes,
                          tuple_bytes if mem_bytes is None else mem_bytes,
                          selectivity, is_spout=True),
             inputs=[], edge_selectivity={}, partition="shuffle",
-            source=source, event_time=event_time))
+            source=source, event_time=event_time,
+            watermark_every=watermark_every,
+            watermark_interval=watermark_interval))
         return self
 
     def op(self, name: str, kernel: Optional[Callable] = None, *,
@@ -204,10 +243,20 @@ class Topology:
                         f"operator {name!r} declares keyed state but "
                         f"partition={partition!r}: a keyed store is sharded "
                         "by the operator's keyed route (partition='key')")
+                if state.window is not None and state.window.keyed \
+                        and not declares_key(partition):
+                    raise ValueError(
+                        f"operator {name!r} declares keyed event-time "
+                        f"panes but partition={partition!r}: pane groups "
+                        "shard by the operator's compiled keyed route "
+                        "(partition='key')")
         except ValueError as e:
             raise TopologyError(str(e)) from None
         state_bytes = state.bytes_per_tuple() if state is not None else 0.0
-        residency = state.residency_s() if state is not None else 0.0
+        resident = state.resident_tuples() if state is not None else 0.0
+        # event-time pane buffers shard the stream across replicas; count-
+        # window history is per-replica arrival position and replicates
+        shared = state is None or state.window is None or state.window.time
         if state is not None:
             mem = tuple_bytes + state_bytes
         else:
@@ -217,7 +266,8 @@ class Topology:
             name, kernel,
             OperatorSpec(name, exec_ns, tuple_bytes, mem, selectivity,
                          state_bytes=state_bytes,
-                         state_residency_s=residency),
+                         state_resident_tuples=resident,
+                         state_resident_shared=shared),
             inputs=names, edge_selectivity=esel, partition=partition,
             source=None, key_by=key_by, state=state))
         return self
@@ -285,6 +335,18 @@ class Topology:
         """Declared spout event-time extractors (spout -> column/callable)."""
         return {n: d.event_time for n, d in self._decls.items()
                 if d.event_time is not None}
+
+    @property
+    def watermark_every(self) -> Dict[str, int]:
+        """Declared non-default batch-count watermark cadences."""
+        return {n: d.watermark_every for n, d in self._decls.items()
+                if d.watermark_every != 1}
+
+    @property
+    def watermark_interval(self) -> Dict[str, float]:
+        """Declared event-time watermark cadences (spout -> T units)."""
+        return {n: d.watermark_interval for n, d in self._decls.items()
+                if d.watermark_interval is not None}
 
     @property
     def is_executable(self) -> bool:
@@ -402,7 +464,9 @@ class Topology:
                             make_source=next(iter(sources.values())),
                             partition=self.partition, sources=sources,
                             key_by=self.key_by, state=self.state,
-                            event_time=self.event_time)
+                            event_time=self.event_time,
+                            watermark_every=self.watermark_every,
+                            watermark_interval=self.watermark_interval)
 
 
 # ---------------------------------------------------------------------------
@@ -728,6 +792,14 @@ class Plan:
         # firing and reports pane latency (DesResult.pane_latency_*)
         if self.job.time_windows and "time_windows" not in kw:
             kw["time_windows"] = self.job.time_windows
+        # pace each spout's event clock at its *measured* increment (a
+        # seeded source probe) instead of the one-tick-per-tuple constant,
+        # so pane latency percentiles track bursty sources
+        if kw.get("time_windows") and "et_spacing" not in kw \
+                and self.job.app is not None:
+            from .simulator import probe_et_spacing
+            kw["et_spacing"] = probe_et_spacing(self.job.app, batch=batch,
+                                                seed=seed)
         if rate is None:
             des = measure_capacity(self.graph, self.machine, self.placement,
                                    batch=batch, horizon=horizon, seed=seed,
@@ -744,7 +816,7 @@ class Plan:
                 partition: Optional[Dict[str, str]] = None,
                 parallelism: Optional[Dict[str, int]] = None,
                 max_threads: Optional[int] = None, seed: int = 0,
-                vectorized: bool = True,
+                vectorized: Optional[bool] = None,
                 batches: Optional[int] = None,
                 initial_states: Optional[Dict[str, list]] = None) -> Metrics:
         """Run the plan on the real threaded runtime of this host.
@@ -773,7 +845,10 @@ class Plan:
                                              self.eval, self.graph)
             # auto-derived plans clamp non-keyed event-time windowed ops
             # to one replica (run_app rejects them outright): panes fire
-            # per replica, so a shuffle split would shatter every pane
+            # per replica, so a shuffle split would shatter every pane.
+            # Keyed routes keep their planned replication — with keyed
+            # pane groups (WindowSpec(keyed=True)) the pane unit is
+            # (key, span) and replication preserves pane bytes exactly
             for op in self.job.time_windows:
                 prods = self.job.graph.producers(op)
                 keyed = bool(prods) and all(

@@ -33,11 +33,11 @@ import time
 import numpy as np
 
 from .api import StreamingApp, Topology
-from .state import StateSpec, WindowSpec
+from .state import StateSpec, WindowSpec, segmented
 
 __all__ = ["ALL_APPS", "StreamingApp", "word_count", "fraud_detection",
-           "spike_detection", "spike_detection_eventtime", "linear_road",
-           "shuffle_within_skew"]
+           "spike_detection", "spike_detection_eventtime",
+           "spike_detection_keyed", "linear_road", "shuffle_within_skew"]
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +310,11 @@ def linear_road() -> StreamingApp:
 SD_ET_SIZE = 64.0       # pane span, event-time ticks (1 tick per reading)
 SD_ET_SLIDE = 16.0      # sliding hop
 SD_ET_SKEW = 8.0        # default max out-of-orderness of the sensor stream
+SD_ET_WM_EVERY = 8      # watermark cadence, batches per mark: panes fire in
+# bursts of ~8 batches' worth, amortizing the per-mark jumbo flush + merge
+# + segmented fire over 8x the tuples (the cadence satellite's first user;
+# 16 measures *worse* on the CI container — the fire bursts outgrow the
+# pipeline's queue slack — so 8 is the calibrated point, not a floor)
 
 
 def shuffle_within_skew(ets: np.ndarray, bound: float,
@@ -327,42 +332,58 @@ def shuffle_within_skew(ets: np.ndarray, bound: float,
 
 
 def spike_detection_eventtime(skew: float = SD_ET_SKEW,
-                              lateness: float = None) -> StreamingApp:
+                              lateness: float = None,
+                              watermark_every: int = SD_ET_WM_EVERY
+                              ) -> StreamingApp:
     """SD over an out-of-order sensor stream (event-time windows).
 
     ``skew`` bounds the stream's out-of-orderness (tuples are permuted
     within it, seeded); ``lateness`` is the window's lateness allowance and
     defaults to ``skew`` — the bound under which pane contents are provably
     identical to an ordered run.  The permutation is intra-batch and the
-    spout emits its watermark *after* each batch, so this stream never
+    spout emits its watermark *at* batch boundaries, so this stream never
     produces late tuples regardless of ``lateness`` (which still delays
     firing and prices the buffer); the late-drop path needs disorder that
     crosses watermark emissions — see the cross-batch straggler source in
     ``tests/test_eventtime.py`` for that harness.
+
+    ``watermark_every`` is the declared mark cadence (batches per mark):
+    the segmented pane engine fires every released pane of a mark as one
+    stacked kernel call, so a coarser cadence divides the per-mark
+    flush/merge/fire overhead across more tuples at the cost of pane-
+    firing latency — pane *contents* are cadence-independent.
     """
     lateness = skew if lateness is None else lateness
 
     def source(batch, seed):
         rng = np.random.default_rng(seed)
         # one reading per tick; the batch's ticks follow on from the seed so
-        # event time is globally increasing before the skew permutation
+        # event time is globally increasing before the skew permutation.
+        # The value distribution matches count-window SD's source exactly —
+        # the bench A/B then prices only what differs: the event-time
+        # column, the skew permutation and the watermark/pane machinery
         ets = np.abs(seed) * batch + np.arange(batch, dtype=np.float64)
         vals = rng.normal(loc=10.0, scale=2.0, size=batch)
-        vals = np.where(rng.random(batch) < 0.05, vals * 3.0, vals)  # spikes
         rows = np.stack([ets, vals], axis=1)
         return rows[shuffle_within_skew(ets, skew, rng)]
 
     def k_parser(batch, state):
         return [batch]
 
-    def k_pane_stats(pane, state):
-        # invoked once per fired pane (complete, canonically ordered rows);
-        # state.pane carries the (start, end) event-time span
-        vals = pane[:, 1]
-        avg = float(vals.mean())
-        mx = float(vals.max())
-        end = state.pane[1] if state.pane is not None else 0.0
-        return [np.array([[end, avg, mx, float(mx > 1.5 * avg)]])]
+    @segmented
+    def k_pane_stats(stack, state):
+        # segmented contract: one call over ALL panes a watermark released
+        # — `stack` is the stacked buffer, state.segments the boundary
+        # index; reduceat over segment starts gives per-pane aggregates,
+        # emitted in segment order (canonical pane order, so the output
+        # bytes match driving the kernel one pane at a time)
+        seg = state.segments
+        vals = stack[:, 1]
+        avg = np.add.reduceat(vals, seg.starts) / seg.lengths
+        mx = np.maximum.reduceat(vals, seg.starts)
+        ends = seg.spans[:, 1]
+        return [np.stack([ends, avg, mx,
+                          (mx > 1.5 * avg).astype(np.float64)], axis=1)]
 
     def k_sink(batch, state):
         state["seen"] = state.get("seen", 0) + len(batch)
@@ -372,7 +393,7 @@ def spike_detection_eventtime(skew: float = SD_ET_SKEW,
     return (
         Topology("sd_et")
         .spout("spout", source, exec_ns=400.0, tuple_bytes=64.0,
-               event_time=0)
+               event_time=0, watermark_every=watermark_every)
         .op("parser", k_parser, exec_ns=250.0, tuple_bytes=64.0)
         .op("pane_stats", k_pane_stats, exec_ns=900.0, tuple_bytes=64.0,
             selectivity=1.0 / SD_ET_SLIDE,   # one aggregate per slide ticks
@@ -385,5 +406,80 @@ def spike_detection_eventtime(skew: float = SD_ET_SKEW,
         .build())
 
 
+# ---------------------------------------------------------------------------
+# Spike Detection, keyed event-time variant: per-device spike sessions.
+#   spout (event_time=col 0) -> parser -> device_stats (KEYED time window,
+#   partition="key" on the device column) -> sink
+# The pane unit is (device, span): each device's readings aggregate into
+# that device's own pane, fired by the one merged watermark — so replicating
+# device_stats over the keyed route shards panes by device ownership and the
+# union of the replica panes equals the single-replica run byte for byte.
+# ---------------------------------------------------------------------------
+
+SD_KEY_DEVICES = 8      # sensor fleet size
+SD_KEY_SIZE = 32.0      # session pane span, event-time ticks
+
+
+def spike_detection_keyed(devices: int = SD_KEY_DEVICES,
+                          skew: float = SD_ET_SKEW,
+                          lateness: float = None,
+                          watermark_every: int = SD_ET_WM_EVERY
+                          ) -> StreamingApp:
+    """Per-device spike sessions over an out-of-order sensor fleet.
+
+    Each reading is ``[tick, device, value]``; ``device_stats`` declares a
+    *keyed* tumbling event-time window (``WindowSpec(keyed=True)`` sharded
+    by the compiled keyed route on the device column), so every fired pane
+    is one device's session — the first benchmark user of keyed pane
+    groups and the replication-invariance they buy.
+    """
+    lateness = skew if lateness is None else lateness
+
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        ets = np.abs(seed) * batch + np.arange(batch, dtype=np.float64)
+        dev = rng.integers(0, devices, size=batch).astype(np.float64)
+        vals = rng.normal(loc=10.0, scale=2.0, size=batch)
+        rows = np.stack([ets, dev, vals], axis=1)
+        return rows[shuffle_within_skew(ets, skew, rng)]
+
+    def k_parser(batch, state):
+        return [batch]
+
+    @segmented
+    def k_device_stats(stack, state):
+        # one call per watermark over every (device, span) pane released;
+        # state.segments.keys carries each pane's device
+        seg = state.segments
+        vals = stack[:, 2]
+        avg = np.add.reduceat(vals, seg.starts) / seg.lengths
+        mx = np.maximum.reduceat(vals, seg.starts)
+        return [np.stack([seg.spans[:, 1], seg.keys.astype(np.float64),
+                          avg, mx,
+                          (mx > 1.5 * avg).astype(np.float64)], axis=1)]
+
+    def k_sink(batch, state):
+        state["seen"] = state.get("seen", 0) + len(batch)
+        state["spikes"] = state.get("spikes", 0) + int(batch[:, 4].sum())
+        return []
+
+    return (
+        Topology("sd_key")
+        .spout("spout", source, exec_ns=400.0, tuple_bytes=64.0,
+               event_time=0, watermark_every=watermark_every)
+        .op("parser", k_parser, exec_ns=250.0, tuple_bytes=64.0)
+        .op("device_stats", k_device_stats, exec_ns=900.0, tuple_bytes=64.0,
+            selectivity=devices / SD_KEY_SIZE,   # ~one pane per device/span
+            partition="key", key_by=1,
+            state=StateSpec("value", item_bytes=16.0, reads_per_tuple=0,
+                            writes_per_tuple=0,
+                            window=WindowSpec.time_tumbling(
+                                SD_KEY_SIZE, lateness=lateness,
+                                time_by=0, keyed=True)))
+        .sink("sink", k_sink, exec_ns=100.0, tuple_bytes=40.0)
+        .build())
+
+
 ALL_APPS = {"wc": word_count, "fd": fraud_detection, "sd": spike_detection,
-            "sd_et": spike_detection_eventtime, "lr": linear_road}
+            "sd_et": spike_detection_eventtime,
+            "sd_key": spike_detection_keyed, "lr": linear_road}

@@ -193,6 +193,28 @@ class WatermarkMerger:
         return self._lanes.get(name, -math.inf)
 
 
+#: calibrated crossover for the keyed-split implementation, from the
+#: ``BENCH_streaming.json`` micro grid (rows x k, us/call): the per-mask
+#: path is k linear scans and stays cache-friendly while k is small, the
+#: radix argsort+gather is one O(n) pass whose setup only amortizes once
+#: k**2 is large enough — ``rows * k**2 > 16384`` classifies 8 of the 9
+#: measured grid points correctly.  Points ON the boundary (LR's 1024-row
+#: k=4 edge, 256-row k=8) are within end-to-end noise either way (~5%
+#: run-to-run); the threshold's job is the clear regions of the grid,
+#: where forcing the wrong path costs 1.5-3x per split.
+VEC_CROSSOVER = 16384
+
+
+def auto_vectorized(rows: int, k: int) -> bool:
+    """Per-call implementation choice for a keyed split: True selects the
+    vectorized argsort+bincount path, False the per-mask scans.  Batch
+    size is stable per edge, so this is effectively a per-edge decision —
+    made from the calibrated :data:`VEC_CROSSOVER` threshold instead of a
+    global flag (``vectorized=`` on ``run_app``/``Plan.execute`` remains
+    the override)."""
+    return rows * k * k > VEC_CROSSOVER
+
+
 def split_by_key(arr: np.ndarray, keys: np.ndarray,
                  k: int) -> List[Tuple[int, np.ndarray]]:
     """Vectorized keyed split: one stable argsort + bincount per batch
@@ -259,7 +281,8 @@ class RouteSpec:
             return self.selectivity * group
         return self.selectivity * group / fanout
 
-    def bind(self, fanout: int, vectorized: bool = True) -> "Route":
+    def bind(self, fanout: int,
+             vectorized: Optional[bool] = None) -> "Route":
         return Route(self, fanout, vectorized)
 
 
@@ -267,13 +290,17 @@ class Route:
     """A :class:`RouteSpec` bound to a concrete consumer fan-out.
 
     Owns the per-producer-replica round-robin cursor, so every executor
-    binds its own instance.  ``vectorized=False`` selects the seed's
-    per-mask keyed split (benchmark baseline only).
+    binds its own instance.  ``vectorized`` selects the keyed-split
+    implementation: ``None`` (default) picks per edge from the calibrated
+    :func:`auto_vectorized` threshold, ``True``/``False`` force the
+    argsort+bincount path / the seed's per-mask path (the benchmark A/B
+    override).
     """
 
     __slots__ = ("spec", "fanout", "vectorized", "_rr")
 
-    def __init__(self, spec: RouteSpec, fanout: int, vectorized: bool = True):
+    def __init__(self, spec: RouteSpec, fanout: int,
+                 vectorized: Optional[bool] = None):
         assert fanout >= 1
         self.spec = spec
         self.fanout = fanout
@@ -288,7 +315,9 @@ class Route:
         strategy = self.spec.strategy
         if strategy == "key":
             keys = self.spec.keys(arr)
-            if self.vectorized:
+            use_vec = auto_vectorized(len(arr), k) \
+                if self.vectorized is None else self.vectorized
+            if use_vec:
                 return split_by_key(arr, keys, k)
             return split_by_key_masks(arr, keys, k)
         if strategy == "broadcast":
@@ -342,6 +371,16 @@ class RoutingTable:
 
     def strategy(self, producer: str, consumer: str) -> str:
         return self._routes[(producer, consumer)].strategy
+
+    def key_extractor(self, consumer: str) -> Optional[KeyBy]:
+        """The declared key extractor of ``consumer``'s keyed input routes
+        (one declaration per consumer, so every keyed edge agrees).  This
+        is what keyed pane groups shard by — the same extractor the router
+        splits on, so a key's panes live exactly where its tuples land."""
+        for (_, v), spec in self._routes.items():
+            if v == consumer and spec.strategy == "key":
+                return spec.key_by
+        return None
 
     def unit_weight(self, producer: str, consumer: str, group: int,
                     fanout: int) -> float:

@@ -155,7 +155,9 @@ class Executor(threading.Thread):
                  lat_sink: Optional[List[float]] = None,
                  on_delivered: Optional[Callable[[int], None]] = None,
                  max_batches: Optional[int] = None,
-                 event_time=None):
+                 event_time=None,
+                 wm_every: int = 1,
+                 wm_interval: Optional[float] = None):
         super().__init__(daemon=True, name=name)
         self.ports = ports
         self.batch = batch
@@ -172,9 +174,16 @@ class Executor(threading.Thread):
         self.max_batches = max_batches
         # event-time plumbing: spouts with a declared extractor emit
         # low-watermarks; tasks min-merge them per producer lane and fire
-        # event-time window panes on passage
+        # event-time window panes on passage.  wm_every / wm_interval are
+        # the spout's declared cadence (every N batches / every T event-
+        # time units of advance) — marks amortize jumbo flushes, the
+        # end-of-stream +inf mark still flushes everything
         self.event_time = event_time
+        self.wm_every = wm_every
+        self.wm_interval = wm_interval
         self._wm = -math.inf
+        self._wm_sent = -math.inf
+        self._wm_batches = 0
         self._wm_merge = WatermarkMerger(max(expected_poisons, 1))
         self._wm_fwd = -math.inf
         win = getattr(state, "window", None)
@@ -202,7 +211,16 @@ class Executor(threading.Thread):
             if self.event_time is not None and len(arr):
                 ets = extract_event_times(arr, self.event_time)
                 self._wm = max(self._wm, float(ets.max()))
-                self._emit_watermark(self._wm)
+                self._wm_batches += 1
+                if self.wm_interval is not None:
+                    due = self._wm - self._wm_sent >= self.wm_interval \
+                        or math.isinf(self._wm_sent)
+                else:
+                    due = self._wm_batches >= self.wm_every
+                if due and self._wm > self._wm_sent:
+                    self._wm_sent = self._wm
+                    self._wm_batches = 0
+                    self._emit_watermark(self._wm)
         self._drain()
         if self.event_time is not None:
             # end of stream: +inf flushes every buffered pane downstream
@@ -245,35 +263,45 @@ class Executor(threading.Thread):
         """Merge one lane's watermark; on advance, fire panes and forward.
 
         The merged watermark is min over producer lanes (monotone per lane,
-        see :class:`~.routing.WatermarkMerger`); panes fire through the
-        kernel in pane order with ``state.pane`` set to the pane's
-        ``(start, end)`` span, and the advanced watermark is forwarded along
-        every compiled route *after* the panes it released."""
+        see :class:`~.routing.WatermarkMerger`).  Every pane the mark
+        released arrives as **one** stacked :class:`~.state.PaneBatch`; a
+        :func:`~.state.segmented` kernel runs once over it with
+        ``state.segments`` set, an unmarked kernel is driven one segment
+        slice at a time with ``state.pane`` set (the single-span compat
+        shim over the same buffer).  Either way there is one batched
+        dispatch per watermark, and the advanced watermark is forwarded
+        along every compiled route *after* the panes it released."""
         merged = self._wm_merge.update(msg.lane, msg.value)
         if not merged > self._wm_fwd:
             return
         self._wm_fwd = merged
         if self._et_win is not None:
-            panes = self._et_win.on_watermark(merged)
-            if panes:
-                # one kernel call per pane (the semantic contract), one
-                # batched dispatch per watermark (the jumbo economics) —
-                # the flush timestamp is the oldest pane's, as everywhere
-                acc: List[List[np.ndarray]] = [[] for _ in self.ports]
-                t0_min = math.inf
-                for rows, t0, span in panes:
-                    self.state.pane = span
-                    outs = self.kernel(rows, self.state)
-                    if len(outs) != len(self.ports):
-                        self._dispatch(outs, t0)     # raises the mismatch
-                    for i, arr in enumerate(outs):
-                        if arr is not None and len(arr):
-                            acc[i].append(arr)
-                    t0_min = min(t0_min, t0)
-                self.state.pane = None
-                self._dispatch(
-                    [np.concatenate(a) if len(a) > 1 else
-                     (a[0] if a else None) for a in acc], t0_min)
+            batch = self._et_win.on_watermark(merged)
+            if batch.n:
+                if getattr(self.kernel, "segmented", False):
+                    self.state.segments = batch.segments
+                    self.state.pane = batch.segments.span(0) \
+                        if batch.n == 1 else None
+                    try:
+                        outs = self.kernel(batch.rows, self.state)
+                    finally:
+                        self.state.segments = None
+                        self.state.pane = None
+                    self._dispatch(outs, batch.t0)
+                else:
+                    acc: List[List[np.ndarray]] = [[] for _ in self.ports]
+                    for rows, t0, span in batch:
+                        self.state.pane = span
+                        outs = self.kernel(rows, self.state)
+                        if len(outs) != len(self.ports):
+                            self._dispatch(outs, t0)  # raises the mismatch
+                        for i, arr in enumerate(outs):
+                            if arr is not None and len(arr):
+                                acc[i].append(arr)
+                    self.state.pane = None
+                    self._dispatch(
+                        [np.concatenate(a) if len(a) > 1 else
+                         (a[0] if a else None) for a in acc], batch.t0)
         if self.ports:
             self._emit_watermark(merged)
 
@@ -360,7 +388,7 @@ class Executor(threading.Thread):
 def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             batch: int = 256, duration: float = 1.0, jumbo: bool = True,
             queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
-            seed: int = 0, vectorized: bool = True,
+            seed: int = 0, vectorized: Optional[bool] = None,
             max_batches: Optional[int] = None,
             initial_states: Optional[Dict[str, List[dict]]] = None
             ) -> RuntimeResult:
@@ -368,9 +396,11 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
 
     Partition strategies and key extractors come from the app's Topology
     declaration, compiled once into routes (:mod:`repro.streaming.routing`);
-    the ``partition`` argument overrides per operator.  ``vectorized=False``
-    selects the seed's per-mask keyed split (kept for the
-    ``bench_runtime.py`` A/B comparison only).
+    the ``partition`` argument overrides per operator.  ``vectorized=None``
+    (default) picks the keyed-split implementation per edge from the
+    calibrated :func:`~.routing.auto_vectorized` threshold;
+    ``True``/``False`` force the argsort+bincount / seed per-mask path
+    everywhere (the ``bench_runtime.py`` A/B override).
 
     Declared operator state (``Topology.op(state=StateSpec(...))``) becomes
     managed stores on the replica state handles: keyed stores are sharded
@@ -393,21 +423,31 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     # event-time panes fire per replica from per-replica buffers: a
     # non-keyed split would scatter each pane's rows over replicas and
     # every replica would fire its own partial pane — reject instead of
-    # silently aggregating subsets (keyed inputs give *sharded* panes,
-    # one per key-residue owner, which is a coherent semantic)
+    # silently aggregating subsets.  Keyed inputs give *sharded* panes;
+    # with keyed pane groups (WindowSpec(keyed=True)) the pane unit is
+    # (key, span), so replication preserves pane bytes exactly — that is
+    # the lift of the PR 4 replication clamp for keyed time windows.
+    win_key_by: Dict[str, object] = {}
     for name, sspec in (getattr(app, "state", None) or {}).items():
-        if sspec.window is not None and sspec.window.time \
-                and parallelism[name] > 1:
-            strategies = {routes.strategy(u, name)
-                          for u in lg.producers(name)}
+        if sspec.window is None or not sspec.window.time:
+            continue
+        strategies = {routes.strategy(u, name) for u in lg.producers(name)}
+        if sspec.window.keyed:
             if strategies != {"key"}:
                 raise ValueError(
-                    f"operator {name!r} declares an event-time window at "
-                    f"parallelism {parallelism[name]} with "
-                    f"{sorted(strategies)} input routing: replicas would "
-                    "each fire partial panes over an arbitrary subset of "
-                    "rows. Key every input stream (sharded panes) or keep "
-                    "parallelism 1")
+                    f"operator {name!r} declares keyed event-time panes "
+                    f"with {sorted(strategies)} input routing: pane groups "
+                    "shard by the compiled keyed route, so every input "
+                    "stream must be partition='key'")
+            win_key_by[name] = routes.key_extractor(name)
+        elif parallelism[name] > 1 and strategies != {"key"}:
+            raise ValueError(
+                f"operator {name!r} declares an event-time window at "
+                f"parallelism {parallelism[name]} with "
+                f"{sorted(strategies)} input routing: replicas would "
+                "each fire partial panes over an arbitrary subset of "
+                "rows. Key every input stream (sharded panes) or keep "
+                "parallelism 1")
 
     # one input queue per non-spout replica
     in_qs: Dict[Tuple[str, int], queue.Queue] = {}
@@ -417,7 +457,8 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                 in_qs[(name, i)] = queue.Queue(maxsize=queue_cap)
 
     states: Dict[str, List[OperatorState]] = {
-        name: [make_operator_state(app.state.get(name), parallelism[name], j)
+        name: [make_operator_state(app.state.get(name), parallelism[name], j,
+                                   key_by=win_key_by.get(name))
                for j in range(parallelism[name])]
         for name in lg.operators}
     if initial_states:
@@ -429,6 +470,13 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                     f"states for parallelism {parallelism[name]} "
                     "(migrate_states targets one replica set)")
             states[name] = list(reps)
+        # keyed pane groups shard by the *current* compiled route: re-attach
+        # the extractor to migrated window buffers (idempotent)
+        for name, kb in win_key_by.items():
+            for st in states[name]:
+                win = getattr(st, "window", None)
+                if isinstance(win, EventTimeWindowState):
+                    win.key_by = kb
     latencies: List[float] = []
     stop = threading.Event()
     spout_counts = [0]
@@ -458,7 +506,10 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                     states[name][i], source=app.source_for(name), stop=stop,
                     seed=seed + 7919 * i, on_delivered=add_spout_count,
                     max_batches=max_batches,
-                    event_time=getattr(app, "event_time", {}).get(name)))
+                    event_time=getattr(app, "event_time", {}).get(name),
+                    wm_every=getattr(app, "watermark_every", {}).get(name, 1),
+                    wm_interval=getattr(app, "watermark_interval",
+                                        {}).get(name)))
             else:
                 tasks.append(Executor(
                     f"{name}#{i}", make_ports(name), batch, jumbo,

@@ -22,14 +22,14 @@ import bisect
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import ExecutionGraph, MachineSpec
 from repro.core.perfmodel import UNPLACED
 
-from .routing import RoutingTable, unit_delivery
+from .routing import RoutingTable, extract_event_times, unit_delivery
 from .state import WindowSpec, grid_pane_ends
 
 
@@ -170,6 +170,37 @@ class DesResult:
     pane_latency_p50: float = math.nan  # seconds, pane-end event generated
     pane_latency_p99: float = math.nan  # at the spout -> pane fired
     panes_fired: int = 0            # event-time panes fired (post-warmup)
+    pane_batches: int = 0           # watermark advances that released >=1
+    # pane — the unit of work the segmented engine executes (one stacked
+    # kernel call per batch), so panes_fired/pane_batches is the
+    # amortization the runtime gets over a pane-at-a-time loop
+
+
+def probe_et_spacing(app, batch: int = 256, batches: int = 3,
+                     seed: int = 0) -> Dict[str, float]:
+    """Empirical event-time increment per tuple, per spout.
+
+    Draws ``batches`` seeded batches from each spout that declares
+    ``event_time=`` and reports the mean increment —
+    ``(max - min) / (count - 1)`` over the observed event times — so the
+    DES paces watermarks (and therefore pane firing and pane latency) at
+    the *app's* actual event-time density instead of the one-tick-per-
+    tuple constant.  Bursty sources (many readings per tick, or sparse
+    ticks) get correspondingly tighter ``pane_latency_p50/p99``.
+    """
+    out: Dict[str, float] = {}
+    for spout, extractor in (getattr(app, "event_time", None) or {}).items():
+        source = app.source_for(spout)
+        ets = [extract_event_times(source(batch, seed + b), extractor)
+               for b in range(batches)]
+        allts = np.concatenate([e for e in ets if len(e)]) \
+            if any(len(e) for e in ets) else np.zeros(0)
+        if len(allts) > 1 and float(allts.max()) > float(allts.min()):
+            out[spout] = (float(allts.max()) - float(allts.min())) \
+                / (len(allts) - 1)
+        else:
+            out[spout] = 1.0
+    return out
 
 
 def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
@@ -179,7 +210,8 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                  seed: int = 0,
                  routes: Optional[RoutingTable] = None,
                  time_windows: Optional[Dict[str, WindowSpec]] = None,
-                 et_spacing: float = 1.0) -> DesResult:
+                 et_spacing: Union[float, Mapping[str, float]] = 1.0
+                 ) -> DesResult:
     """Simulate ``horizon`` seconds of plan execution.
 
     Jumbo tuples of ``batch`` tuples flow through bounded FCFS queues.  CPU
@@ -208,8 +240,11 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     ``time_windows`` (``{operator: WindowSpec(time=True)}``, what
     ``Plan.simulate`` passes from the app's declarations) turns on
     *watermark delivery*: each spout unit's low-watermark advances with its
-    emitted tuples (``et_spacing`` event-time units per tuple — the SD
-    event-time convention of one tick per reading), rides the same
+    emitted tuples (``et_spacing`` event-time units per tuple — a float for
+    every spout, or a ``{spout_op: spacing}`` mapping; ``Plan.simulate``
+    passes the per-spout empirical mean from :func:`probe_et_spacing`,
+    and the 1.0 default is the SD convention of one tick per reading),
+    rides the same
     ``unit_delivery`` edges as the jumbo tuples (one hop per service
     completion), and is min-merged per consumer unit exactly like the
     threaded runtime's :class:`~.routing.WatermarkMerger`.  Windowed units
@@ -252,10 +287,21 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                       for v in range(n)}
     fired_bound = {v: -math.inf for v in win_units}
     spout_count = {v: 0 for v in graph.spout_units()}
+    if isinstance(et_spacing, Mapping):
+        unknown = sorted(set(et_spacing)
+                         - set(graph.logical.spouts()))
+        if unknown:
+            raise ValueError(
+                f"et_spacing names non-spout operators {unknown}")
+        unit_spacing = {v: float(et_spacing.get(graph.replicas[v].op, 1.0))
+                        for v in spout_count}
+    else:
+        unit_spacing = {v: float(et_spacing) for v in spout_count}
     et_log_e: Dict[int, List[float]] = {v: [] for v in spout_count}
     et_log_t: Dict[int, List[float]] = {v: [] for v in spout_count}
     pane_lat: List[float] = []
     panes_fired = 0
+    pane_batches = 0
     anc: Dict[int, List[int]] = {}          # windowed unit -> spout units
     if track_wm:
         lg = graph.logical
@@ -281,8 +327,11 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
 
     def _propagate_wm(u: int, now: float) -> None:
         """One watermark hop along the same delivery edges as the jumbos:
-        min-merge per consumer unit, fire panes the merged mark passed."""
-        nonlocal panes_fired
+        min-merge per consumer unit, fire pane *batches* the merged mark
+        passed — every released pane of one advance is one unit of work
+        (the segmented engine's stacked kernel call), which is what
+        ``pane_batches`` counts against ``panes_fired``."""
+        nonlocal panes_fired, pane_batches
         for cv, _ in delivery[u]:
             lane_wm[(u, cv)] = unit_wm[u]
             merged = min(lane_wm.get((p, cv), -math.inf)
@@ -298,6 +347,7 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                                   wspec.size, wspec.slide)
             if len(ends) and now >= warm:
                 panes_fired += len(ends)
+                pane_batches += 1
                 for e in ends:
                     pane_lat.append(now - _complete_wall(cv, e, now))
             fired_bound[cv] = max(fired_bound[cv], bound)
@@ -399,7 +449,7 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                 # the source generated `batch` more tuples: its event clock
                 # (and low-watermark) advances whether or not the jumbo fits
                 spout_count[v] += batch
-                unit_wm[v] = spout_count[v] * et_spacing
+                unit_wm[v] = spout_count[v] * unit_spacing[v]
                 et_log_e[v].append(unit_wm[v])
                 et_log_t[v].append(now)
             if len(queues[v]) >= queue_cap:
@@ -435,7 +485,7 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                           float(np.percentile(pane_arr, 50))),
         pane_latency_p99=(math.nan if pane_arr is None else
                           float(np.percentile(pane_arr, 99))),
-        panes_fired=int(panes_fired))
+        panes_fired=int(panes_fired), pane_batches=int(pane_batches))
 
 
 def measure_capacity(graph: ExecutionGraph, machine: MachineSpec,

@@ -285,19 +285,27 @@ def test_watermark_merger_min_and_monotone():
 # planner + DES integration
 # ---------------------------------------------------------------------------
 
-def test_planner_prices_pane_buffer_and_residency():
+def test_planner_prices_pane_buffer_and_occupancy():
     app = spike_detection_eventtime()
     spec = app.graph.operators["pane_stats"]
     w = app.state["pane_stats"].window
-    expected_state = 16.0 * (1.0 + w.size / w.slide + w.lateness / w.size)
+    # one buffered write + one gathered read per pane joined; the segmented
+    # engine sorts once per watermark, so no per-pane straggler re-scan term
+    expected_state = 16.0 * (1.0 + w.size / w.slide)
     assert spec.state_bytes == pytest.approx(expected_state)
     assert spec.mem_bytes == pytest.approx(64.0 + expected_state)
-    assert spec.state_residency_s == pytest.approx(w.size + w.lateness)
+    # residency is occupancy in TUPLES (size + lateness event-time units at
+    # one tick per tuple), not wall seconds — rate-independent
+    assert spec.state_resident_tuples == pytest.approx(w.size + w.lateness)
     ev = Job(app).plan(server_a(), optimizer="ff").estimate(
         input_rate=1e5).raw
     assert ev.state_resident_bytes is not None
-    assert ev.state_resident_bytes.sum() > 0
-    # count-window WC pins nothing resident (arrival-bounded history)
+    assert ev.state_resident_bytes.sum() == pytest.approx(
+        (w.size + w.lateness) * 64.0)
+    # the retired wall-seconds Little's-law form would have priced this at
+    # rate x residency x bytes — over-charging by orders of magnitude
+    assert ev.state_resident_bytes.sum() < 1e5 * (w.size + w.lateness) * 64.0
+    # WC declares no window at all: nothing pinned resident
     from repro.streaming.apps import word_count
     ev_wc = Job(word_count()).plan(server_a(), optimizer="ff").estimate(
         input_rate=1e5).raw

@@ -1,0 +1,595 @@
+"""Segmented pane execution: one vectorized window engine for every kind.
+
+The ISSUE 5 acceptance contract: when a watermark releases N panes, the
+engine builds ONE stacked buffer + segment index and the kernel runs once —
+byte-identical to driving the same math one pane at a time, across window
+kinds (count tumbling/sliding, time tumbling/sliding), keyed and unkeyed
+panes, shuffled-within-lateness input, and parallelism 1 vs k.  Keyed
+event-time windows extend the PR 3 store-union invariant to panes: the
+union of a replicated run's (key, span) panes equals the single-replica
+run's, byte for byte.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import server_a
+from repro.streaming import Job
+from repro.streaming.api import Topology, TopologyError
+from repro.streaming.apps import (shuffle_within_skew,
+                                  spike_detection_eventtime,
+                                  spike_detection_keyed)
+from repro.streaming.routing import VEC_CROSSOVER, RouteSpec, auto_vectorized
+from repro.streaming.runtime import Executor, run_app
+from repro.streaming.simulator import des_simulate, probe_et_spacing
+from repro.streaming.state import (EventTimeWindowState, PaneBatch,
+                                   PaneSegments, StateSpec, WindowSpec,
+                                   WindowState, gather_segments, segmented)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# the substrate: gather_segments + PaneBatch/PaneSegments
+# ---------------------------------------------------------------------------
+
+def test_gather_segments_contiguous_is_zero_copy():
+    rows = np.arange(12.0)
+    stacked, offsets = gather_segments(rows, np.array([2, 5, 8]),
+                                       np.array([5, 8, 11]))
+    assert stacked.base is rows or stacked.base is rows.base  # a view
+    assert np.array_equal(stacked, rows[2:11])
+    assert offsets.tolist() == [0, 3, 6, 9]
+
+
+def test_gather_segments_overlapping_gathers_once():
+    rows = np.arange(10.0)
+    los, his = np.array([0, 2, 4]), np.array([6, 8, 10])
+    stacked, offsets = gather_segments(rows, los, his)
+    assert offsets.tolist() == [0, 6, 12, 18]
+    for i, (lo, hi) in enumerate(zip(los, his)):
+        assert np.array_equal(stacked[offsets[i]:offsets[i + 1]],
+                              rows[lo:hi])
+
+
+def test_gather_segments_empty():
+    stacked, offsets = gather_segments(np.arange(4.0), np.zeros(0, np.int64),
+                                       np.zeros(0, np.int64))
+    assert len(stacked) == 0 and offsets.tolist() == [0]
+
+
+def test_pane_batch_iteration_is_the_segment_view():
+    """Iterating a PaneBatch recovers exactly the per-segment slices — the
+    compat contract and the segmented contract cannot drift apart."""
+    st_ = EventTimeWindowState(WindowSpec.time_sliding(6.0, 3.0))
+    rng = np.random.default_rng(0)
+    st_.insert(rng.uniform(0, 50, size=200), 0.0)
+    batch = st_.on_watermark(40.0)
+    assert isinstance(batch, PaneBatch) and batch.n > 1
+    off = batch.segments.offsets
+    for i, (rows, t0, span) in enumerate(batch):
+        assert np.array_equal(rows, batch.rows[off[i]:off[i + 1]])
+        assert span == batch.segments.span(i)
+        assert t0 == batch.t0s[i]
+    assert batch.t0 == batch.t0s.min()
+    # spans ascend (canonical pane order) and reduceat starts line up
+    assert np.all(np.diff(batch.segments.spans[:, 1]) > 0)
+    assert np.array_equal(batch.segments.starts, off[:-1])
+
+
+def test_count_tumble_is_the_degenerate_segmented_case():
+    """WindowState.tumble is a split of tumble_segments — same windows as
+    the seed loop, spans labelled with arrival indices."""
+    spec = WindowSpec(size=5, slide=2)
+    a, b = WindowState(spec), WindowState(spec)
+    rng = np.random.default_rng(1)
+    base = 0
+    for n in (3, 7, 1, 12, 4):
+        batch = rng.normal(size=n)
+        wins = a.tumble(batch)
+        stacked, seg = b.tumble_segments(batch)
+        assert len(wins) == seg.n
+        for i, w in enumerate(wins):
+            assert np.array_equal(
+                w, stacked[seg.offsets[i]:seg.offsets[i + 1]])
+            lo, hi = seg.span(i)
+            assert hi - lo == 5 and lo >= base
+        base = seg.spans[-1, 0] if seg.n else base
+
+
+def test_seed_tumble_semantics_preserved():
+    """The re-expressed tumble matches the seed while-loop byte for byte."""
+    spec = WindowSpec(size=4, slide=4)
+    w = WindowState(spec)
+    out = w.tumble(np.arange(10.0))
+    assert [o.tolist() for o in out] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    out = w.tumble(np.arange(10.0, 14.0))
+    assert [o.tolist() for o in out] == [[8, 9, 10, 11]]
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: segmented call == pane-at-a-time drive (the tentpole)
+# ---------------------------------------------------------------------------
+
+def _pane_math_single(vals):
+    """Per-pane aggregates in the exact reduction order the segmented
+    kernel's reduceat uses, so bit-level comparison is meaningful."""
+    s = float(np.add.reduceat(vals, np.array([0]))[0])
+    mx = float(np.maximum.reduceat(vals, np.array([0]))[0])
+    return s / len(vals), mx
+
+
+def _et_app(spec: WindowSpec, seg: bool, skew: float = 6.0,
+            keyed_route: bool = False):
+    """A sensor topology over [et, key, val] rows whose window kernel runs
+    either segmented (one stacked call) or single-span (the compat shim)."""
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        ets = np.abs(seed) * batch + np.arange(batch, dtype=np.float64)
+        keys = rng.integers(0, 5, size=batch).astype(np.float64)
+        vals = rng.normal(size=batch)
+        rows = np.stack([ets, keys, vals], axis=1)
+        return rows[shuffle_within_skew(ets, skew, rng)]
+
+    @segmented
+    def k_seg(stack, state):
+        sgs = state.segments
+        vals = stack[:, 2]
+        avg = np.add.reduceat(vals, sgs.starts) / sgs.lengths
+        mx = np.maximum.reduceat(vals, sgs.starts)
+        keys = sgs.keys.astype(np.float64) if sgs.keys is not None \
+            else np.zeros(sgs.n)
+        return [np.stack([sgs.spans[:, 1], keys, avg, mx], axis=1)]
+
+    def k_one(pane, state):
+        avg, mx = _pane_math_single(pane[:, 2])
+        key = float(pane[0, 1]) if spec.keyed else 0.0
+        return [np.array([[state.pane[1], key, avg, mx]])]
+
+    def k_sink(batch, state):
+        state.setdefault("rows", []).append(batch.copy())
+        return []
+
+    t = (Topology("seg-vs-one")
+         .spout("s", source, exec_ns=100.0, event_time=0)
+         .op("w", k_seg if seg else k_one, exec_ns=100.0,
+             partition="key" if keyed_route else "shuffle",
+             key_by=1 if keyed_route else None,
+             state=StateSpec("value", window=spec))
+         .sink("sink", k_sink, exec_ns=50.0))
+    return t.build()
+
+
+def _sink_rows(app, parallelism=None, batches=5, batch=48, seed=2):
+    res = run_app(app, parallelism or {n: 1 for n in app.graph.operators},
+                  batch=batch, max_batches=batches, seed=seed)
+    chunks = [c for st_ in res.states["sink"]
+              for c in st_.get("rows", [])]
+    return (np.concatenate(chunks) if chunks else np.zeros((0, 4))), res
+
+
+@pytest.mark.parametrize("spec", [
+    WindowSpec.time_tumbling(16.0, lateness=6.0, time_by=0),
+    WindowSpec.time_sliding(24.0, 8.0, lateness=6.0, time_by=0),
+    WindowSpec.time_tumbling(16.0, lateness=6.0, time_by=0, keyed=True),
+    WindowSpec.time_sliding(24.0, 8.0, lateness=6.0, time_by=0, keyed=True),
+], ids=["tumbling", "sliding", "keyed-tumbling", "keyed-sliding"])
+def test_segmented_byte_identical_to_pane_at_a_time(spec):
+    """One stacked kernel call emits exactly the bytes the single-span
+    shim emits pane by pane — tumbling/sliding, keyed/unkeyed, over
+    shuffled-within-lateness input."""
+    keyed_route = spec.keyed
+    a, ra = _sink_rows(_et_app(spec, seg=True, keyed_route=keyed_route))
+    b, rb = _sink_rows(_et_app(spec, seg=False, keyed_route=keyed_route))
+    assert len(a) > 0
+    assert a.tobytes() == b.tobytes()
+    assert ra.panes_fired == rb.panes_fired > 0
+
+
+def test_segmented_byte_identical_across_parallelism():
+    """Keyed panes shard by the route: a replicated run fires the same
+    (key, span) panes as the single-replica run (multiset of rows — jumbo
+    arrival order at the sink is nondeterministic)."""
+    spec = WindowSpec.time_tumbling(16.0, lateness=6.0, time_by=0,
+                                    keyed=True)
+    a, _ = _sink_rows(_et_app(spec, seg=True, keyed_route=True))
+    b, _ = _sink_rows(_et_app(spec, seg=True, keyed_route=True),
+                      parallelism={"w": 3})
+    assert len(a) > 0 and len(a) == len(b)
+    assert np.array_equal(a[np.lexsort(a.T[::-1])],
+                          b[np.lexsort(b.T[::-1])])
+
+
+def test_keyed_pane_union_invariant_under_plan_execute():
+    """The PR 3 store-union invariant extended to panes, through the full
+    Plan.execute replication path: sd_key replicated by the planner fires
+    the same pane multiset as a single-replica run."""
+    app = spike_detection_keyed()
+
+    def capture(app_):
+        rows = []
+        k = app_.kernels["sink"]
+
+        def spy(batch, state):
+            rows.append(batch.copy())
+            return k(batch, state)
+
+        app_.kernels["sink"] = spy
+        return rows
+
+    rows1 = capture(app)
+    res1 = run_app(app, {n: 1 for n in app.graph.operators}, batch=64,
+                   max_batches=5, seed=7)
+    app2 = spike_detection_keyed()
+    rows2 = capture(app2)
+    plan = Job(app2).plan(server_a(), optimizer="ff",
+                          parallelism={"device_stats": 3, "parser": 2})
+    res2 = plan.execute(batches=5, batch=64, seed=7,
+                        parallelism={"device_stats": 3, "parser": 2}).raw
+    assert plan.parallelism["device_stats"] == 3     # clamp lifted: keyed
+    a = np.concatenate(rows1)
+    b = np.concatenate(rows2)
+    assert res1.panes_fired == res2.panes_fired == len(a) == len(b) > 0
+    assert np.array_equal(a[np.lexsort(a.T[::-1])],
+                          b[np.lexsort(b.T[::-1])])
+
+
+def test_keyed_panes_contain_single_keys():
+    """Every fired pane of a keyed window holds one key's rows only, and
+    the segment index labels it."""
+    spec = WindowSpec.time_tumbling(8.0, time_by=0, keyed=True)
+    st_ = EventTimeWindowState(spec, key_by=1)
+    rng = np.random.default_rng(3)
+    ets = rng.uniform(0, 40, size=120)
+    keys = rng.integers(0, 4, size=120).astype(np.float64)
+    st_.insert(np.stack([ets, keys, rng.normal(size=120)], axis=1))
+    batch = st_.on_watermark(np.inf)
+    assert batch.n > 4                       # several (key, span) panes
+    assert batch.segments.keys is not None
+    seen = set()
+    for i, (rows, _, span) in enumerate(batch):
+        k = int(batch.segments.keys[i])
+        assert np.all(rows[:, 1] == k)
+        assert np.all((rows[:, 0] >= span[0]) & (rows[:, 0] < span[1]))
+        seen.add((k, span))
+    assert len(seen) == batch.n              # (key, span) is the pane unit
+    # canonical order: ascending (end, key)
+    sk = np.stack([batch.segments.spans[:, 1], batch.segments.keys], axis=1)
+    assert np.array_equal(sk, sk[np.lexsort((sk[:, 1], sk[:, 0]))])
+
+
+def test_keyed_panes_match_unkeyed_per_key_runs():
+    """A keyed window's (key, span) panes equal running each key's rows
+    through its own unkeyed window — grouping changes nothing else."""
+    spec_k = WindowSpec.time_sliding(12.0, 4.0, time_by=0, keyed=True)
+    spec_u = WindowSpec.time_sliding(12.0, 4.0, time_by=0)
+    rng = np.random.default_rng(4)
+    ets = rng.uniform(0, 60, size=150)
+    keys = rng.integers(0, 3, size=150).astype(np.float64)
+    rows = np.stack([ets, keys, rng.normal(size=150)], axis=1)
+    st_k = EventTimeWindowState(spec_k, key_by=1)
+    st_k.insert(rows)
+    batch = st_k.on_watermark(50.0)
+    keyed_panes = {(int(batch.segments.keys[i]), span): rows_i.tobytes()
+                   for i, (rows_i, _, span) in enumerate(batch)}
+    expected = {}
+    for k in (0, 1, 2):
+        st_u = EventTimeWindowState(spec_u)
+        st_u.insert(rows[keys == k])
+        for rows_i, _, span in st_u.on_watermark(50.0):
+            expected[(k, span)] = rows_i.tobytes()
+    assert keyed_panes == expected and len(expected) > 0
+
+
+# ---------------------------------------------------------------------------
+# build-time / run-time validation
+# ---------------------------------------------------------------------------
+
+def test_keyed_panes_require_time_window():
+    with pytest.raises(ValueError, match="time=True"):
+        WindowSpec(8, keyed=True)
+
+
+def test_keyed_panes_require_keyed_partition():
+    t = (Topology("bad")
+         .spout("s", lambda b, sd: np.arange(b, dtype=np.float64),
+                exec_ns=100.0, event_time=0)
+         .op("w", lambda p, st_: [p], exec_ns=100.0))
+    with pytest.raises(TopologyError, match="keyed route"):
+        t.op("w2", lambda p, st_: [p], exec_ns=100.0, inputs="w",
+             state=StateSpec("value",
+                             window=WindowSpec.time_tumbling(8.0,
+                                                             keyed=True)))
+
+
+def test_run_app_rejects_keyed_panes_on_shuffled_route():
+    """partition= overrides can strip the keyed route out from under a
+    keyed window — rejected at run_app, not silently regrouped."""
+    app = spike_detection_keyed()
+    with pytest.raises(ValueError, match="keyed event-time panes"):
+        run_app(app, {n: 1 for n in app.graph.operators}, batch=64,
+                max_batches=1, partition={"device_stats": "shuffle"})
+
+
+def test_migrated_event_time_windows_start_fresh():
+    """A drained run's +inf flush closed every window frontier; carrying
+    the buffer through migrate_states would mark the whole resumed stream
+    late (and replica-index carry would break keyed pane ownership under
+    a parallelism change) — migrated event-time windows start fresh."""
+    from repro.streaming.state import migrate_states
+    app = spike_detection_keyed()
+    par1 = {n: 1 for n in app.graph.operators}
+    r1 = run_app(app, par1, batch=64, max_batches=3, seed=5)
+    assert r1.panes_fired > 0
+    par2 = dict(par1, device_stats=2, parser=2)
+    seeded = migrate_states(app, r1.states, par2)
+    win = seeded["device_stats"][0].window
+    assert isinstance(win, EventTimeWindowState)
+    assert win._fired_bound == -math.inf          # frontier reopened
+    r2 = run_app(app, par2, batch=64, max_batches=3, seed=8,
+                 initial_states=seeded)
+    assert r2.late_drops == 0 and r2.panes_fired > 0
+    # count-window history still carries best-effort (seed behaviour)
+    from repro.streaming.apps import spike_detection
+    sd = spike_detection()
+    rs = run_app(sd, {n: 1 for n in sd.graph.operators}, batch=64,
+                 max_batches=2, seed=1)
+    carried = migrate_states(sd, rs.states,
+                             {n: 1 for n in sd.graph.operators})
+    assert carried["moving_avg"][0].window is \
+        rs.states["moving_avg"][0].window
+
+
+def test_planner_occupancy_scales_with_window_kind():
+    """Count-window history is per-replica (replication multiplies the
+    resident bytes); event-time pane buffers shard the stream (a plan's
+    total occupancy is parallelism-independent)."""
+    from repro.streaming.apps import SD_WINDOW, spike_detection
+    sd = spike_detection()
+    spec = sd.graph.operators["moving_avg"]
+    assert spec.state_resident_tuples == SD_WINDOW
+    assert not spec.state_resident_shared
+
+    def resident(app, par):
+        ev = Job(app).plan(server_a(), optimizer="ff",
+                           parallelism=par).estimate(input_rate=1e5).raw
+        return float(ev.state_resident_bytes.sum())
+
+    r1 = resident(spike_detection(), {"moving_avg": 1})
+    r4 = resident(spike_detection(), {"moving_avg": 4})
+    assert r1 == pytest.approx(SD_WINDOW * 64.0)
+    assert r4 == pytest.approx(4 * r1)            # per-replica history
+    k1 = resident(spike_detection_keyed(), {"device_stats": 1})
+    k4 = resident(spike_detection_keyed(), {"device_stats": 4})
+    assert k1 == pytest.approx(k4) and k1 > 0     # sharded pane buffer
+
+
+# ---------------------------------------------------------------------------
+# watermark cadence (satellite)
+# ---------------------------------------------------------------------------
+
+def _cadence_app(**spout_kw):
+    def source(batch, seed):
+        return seed * batch + np.arange(batch, dtype=np.float64)
+
+    def k_pane(pane, state):
+        return [np.array([float(len(pane))])]
+
+    return (Topology("cadence")
+            .spout("s", source, exec_ns=100.0, event_time=0, **spout_kw)
+            .op("w", k_pane, exec_ns=100.0,
+                state=StateSpec("value",
+                                window=WindowSpec.time_tumbling(32.0)))
+            .sink("sink", lambda b, st_: [], exec_ns=50.0)
+            .build())
+
+
+def _count_watermarks(app, monkeypatch_cls=None, batches=8):
+    marks = []
+    orig = Executor._on_watermark
+
+    def spy(self, msg):
+        marks.append(msg.value)
+        return orig(self, msg)
+
+    Executor._on_watermark = spy
+    try:
+        res = run_app(app, {n: 1 for n in app.graph.operators}, batch=32,
+                      max_batches=batches, seed=0)
+    finally:
+        Executor._on_watermark = orig
+    return marks, res
+
+
+def test_watermark_cadence_batches_amortizes_marks():
+    """watermark_every=4 sends ~1/4 the marks but the +inf end-of-stream
+    flush makes the fired panes identical."""
+    m1, r1 = _count_watermarks(_cadence_app())
+    m4, r4 = _count_watermarks(_cadence_app(watermark_every=4))
+    assert r1.panes_fired == r4.panes_fired > 0
+    assert r1.sink_tuples == r4.sink_tuples
+    # the "w" executor sees 8 batch marks + inf vs 2 + inf
+    assert len(m4) < len(m1)
+    assert m4[-1] == math.inf
+
+
+def test_watermark_cadence_interval():
+    """watermark_interval=T marks on event-time advance: 8 batches of 32
+    ticks with T=64 -> a mark roughly every other batch."""
+    mi, ri = _count_watermarks(_cadence_app(watermark_interval=64.0))
+    m1, r1 = _count_watermarks(_cadence_app())
+    assert ri.panes_fired == r1.panes_fired > 0
+    assert len(mi) < len(m1)
+
+
+def test_watermark_cadence_validation():
+    src = lambda b, sd: np.arange(b, dtype=np.float64)       # noqa: E731
+    with pytest.raises(TopologyError, match="watermark_every"):
+        Topology("x").spout("s", src, exec_ns=1.0, event_time=0,
+                            watermark_every=0)
+    with pytest.raises(TopologyError, match="watermark_interval"):
+        Topology("x").spout("s", src, exec_ns=1.0, event_time=0,
+                            watermark_interval=0.0)
+    with pytest.raises(TopologyError, match="not both"):
+        Topology("x").spout("s", src, exec_ns=1.0, event_time=0,
+                            watermark_every=2, watermark_interval=8.0)
+    with pytest.raises(TopologyError, match="requires"):
+        Topology("x").spout("s", src, exec_ns=1.0, watermark_every=2)
+
+
+# ---------------------------------------------------------------------------
+# per-edge keyed-split selection (satellite)
+# ---------------------------------------------------------------------------
+
+def test_auto_vectorized_calibration():
+    """The calibrated threshold reproduces the BENCH micro grid's winners:
+    per-mask at small rows x k**2, vectorized once the radix sort
+    amortizes — and LR's 1024-row k=4 edge lands on masks."""
+    assert not auto_vectorized(256, 2)
+    assert not auto_vectorized(2560, 2)
+    assert auto_vectorized(10240, 2)
+    assert not auto_vectorized(256, 4)
+    assert auto_vectorized(2560, 4)
+    assert not auto_vectorized(1024, 4)          # the LR regression case
+    assert auto_vectorized(2048, 8)
+    assert VEC_CROSSOVER == 16384
+
+
+def test_route_auto_split_matches_both_overrides():
+    """Whatever implementation auto picks, the split is row-for-row what
+    both forced paths produce."""
+    rng = np.random.default_rng(5)
+    spec = RouteSpec("u", "v", 0, "key")
+    for rows, k in [(64, 4), (4096, 4), (512, 8)]:
+        arr = rng.integers(0, 1000, size=rows).astype(np.int64)
+        outs = [spec.bind(k, vectorized=v).split(arr)
+                for v in (None, True, False)]
+        for o in outs[1:]:
+            assert len(o) == len(outs[0])
+            for (j1, p1), (j2, p2) in zip(outs[0], o):
+                assert j1 == j2 and np.array_equal(p1, p2)
+
+
+def test_run_app_auto_vectorized_default_conserves():
+    from repro.streaming.apps import word_count
+    app = word_count()
+    res = run_app(app, {"splitter": 2, "counter": 4}, batch=64,
+                  max_batches=3)                 # vectorized=None default
+    assert res.sink_tuples == res.spout_tuples * 10
+
+
+# ---------------------------------------------------------------------------
+# DES event-time fidelity (satellite): empirical et_spacing
+# ---------------------------------------------------------------------------
+
+def _bursty_app(ticks_per_tuple: float):
+    def source(batch, seed):
+        ets = (seed * batch + np.arange(batch, dtype=np.float64)) \
+            * ticks_per_tuple
+        return np.stack([ets, np.ones(batch)], axis=1)
+
+    def k_pane(pane, state):
+        return [np.array([float(len(pane))])]
+
+    return (Topology("bursty")
+            .spout("s", source, exec_ns=100.0, event_time=0)
+            .op("w", k_pane, exec_ns=100.0,
+                state=StateSpec("value",
+                                window=WindowSpec.time_tumbling(64.0)))
+            .sink("sink", lambda b, st_: [], exec_ns=50.0)
+            .build())
+
+
+def test_probe_et_spacing_measures_the_source():
+    assert probe_et_spacing(spike_detection_eventtime())["spout"] == \
+        pytest.approx(1.0, rel=1e-6)
+    assert probe_et_spacing(_bursty_app(5.0))["s"] == \
+        pytest.approx(5.0, rel=1e-6)
+    assert probe_et_spacing(_bursty_app(0.25))["s"] == \
+        pytest.approx(0.25, rel=1e-6)
+
+
+def test_des_paces_panes_at_probed_spacing():
+    """A source advancing 5 ticks/tuple fires ~5x the panes of the
+    1-tick default over the same horizon — the probe feeds the DES
+    through Plan.simulate automatically."""
+    app = _bursty_app(5.0)
+    plan = Job(app).plan(server_a(), optimizer="ff")
+    des = plan.simulate(input_rate=2e5, horizon=0.03).raw
+    g = plan.graph
+    des_flat = des_simulate(g, server_a(), plan.placement, input_rate=2e5,
+                            horizon=0.03, time_windows=plan.job.time_windows,
+                            et_spacing=1.0)
+    assert des.panes_fired > 3 * des_flat.panes_fired > 0
+    assert des.pane_batches > 0
+    with pytest.raises(ValueError, match="non-spout"):
+        des_simulate(g, server_a(), plan.placement, input_rate=2e5,
+                     time_windows=plan.job.time_windows,
+                     et_spacing={"w": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skipped when unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(size_n=st.integers(2, 12), slide_n=st.integers(1, 12),
+           lateness_n=st.integers(0, 4), skew_n=st.integers(0, 4),
+           keyed=st.booleans(), par=st.sampled_from([1, 2]),
+           seed=st.integers(0, 2**16))
+    def test_segmented_equals_pane_at_a_time_property(
+            size_n, slide_n, lateness_n, skew_n, keyed, par, seed):
+        """Across random window shapes, skew within lateness, keyed and
+        unkeyed panes, parallelism 1 vs k: the segmented engine's sink
+        bytes equal the single-span shim's (multiset at parallelism > 1,
+        byte-exact at 1)."""
+        size = size_n * 4.0
+        slide = min(slide_n, size_n) * 4.0
+        lateness = lateness_n * 2.0
+        skew = min(skew_n * 2.0, lateness) if lateness else 0.0
+        spec = WindowSpec.time_sliding(size, slide, lateness=lateness,
+                                       time_by=0, keyed=keyed)
+        par_map = {"w": par if keyed else 1}
+        a, ra = _sink_rows(_et_app(spec, seg=True, skew=skew,
+                                   keyed_route=keyed),
+                           parallelism=par_map, batches=3, batch=32,
+                           seed=seed % 64)
+        b, rb = _sink_rows(_et_app(spec, seg=False, skew=skew,
+                                   keyed_route=keyed),
+                           parallelism=par_map, batches=3, batch=32,
+                           seed=seed % 64)
+        assert ra.panes_fired == rb.panes_fired > 0
+        assert ra.late_drops == rb.late_drops == 0
+        if par == 1 or not keyed:
+            assert a.tobytes() == b.tobytes()
+        else:
+            assert np.array_equal(a[np.lexsort(a.T[::-1])],
+                                  b[np.lexsort(b.T[::-1])])
+
+    @settings(max_examples=40, deadline=None)
+    @given(size=st.integers(2, 10), hop=st.integers(1, 10),
+           chunks=st.lists(st.integers(0, 17), min_size=1, max_size=8),
+           seed=st.integers(0, 2**16))
+    def test_count_tumble_segments_property(size, hop, chunks, seed):
+        """Count windows through the segmented substrate equal the seed
+        while-loop semantics for any (size, hop, arrival chunking)."""
+        hop = min(hop, size)
+        rng = np.random.default_rng(seed)
+        spec = WindowSpec(size=size, slide=hop)
+        w = WindowState(spec)
+        stream = rng.normal(size=sum(chunks))
+        got, pos = [], 0
+        for n in chunks:
+            got.extend(w.tumble(stream[pos:pos + n]))
+            pos += n
+        expected = [stream[i:i + size]
+                    for i in range(0, max(len(stream) - size + 1, 0), hop)]
+        assert len(got) == len(expected)
+        for g, e in zip(got, expected):
+            assert np.array_equal(g, e)
