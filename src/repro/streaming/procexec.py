@@ -1,0 +1,657 @@
+"""Process-parallel execution backend: shared-memory lanes that make RLAS
+placement physically real.
+
+The threaded runtime (:mod:`repro.streaming.runtime`) validates streaming
+*semantics*, but every replica shares one GIL and one allocator arena — a
+bad placement cannot hurt and RLAS cannot win.  This backend runs the same
+executors in **worker processes**:
+
+* one worker per *core group* — by default one per replica; in the
+  placement-faithful mode (:func:`plan_placement`, what
+  ``Plan.execute(backend="processes", faithful=True)`` uses) one per
+  plan-assigned socket, pinned to that socket's share of the host cores via
+  ``os.sched_setaffinity``;
+* tuples that stay inside a group move by reference through ordinary
+  in-process queues, exactly as in the threaded backend;
+* tuples that cross groups move over fixed-slot **shared-memory SPSC jumbo
+  rings** (:class:`ShmRing`, ``multiprocessing.shared_memory``): the
+  producer serializes the jumbo batch into a slot, the consumer
+  deserializes — a real copy with real cost, the shared-memory analogue of
+  the paper's remote-memory / QPI hop.  Watermarks and end-of-stream marks
+  travel the same rings as in-band control slots, so the
+  :class:`~.runtime.Executor` routing/merge/shutdown logic is reused
+  *verbatim* — the ring endpoints implement the ``queue.Queue`` protocol
+  the executor already speaks.
+
+Because colocated replicas communicate by reference and cross-group edges
+pay serialization, a plan's placement quality has a measurable physical
+cost even on a small host: RLAS (which colocates heavy edges) beats a
+worst-case placement (which alternates sockets along the chain, maximizing
+ring crossings) by a real margin — the ``placement_sensitivity`` section of
+``BENCH_streaming.json``.
+
+Workers are **forked**, not spawned: app kernels, sources and
+``StateSpec.init`` factories are closures and need not pickle — they are
+inherited.  What crosses process boundaries explicitly is (a) ring slots —
+pickled ``numpy`` batches — and (b) the end-of-run **state payloads**:
+each worker reduces its replicas' :class:`~.state.OperatorState` handles to
+plain arrays (:func:`_state_payload`), ships them over a pipe, and the
+parent restores them onto its own handles (:func:`_restore_state`) — so
+``migrate_states`` and every downstream consumer of
+``RuntimeResult.states`` work unchanged across process boundaries.
+
+The optional JAX host-device variant: pass
+``env=host_device_env(n)`` so each worker sees
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* any lazy
+JAX initialization — kernels that import JAX inside a worker then see N
+host devices.  (tcmalloc, per the exemplar run scripts, must be
+``LD_PRELOAD``-ed into the *parent* before Python starts: preloading
+happens at exec time and forked workers inherit it — see docs/API.md.)
+"""
+from __future__ import annotations
+
+import math
+import os
+import pickle
+import queue
+import struct
+import threading
+import time
+import traceback
+import multiprocessing as mp
+from multiprocessing import shared_memory
+from multiprocessing.connection import wait as conn_wait
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .apps import StreamingApp
+from .runtime import (RuntimeResult, _POISON, _Watermark, build_executors,
+                      collect_result, prepare_app)
+from .state import (BroadcastTable, EventTimeWindowState, KeyedStore,
+                    OperatorState, ValueStore, WindowState)
+
+__all__ = ["ShmRing", "run_app_processes", "plan_placement",
+           "socket_core_map", "host_device_env", "get_backend",
+           "register_backend", "BACKENDS"]
+
+_SLOT_BYTES = 128 * 1024     # default ring slot: comfortably holds the
+# largest benchmark jumbo (WC's splitter emits batch x 10 int64 words —
+# 80 KiB at batch 1024) with headroom; oversize payloads raise with a
+# pointer at slot_bytes= instead of splitting the batch (a split would
+# change stateful kernels' running outputs and break byte parity)
+_RING_SLOTS = 8              # slots per ring (jumbos in flight per lane)
+_CTRL = 16                   # ring header: head int64 @0, tail int64 @8
+_POLL = 50e-6                # idle poll quantum (grows to _POLL_MAX)
+_POLL_MAX = 2e-3
+
+_seq_lock = threading.Lock()
+_seq = [0]
+
+
+def _ring_name() -> str:
+    with _seq_lock:
+        _seq[0] += 1
+        return f"bsr{os.getpid()}x{_seq[0]}"
+
+
+class ShmRing:
+    """Fixed-slot SPSC ring over one shared-memory segment.
+
+    Layout: ``head`` (int64, consumer-owned) at offset 0, ``tail`` (int64,
+    producer-owned) at offset 8, then ``capacity`` slots of ``slot_bytes``.
+    Each slot is ``uint32 length + pickled payload``.  Exactly one producer
+    process writes ``tail`` and slots; exactly one consumer process writes
+    ``head`` — no locks, just the two indices (single-writer per cache
+    line; CPython's bytecode boundaries plus x86 store ordering make the
+    payload-then-tail publication safe).
+
+    The endpoint speaks the ``queue.Queue`` protocol the
+    :class:`~.runtime.Executor` uses: blocking ``put`` (backpressure),
+    ``put(timeout=)`` raising ``queue.Full`` (the spout's interruptible
+    path), blocking ``get`` and ``get_nowait`` raising ``queue.Empty``.
+    Data tuples, watermarks and the poison sentinel are tagged in-band —
+    consumers receive the exact runtime objects (poison by identity).
+    """
+
+    __slots__ = ("name", "capacity", "slot_bytes", "shm", "_buf")
+
+    def __init__(self, name: Optional[str] = None, *,
+                 capacity: int = _RING_SLOTS,
+                 slot_bytes: int = _SLOT_BYTES, create: bool = True):
+        self.capacity = capacity
+        self.slot_bytes = slot_bytes
+        size = _CTRL + capacity * slot_bytes
+        if create:
+            name = name or _ring_name()
+            self.shm = shared_memory.SharedMemory(name=name, create=True,
+                                                  size=size)
+            self.shm.buf[:_CTRL] = b"\0" * _CTRL
+        else:
+            self.shm = shared_memory.SharedMemory(name=name)
+        self.name = self.shm.name
+        self._buf = self.shm.buf
+
+    # -- the two indices ---------------------------------------------------
+    def _head(self) -> int:
+        return struct.unpack_from("<q", self._buf, 0)[0]
+
+    def _tail(self) -> int:
+        return struct.unpack_from("<q", self._buf, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        struct.pack_into("<q", self._buf, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        struct.pack_into("<q", self._buf, 8, v)
+
+    # -- encode/decode: in-band control slots ------------------------------
+    @staticmethod
+    def _encode(item) -> bytes:
+        if item is _POISON:
+            payload = ("p",)
+        elif isinstance(item, _Watermark):
+            payload = ("w", item.lane, item.value)
+        else:                       # (arr, t0) data jumbo
+            arr, t0 = item
+            payload = ("d", np.ascontiguousarray(arr), t0)
+        return pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def _decode(blob: bytes):
+        payload = pickle.loads(blob)
+        tag = payload[0]
+        if tag == "p":
+            return _POISON
+        if tag == "w":
+            return _Watermark(payload[1], payload[2])
+        return (payload[1], payload[2])
+
+    # -- producer side -----------------------------------------------------
+    def put(self, item, timeout: Optional[float] = None) -> None:
+        blob = self._encode(item)
+        if len(blob) + 4 > self.slot_bytes:
+            raise ValueError(
+                f"ring payload of {len(blob)} bytes exceeds the "
+                f"{self.slot_bytes}-byte slot; raise slot_bytes= "
+                "(run_app_processes / ShmRing) for jumbo batches this "
+                "large — the ring never splits a batch, splitting would "
+                "change stateful kernels' outputs")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        tail = self._tail()
+        sleep = _POLL
+        while tail - self._head() >= self.capacity:
+            if deadline is not None and time.monotonic() > deadline:
+                raise queue.Full
+            time.sleep(sleep)
+            sleep = min(sleep * 2, _POLL_MAX)
+        off = _CTRL + (tail % self.capacity) * self.slot_bytes
+        struct.pack_into("<I", self._buf, off, len(blob))
+        self._buf[off + 4:off + 4 + len(blob)] = blob
+        self._set_tail(tail + 1)
+
+    # -- consumer side -----------------------------------------------------
+    def get_nowait(self):
+        head = self._head()
+        if self._tail() - head <= 0:
+            raise queue.Empty
+        off = _CTRL + (head % self.capacity) * self.slot_bytes
+        (length,) = struct.unpack_from("<I", self._buf, off)
+        blob = bytes(self._buf[off + 4:off + 4 + length])
+        self._set_head(head + 1)
+        return self._decode(blob)
+
+    def get(self):
+        sleep = _POLL
+        while True:
+            try:
+                return self.get_nowait()
+            except queue.Empty:
+                time.sleep(sleep)
+                sleep = min(sleep * 2, _POLL_MAX)
+
+    # -- lifecycle (parent-side) -------------------------------------------
+    def close(self) -> None:
+        try:
+            self._buf = None
+            self.shm.close()
+        except (BufferError, OSError):
+            pass
+
+    def unlink(self) -> None:
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+class _FanIn:
+    """Consumer-side merge of one replica's input endpoints — shared-memory
+    rings (one per cross-group producer replica) plus at most one local
+    in-process queue.  Implements the blocking ``get()`` the executor's
+    task loop calls, polling sources round-robin so no producer lane can
+    starve another (the threaded backend's single shared queue has the
+    same no-starvation property by FIFO interleaving)."""
+
+    __slots__ = ("sources", "_i")
+
+    def __init__(self, sources: List[object]):
+        self.sources = sources
+        self._i = 0
+
+    def get(self):
+        sleep = _POLL
+        while True:
+            for _ in range(len(self.sources)):
+                src = self.sources[self._i]
+                self._i = (self._i + 1) % len(self.sources)
+                try:
+                    return src.get_nowait()
+                except queue.Empty:
+                    pass
+            time.sleep(sleep)
+            sleep = min(sleep * 2, _POLL_MAX)
+
+
+class _ShmEvent:
+    """``threading.Event`` facade over one shared-memory byte — the spout
+    stop flag, settable from the parent and visible in every worker."""
+
+    __slots__ = ("shm", "_off")
+
+    def __init__(self, shm: shared_memory.SharedMemory, offset: int = 0):
+        self.shm = shm
+        self._off = offset
+
+    def is_set(self) -> bool:
+        return self.shm.buf[self._off] != 0
+
+    def set(self) -> None:
+        self.shm.buf[self._off] = 1
+
+
+# ---------------------------------------------------------------------------
+# State payloads: what crosses the pipe back to the parent
+# ---------------------------------------------------------------------------
+
+
+def _state_payload(st: OperatorState) -> dict:
+    """Reduce one replica's state handle to plain picklable data.
+
+    Ships arrays and scalars only — managed store tables, window buffers
+    (compacted), scratch dict entries, the late/pane counters — never the
+    stores themselves (their specs can hold closure ``init`` factories,
+    which fork inherits but pickle rejects)."""
+    p: dict = {"scratch": dict(st)}
+    m = st.managed
+    if isinstance(m, KeyedStore):
+        p["managed"] = ("keyed", m.table)
+    elif isinstance(m, BroadcastTable):
+        p["managed"] = ("broadcast", m.data, m.version)
+    elif isinstance(m, ValueStore):
+        p["managed"] = ("value", m.value)
+    w = st.window
+    if isinstance(w, EventTimeWindowState):
+        w._compact()
+        p["window"] = ("et", w._ets, w._rows, w._t0s, w._keys,
+                       w._fired_bound, w.late_drops, w.panes_fired)
+    elif isinstance(w, WindowState):
+        p["window"] = ("count", w._hist, w._buf, w._base)
+    return p
+
+
+def _restore_state(st: OperatorState, payload: dict) -> None:
+    """Install a worker's payload onto the parent's matching handle, in
+    place — the handle keeps its spec, shard identity and key extractor, so
+    ``migrate_states`` and the result assembly read it exactly as if the
+    run had been threaded."""
+    st.clear()
+    st.update(payload["scratch"])
+    m = payload.get("managed")
+    if m is not None:
+        kind = m[0]
+        if kind == "keyed":
+            st.managed.table = m[1]
+        elif kind == "broadcast":
+            st.managed.data = m[1]
+            st.managed.version = m[2]
+        else:
+            st.managed.value = m[1]
+    w = payload.get("window")
+    if w is not None:
+        if w[0] == "et":
+            win = st.window
+            win._pending = []
+            (win._ets, win._rows, win._t0s, win._keys,
+             win._fired_bound, win.late_drops, win.panes_fired) = w[1:]
+        else:
+            win = st.window
+            win._hist, win._buf, win._base = w[1:]
+
+
+# ---------------------------------------------------------------------------
+# Worker grouping and pinning
+# ---------------------------------------------------------------------------
+
+Replica = Tuple[str, int]
+
+
+def _normalize_groups(groups, replicas: List[Replica]) -> Dict[Replica, object]:
+    """Resolve the ``groups`` argument to replica -> group id.
+
+    ``None`` gives every replica its own worker (maximum parallelism, every
+    edge a ring).  A mapping may assign by replica ``(op, i)`` or by
+    operator name; unassigned replicas get solo workers."""
+    if groups is None:
+        return {rep: idx for idx, rep in enumerate(replicas)}
+    out: Dict[Replica, object] = {}
+    for rep in replicas:
+        name, _ = rep
+        if rep in groups:
+            out[rep] = groups[rep]
+        elif name in groups:
+            out[rep] = groups[name]
+        else:
+            out[rep] = ("solo",) + rep
+    return out
+
+
+def socket_core_map(n_sockets: int,
+                    cores: Optional[List[int]] = None) -> Dict[int, List[int]]:
+    """Round-robin the host's available cores into ``n_sockets`` buckets —
+    the worker-pinning map for plan-faithful execution.  Sockets left with
+    no core on small hosts are simply unpinned (the scheduler places
+    them)."""
+    cores = sorted(cores if cores is not None else os.sched_getaffinity(0))
+    buckets: Dict[int, List[int]] = {s: [] for s in range(n_sockets)}
+    for idx, c in enumerate(cores):
+        buckets[idx % n_sockets].append(c)
+    return {s: cs for s, cs in buckets.items() if cs}
+
+
+def plan_placement(plan, parallelism: Dict[str, int]
+                   ) -> Tuple[Dict[Replica, int], Dict[int, List[int]]]:
+    """Derive (groups, pins) from a plan's socket map — the placement-
+    faithful mode of ``Plan.execute(backend="processes")``.
+
+    Runtime replica ``(op, j)`` inherits the socket of the plan's unit
+    ``j % planned_units(op)`` (the runtime replica count may have been
+    scaled down from the modelled machine), so colocated units share a
+    worker and cross-socket streams pay the ring copy — placement cost
+    becomes communication cost, measurable even on a single-core host.
+    Pins round-robin the host cores over the plan's sockets."""
+    socks: Dict[str, List[int]] = {}
+    for idx, rep in enumerate(plan.graph.replicas):
+        socks.setdefault(rep.op, []).append(plan.placement[idx])
+    groups: Dict[Replica, int] = {}
+    for op, k in parallelism.items():
+        s = sorted(max(0, x) for x in socks.get(op, [0]))  # UNPLACED -> 0
+        for j in range(k):
+            groups[(op, j)] = s[j % len(s)]
+    pins = socket_core_map(plan.machine.n_sockets)
+    return groups, pins
+
+
+def host_device_env(n: int, base: Optional[Mapping[str, str]] = None
+                    ) -> Dict[str, str]:
+    """Worker environment for the JAX host-device variant.
+
+    Sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (replacing
+    any existing count flag) so a kernel that lazily imports JAX inside a
+    worker sees N host devices — one per pinned core group.  Also sets the
+    tcmalloc large-alloc report threshold the exemplar run scripts use;
+    tcmalloc itself must be LD_PRELOAD-ed into the *parent* (preloading
+    happens at exec, forked workers inherit it — see docs/API.md)."""
+    env = dict(base or {})
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n)}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", "60000000000")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# The process backend
+# ---------------------------------------------------------------------------
+
+
+def run_app_processes(app: StreamingApp,
+                      parallelism: Optional[Dict[str, int]] = None,
+                      batch: int = 256, duration: float = 1.0,
+                      jumbo: bool = True, queue_cap: int = 32,
+                      partition: Optional[Dict[str, str]] = None,
+                      seed: int = 0, vectorized: Optional[bool] = None,
+                      max_batches: Optional[int] = None,
+                      initial_states: Optional[Dict[str, List[dict]]] = None,
+                      groups: Optional[Mapping] = None,
+                      pin: Optional[Mapping[object, List[int]]] = None,
+                      env: Optional[Mapping[str, str]] = None,
+                      slot_bytes: int = _SLOT_BYTES,
+                      ring_slots: int = _RING_SLOTS,
+                      timeout: Optional[float] = None) -> RuntimeResult:
+    """Execute ``app`` on forked worker processes (see module docstring).
+
+    Accepts the full ``run_app`` surface plus: ``groups`` (replica/operator
+    -> worker group id; default one worker per replica), ``pin`` (group id
+    -> CPU cores, applied via ``sched_setaffinity``), ``env`` (extra
+    worker environment), ``slot_bytes``/``ring_slots`` (ring geometry) and
+    ``timeout`` (whole-run deadline; on expiry workers are terminated,
+    every shared-memory segment is unlinked and ``TimeoutError`` is
+    raised — a wedged ring cannot orphan segments or hang the caller).
+
+    Parity contract: under deterministic replay (``max_batches``) the
+    result — sink counters, keyed state bytes, pane multisets, late
+    drops — is byte-identical to ``run_app``'s for any grouping, because
+    both backends run the same executors over the same compiled routes and
+    only the transport differs.
+    """
+    prep = prepare_app(app, parallelism, partition, initial_states,
+                       batch=batch)
+    lg, par = prep.lg, prep.parallelism
+    replicas: List[Replica] = [(name, i) for name in lg.operators
+                               for i in range(par[name])]
+    group_of = _normalize_groups(groups, replicas)
+    gids = list(dict.fromkeys(group_of.values()))      # first-appearance order
+    members: Dict[object, List[Replica]] = {g: [] for g in gids}
+    for rep in replicas:
+        members[group_of[rep]].append(rep)
+
+    # -- wiring: local queues inside a group, rings across groups ----------
+    local_qs: Dict[Replica, queue.Queue] = {}
+    rings: Dict[Tuple[Replica, Replica], ShmRing] = {}
+    ring_cap = max(2, min(queue_cap, ring_slots))
+    for v in lg.operators:
+        if lg.operators[v].is_spout:
+            continue
+        for j in range(par[v]):
+            for u in lg.producers(v):
+                for i in range(par[u]):
+                    pr, cr = (u, i), (v, j)
+                    if group_of[pr] == group_of[cr]:
+                        if cr not in local_qs:
+                            local_qs[cr] = queue.Queue(maxsize=queue_cap)
+                    else:
+                        rings[(pr, cr)] = ShmRing(capacity=ring_cap,
+                                                  slot_bytes=slot_bytes)
+
+    ctrl = shared_memory.SharedMemory(name=_ring_name(), create=True, size=16)
+    ctrl.buf[:16] = b"\0" * 16
+    stop = _ShmEvent(ctrl)
+
+    def in_q_of(name: str, i: int):
+        cr = (name, i)
+        in_rings = [r for (pr, c), r in rings.items() if c == cr]
+        local = local_qs.get(cr)
+        if not in_rings:
+            return local if local is not None else queue.Queue()
+        if local is None and len(in_rings) == 1:
+            return in_rings[0]
+        return _FanIn(in_rings + ([local] if local is not None else []))
+
+    def out_q_of(name: str, i: int, cop: str):
+        pr = (name, i)
+        return [rings[(pr, (cop, j))] if (pr, (cop, j)) in rings
+                else local_qs[(cop, j)] for j in range(par[cop])]
+
+    def _worker(gid, conn) -> None:
+        try:
+            if env:
+                os.environ.update(env)
+            if pin and gid in pin:
+                try:
+                    os.sched_setaffinity(0, set(pin[gid]))
+                except (OSError, ValueError):
+                    pass                     # cores absent on this host
+            # a kernel crash happens on an executor *thread*; without this
+            # hook the worker main thread would join the corpse and report
+            # "ok" while downstream workers starve — record and fail fast
+            errors: List[str] = []
+            threading.excepthook = lambda a: errors.append("".join(
+                traceback.format_exception(a.exc_type, a.exc_value,
+                                           a.exc_traceback)))
+            latencies: List[float] = []
+            counts = [0]
+            spouts, tasks = build_executors(
+                app, prep, batch=batch, jumbo=jumbo, vectorized=vectorized,
+                seed=seed, max_batches=max_batches, stop=stop,
+                latencies=latencies,
+                add_spout_count=lambda n: counts.__setitem__(
+                    0, counts[0] + n),
+                in_q_of=in_q_of, out_q_of=out_q_of,
+                only=set(members[gid]))
+            for t in tasks:
+                t.start()
+            for s in spouts:
+                s.start()
+            join_timeout = 5.0 if max_batches is None else 60.0
+            # Unlike run_app, do NOT set the stop flag when this worker's
+            # spouts finish: the flag is shared across workers and another
+            # group's spout may still be mid-replay.  The parent sets it
+            # (duration cutoff / shutdown); tasks exit by poison counting.
+            # Joins poll so a recorded crash aborts the wait immediately.
+            local_deadline = time.monotonic() + join_timeout
+            for x in spouts + tasks:
+                while x.is_alive() and not errors \
+                        and time.monotonic() < local_deadline:
+                    x.join(timeout=0.1)
+                if errors:
+                    raise RuntimeError("executor crashed:\n"
+                                       + "\n".join(errors))
+            payload = {
+                "states": {rep: _state_payload(prep.states[rep[0]][rep[1]])
+                           for rep in members[gid]},
+                "latencies": latencies,
+                "spout_tuples": counts[0]}
+            conn.send(("ok", payload))
+            conn.close()
+        except BaseException:
+            try:
+                conn.send(("error", f"worker {gid!r}:\n"
+                           + traceback.format_exc()))
+                conn.close()
+            finally:
+                os._exit(1)
+
+    ctx = mp.get_context("fork")
+    procs: List[mp.Process] = []
+    conns = []
+    t_start = time.perf_counter()
+    wall = 0.0
+    spout_total = 0
+    latencies: List[float] = []
+    deadline = time.monotonic() + (
+        timeout if timeout is not None
+        else 120.0 + (duration if max_batches is None else 0.0))
+    try:
+        for gid in gids:
+            parent_conn, child_conn = ctx.Pipe(duplex=False)
+            p = ctx.Process(target=_worker, args=(gid, child_conn),
+                            daemon=True, name=f"procexec-{gid}")
+            p.start()
+            child_conn.close()
+            procs.append(p)
+            conns.append(parent_conn)
+        if max_batches is None:
+            time.sleep(duration)
+            stop.set()
+        pending = {c: (g, p) for c, g, p in zip(conns, gids, procs)}
+        while pending:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"process backend exceeded its deadline with "
+                    f"{len(pending)} worker(s) still running "
+                    f"({sorted(str(g) for _, (g, _) in pending.items())}); "
+                    "workers terminated, shared memory unlinked")
+            for c in conn_wait(list(pending), timeout=min(remaining, 0.25)):
+                gid, p = pending.pop(c)
+                try:
+                    status, payload = c.recv()
+                except EOFError:
+                    raise RuntimeError(
+                        f"worker {gid!r} died without reporting "
+                        f"(exitcode {p.exitcode})") from None
+                if status == "error":
+                    raise RuntimeError(
+                        "process backend worker failed — " + payload)
+                for rep, sp in payload["states"].items():
+                    _restore_state(prep.states[rep[0]][rep[1]], sp)
+                latencies.extend(payload["latencies"])
+                spout_total += payload["spout_tuples"]
+            # a silent crash (SIGKILL, segfault) leaves no pipe message
+            for c, (gid, p) in list(pending.items()):
+                if not p.is_alive() and not c.poll():
+                    raise RuntimeError(
+                        f"worker {gid!r} died without reporting "
+                        f"(exitcode {p.exitcode})")
+        wall = time.perf_counter() - t_start
+    finally:
+        stop.set()
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        for p in procs:
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=5.0)
+        for r in rings.values():
+            r.close()
+            r.unlink()
+        try:
+            ctrl.close()
+            ctrl.unlink()
+        except FileNotFoundError:
+            pass
+    return collect_result(prep, spout_total, latencies, wall)
+
+
+def _run_app_threads(app: StreamingApp, **kw) -> RuntimeResult:
+    """Registry adapter for the default threaded backend."""
+    from .runtime import run_app
+    return run_app(app, **kw)
+
+
+BACKENDS: Dict[str, Callable[..., RuntimeResult]] = {
+    "threads": _run_app_threads,
+    "processes": run_app_processes,
+}
+
+
+def register_backend(name: str,
+                     fn: Callable[..., RuntimeResult]) -> None:
+    """Register an execution backend under ``name`` for
+    ``Plan.execute(backend=name)``.  The callable must accept the
+    ``run_app`` keyword surface and return a
+    :class:`~.runtime.RuntimeResult`."""
+    BACKENDS[name] = fn
+
+
+def get_backend(name: str) -> Callable[..., RuntimeResult]:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown execution backend {name!r} "
+            f"(registered: {sorted(BACKENDS)})") from None

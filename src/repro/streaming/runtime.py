@@ -385,35 +385,78 @@ class Executor(threading.Thread):
                 q.put(_POISON)
 
 
-def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
-            batch: int = 256, duration: float = 1.0, jumbo: bool = True,
-            queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
-            seed: int = 0, vectorized: Optional[bool] = None,
-            max_batches: Optional[int] = None,
-            initial_states: Optional[Dict[str, List[dict]]] = None
-            ) -> RuntimeResult:
-    """Execute ``app`` for ``duration`` seconds and return measured stats.
+WM_TARGET_PANES = 128   # adaptive cadence: aim for this many released panes
+# per watermark.  Derived from the declared window grid (panes per batch =
+# batch * et_spacing / slide, times the probed (key, span) multiplicity for
+# keyed pane groups) instead of a hand-calibrated constant: sd_et at the
+# bench batch of 256 lands exactly on the previously calibrated 8 marks.
 
-    Partition strategies and key extractors come from the app's Topology
-    declaration, compiled once into routes (:mod:`repro.streaming.routing`);
-    the ``partition`` argument overrides per operator.  ``vectorized=None``
-    (default) picks the keyed-split implementation per edge from the
-    calibrated :func:`~.routing.auto_vectorized` threshold;
-    ``True``/``False`` force the argsort+bincount / seed per-mask path
-    everywhere (the ``bench_runtime.py`` A/B override).
 
-    Declared operator state (``Topology.op(state=StateSpec(...))``) becomes
-    managed stores on the replica state handles: keyed stores are sharded
-    exactly like the compiled keyed route, so the union of the replica
-    stores equals a single-replica run's store.
+def upstream_spouts(graph, op: str) -> List[str]:
+    """Spout operators upstream of ``op`` (inclusive if ``op`` is one)."""
+    seen, frontier = set(), [op]
+    while frontier:
+        x = frontier.pop()
+        if x in seen:
+            continue
+        seen.add(x)
+        frontier.extend(graph.producers(x))
+    return [s for s in graph.spouts() if s in seen]
 
-    ``max_batches`` switches to *deterministic replay*: every spout emits
-    exactly that many batches (seeds ``seed .. seed+max_batches-1``) and the
-    run drains fully — no drops, no duration cutoff — which makes keyed
-    state byte-reproducible across replica counts.  ``initial_states`` seeds
-    per-replica state (one entry per replica, e.g. from
-    :func:`repro.streaming.state.migrate_states` after a replan).
+
+def derive_watermark_every(app: StreamingApp, spout: str,
+                           batch: int) -> int:
+    """Resolve a spout's ``watermark_every="auto"`` declaration.
+
+    Panes released per batch follow from the declared grid: ``batch *
+    et_spacing / slide`` spans advance per batch, each multiplied by the
+    probed per-span ``(key, span)`` multiplicity for keyed pane groups
+    (:func:`~.simulator.probe_pane_keys`).  The cadence then targets
+    :data:`WM_TARGET_PANES` panes per mark — enough panes to amortize the
+    per-mark jumbo flush + merge + one stacked segmented fire, without the
+    fire bursts outgrowing the pipeline's queue slack (the failure mode of
+    over-coarse hand tunings).  Clamped to ``[1, 64]`` batches.
     """
+    from .simulator import probe_et_spacing, probe_pane_keys
+    spacing = probe_et_spacing(app, batch=batch).get(spout, 1.0)
+    mult = probe_pane_keys(app, batch=batch)
+    panes_per_batch = 0.0
+    for op, w in app.time_windows().items():
+        if spout not in upstream_spouts(app.graph, op):
+            continue
+        panes_per_batch += batch * spacing / w.slide * mult.get(op, 1.0)
+    if panes_per_batch <= 0:
+        return 1
+    return int(max(1, min(64, round(WM_TARGET_PANES / panes_per_batch))))
+
+
+@dataclasses.dataclass
+class PreparedApp:
+    """Construct phase of the executor lifecycle: everything ``run_app``
+    derives *before* any thread (or worker process) starts — validated
+    graph, compiled routes, per-replica states, resolved watermark
+    cadences.  Backends (threads here, processes in
+    :mod:`repro.streaming.procexec`) share this one construct path and
+    differ only in how they wire queues and run the executors."""
+
+    lg: object                              # LogicalGraph
+    parallelism: Dict[str, int]
+    routes: object                          # RoutingTable
+    states: Dict[str, List[OperatorState]]
+    win_key_by: Dict[str, object]
+    wm_every: Dict[str, int]                # resolved per-spout cadence
+
+
+def prepare_app(app: StreamingApp,
+                parallelism: Optional[Dict[str, int]] = None,
+                partition: Optional[Dict[str, str]] = None,
+                initial_states: Optional[Dict[str, List[dict]]] = None,
+                batch: int = 256) -> PreparedApp:
+    """Validate + compile + build state: the serializable construct phase.
+
+    Raises exactly what ``run_app`` raised inline before the split; the
+    returned :class:`PreparedApp` feeds :func:`build_executors` in any
+    backend."""
     lg = app.graph
     parallelism = dict(parallelism or {})
     validate_operator_names(lg, parallelism, "parallelism")
@@ -449,13 +492,6 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                 "rows. Key every input stream (sharded panes) or keep "
                 "parallelism 1")
 
-    # one input queue per non-spout replica
-    in_qs: Dict[Tuple[str, int], queue.Queue] = {}
-    for name in lg.operators:
-        if not lg.operators[name].is_spout:
-            for i in range(parallelism[name]):
-                in_qs[(name, i)] = queue.Queue(maxsize=queue_cap)
-
     states: Dict[str, List[OperatorState]] = {
         name: [make_operator_state(app.state.get(name), parallelism[name], j,
                                    key_by=win_key_by.get(name))
@@ -477,6 +513,131 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
                 win = getattr(st, "window", None)
                 if isinstance(win, EventTimeWindowState):
                     win.key_by = kb
+
+    wm_every: Dict[str, int] = {}
+    declared = getattr(app, "watermark_every", None) or {}
+    for name in lg.spouts():
+        cadence = declared.get(name, 1)
+        wm_every[name] = derive_watermark_every(app, name, batch) \
+            if cadence == "auto" else cadence
+    return PreparedApp(lg, parallelism, routes, states, win_key_by, wm_every)
+
+
+def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
+                    jumbo: bool, vectorized: Optional[bool], seed: int,
+                    max_batches: Optional[int], stop, latencies: List[float],
+                    add_spout_count: Callable[[int], None],
+                    in_q_of: Callable, out_q_of: Callable,
+                    only=None) -> Tuple[List[Executor], List[Executor]]:
+    """Instantiate the executors of a prepared app (the run phase's cast).
+
+    ``in_q_of(name, i)`` returns the input endpoint of a task replica;
+    ``out_q_of(name, i, consumer)`` the list of per-consumer-replica output
+    endpoints for one producer replica.  Endpoints only need the
+    ``queue.Queue`` protocol the :class:`Executor` uses (``get``, blocking
+    ``put``, ``put(timeout=)`` raising ``queue.Full``) — threads pass real
+    queues, the process backend passes shared-memory rings.  ``only``
+    restricts construction to a replica subset (one worker's share).
+    """
+    lg, parallelism = prep.lg, prep.parallelism
+    spouts: List[Executor] = []
+    tasks: List[Executor] = []
+    for name, spec in lg.operators.items():
+        is_sink = not lg.consumers(name)
+        n_producer_units = sum(parallelism[p] for p in lg.producers(name))
+        for i in range(parallelism[name]):
+            if only is not None and (name, i) not in only:
+                continue
+            ports = [
+                _OutPort(prep.routes.route(name, cop).bind(
+                    parallelism[cop], vectorized=vectorized),
+                    out_q_of(name, i, cop), batch)
+                for cop in lg.consumers(name)]
+            if spec.is_spout:
+                spouts.append(Executor(
+                    f"{name}#{i}", ports, batch, jumbo,
+                    prep.states[name][i], source=app.source_for(name),
+                    stop=stop, seed=seed + 7919 * i,
+                    on_delivered=add_spout_count, max_batches=max_batches,
+                    event_time=getattr(app, "event_time", {}).get(name),
+                    wm_every=prep.wm_every.get(name, 1),
+                    wm_interval=getattr(app, "watermark_interval",
+                                        {}).get(name)))
+            else:
+                tasks.append(Executor(
+                    f"{name}#{i}", ports, batch, jumbo,
+                    prep.states[name][i], kernel=app.kernels[name],
+                    in_q=in_q_of(name, i),
+                    expected_poisons=max(n_producer_units, 1),
+                    lat_sink=latencies if is_sink else None))
+    return spouts, tasks
+
+
+def collect_result(prep: PreparedApp, spout_tuples: int,
+                   latencies: List[float], wall: float) -> RuntimeResult:
+    """Assemble the common :class:`RuntimeResult` from final states —
+    shared by the threaded and process backends."""
+    lg, states = prep.lg, prep.states
+    sink_ops = lg.sinks()
+    sink_tuples = sum(st.get("seen", 0)
+                      for op in sink_ops for st in states[op])
+    late = panes = 0
+    for reps in states.values():
+        for st in reps:
+            win = getattr(st, "window", None)
+            if isinstance(win, EventTimeWindowState):
+                late += win.late_drops
+                panes += win.panes_fired
+    lat = np.array(latencies) if latencies else np.array([0.0])
+    return RuntimeResult(
+        duration=wall, sink_tuples=int(sink_tuples),
+        spout_tuples=int(spout_tuples),
+        throughput=sink_tuples / max(wall, 1e-9),
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p99=float(np.percentile(lat, 99)),
+        states=states, late_drops=late, panes_fired=panes)
+
+
+def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
+            batch: int = 256, duration: float = 1.0, jumbo: bool = True,
+            queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
+            seed: int = 0, vectorized: Optional[bool] = None,
+            max_batches: Optional[int] = None,
+            initial_states: Optional[Dict[str, List[dict]]] = None
+            ) -> RuntimeResult:
+    """Execute ``app`` for ``duration`` seconds and return measured stats.
+
+    Partition strategies and key extractors come from the app's Topology
+    declaration, compiled once into routes (:mod:`repro.streaming.routing`);
+    the ``partition`` argument overrides per operator.  ``vectorized=None``
+    (default) picks the keyed-split implementation per edge from the
+    calibrated :func:`~.routing.auto_vectorized` threshold;
+    ``True``/``False`` force the argsort+bincount / seed per-mask path
+    everywhere (the ``bench_runtime.py`` A/B override).
+
+    Declared operator state (``Topology.op(state=StateSpec(...))``) becomes
+    managed stores on the replica state handles: keyed stores are sharded
+    exactly like the compiled keyed route, so the union of the replica
+    stores equals a single-replica run's store.
+
+    ``max_batches`` switches to *deterministic replay*: every spout emits
+    exactly that many batches (seeds ``seed .. seed+max_batches-1``) and the
+    run drains fully — no drops, no duration cutoff — which makes keyed
+    state byte-reproducible across replica counts.  ``initial_states`` seeds
+    per-replica state (one entry per replica, e.g. from
+    :func:`repro.streaming.state.migrate_states` after a replan).
+    """
+    prep = prepare_app(app, parallelism, partition, initial_states,
+                       batch=batch)
+    lg, parallelism = prep.lg, prep.parallelism
+
+    # one input queue per non-spout replica
+    in_qs: Dict[Tuple[str, int], queue.Queue] = {}
+    for name in lg.operators:
+        if not lg.operators[name].is_spout:
+            for i in range(parallelism[name]):
+                in_qs[(name, i)] = queue.Queue(maxsize=queue_cap)
+
     latencies: List[float] = []
     stop = threading.Event()
     spout_counts = [0]
@@ -486,37 +647,13 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         with count_lock:
             spout_counts[0] += n
 
-    def make_ports(name: str) -> List[_OutPort]:
-        return [
-            _OutPort(routes.route(name, cop).bind(parallelism[cop],
-                                                  vectorized=vectorized),
-                     [in_qs[(cop, j)] for j in range(parallelism[cop])],
-                     batch)
-            for cop in lg.consumers(name)]
-
-    spouts: List[Executor] = []
-    tasks: List[Executor] = []
-    for name, spec in lg.operators.items():
-        is_sink = not lg.consumers(name)
-        n_producer_units = sum(parallelism[p] for p in lg.producers(name))
-        for i in range(parallelism[name]):
-            if spec.is_spout:
-                spouts.append(Executor(
-                    f"{name}#{i}", make_ports(name), batch, jumbo,
-                    states[name][i], source=app.source_for(name), stop=stop,
-                    seed=seed + 7919 * i, on_delivered=add_spout_count,
-                    max_batches=max_batches,
-                    event_time=getattr(app, "event_time", {}).get(name),
-                    wm_every=getattr(app, "watermark_every", {}).get(name, 1),
-                    wm_interval=getattr(app, "watermark_interval",
-                                        {}).get(name)))
-            else:
-                tasks.append(Executor(
-                    f"{name}#{i}", make_ports(name), batch, jumbo,
-                    states[name][i], kernel=app.kernels[name],
-                    in_q=in_qs[(name, i)],
-                    expected_poisons=max(n_producer_units, 1),
-                    lat_sink=latencies if is_sink else None))
+    spouts, tasks = build_executors(
+        app, prep, batch=batch, jumbo=jumbo, vectorized=vectorized,
+        seed=seed, max_batches=max_batches, stop=stop, latencies=latencies,
+        add_spout_count=add_spout_count,
+        in_q_of=lambda name, i: in_qs[(name, i)],
+        out_q_of=lambda name, i, cop: [in_qs[(cop, j)]
+                                       for j in range(parallelism[cop])])
 
     for t in tasks:
         t.start()
@@ -537,22 +674,4 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     for t in tasks:
         t.join(timeout=join_timeout)
     wall = time.perf_counter() - t_start
-
-    sink_ops = lg.sinks()
-    sink_tuples = sum(st.get("seen", 0)
-                      for op in sink_ops for st in states[op])
-    late = panes = 0
-    for reps in states.values():
-        for st in reps:
-            win = getattr(st, "window", None)
-            if isinstance(win, EventTimeWindowState):
-                late += win.late_drops
-                panes += win.panes_fired
-    lat = np.array(latencies) if latencies else np.array([0.0])
-    return RuntimeResult(
-        duration=wall, sink_tuples=int(sink_tuples),
-        spout_tuples=int(spout_counts[0]),
-        throughput=sink_tuples / max(wall, 1e-9),
-        latency_p50=float(np.percentile(lat, 50)),
-        latency_p99=float(np.percentile(lat, 99)),
-        states=states, late_drops=late, panes_fired=panes)
+    return collect_result(prep, spout_counts[0], latencies, wall)

@@ -29,8 +29,9 @@ import numpy as np
 from repro.core import ExecutionGraph, MachineSpec
 from repro.core.perfmodel import UNPLACED
 
-from .routing import RoutingTable, extract_event_times, unit_delivery
-from .state import WindowSpec, grid_pane_ends
+from .routing import (RoutingTable, compile_routes, extract_event_times,
+                      extract_keys, unit_delivery)
+from .state import WindowSpec, grid_pane_ends, pane_range
 
 
 @dataclasses.dataclass
@@ -203,6 +204,101 @@ def probe_et_spacing(app, batch: int = 256, batches: int = 3,
     return out
 
 
+def _spout_rows(app, op: str, batch: int, batches: int,
+                seed: int) -> List[np.ndarray]:
+    """Seeded sample batches from every spout upstream of ``op`` (the probe
+    convention: extractors are applied to *spout* rows, valid whenever the
+    upstream path passes the probed columns through unchanged — true of
+    every benchmark app and documented as the probes' contract)."""
+    from .runtime import upstream_spouts
+    rows = []
+    for sp in upstream_spouts(app.graph, op):
+        source = app.source_for(sp)
+        rows.extend(source(batch, seed + b) for b in range(batches))
+    return rows
+
+
+def probe_pane_keys(app, batch: int = 256, batches: int = 3,
+                    seed: int = 0) -> Dict[str, float]:
+    """Empirical per-span pane multiplicity of keyed event-time windows.
+
+    For each operator declaring keyed pane groups
+    (``WindowSpec(keyed=True)``), draws seeded batches from its upstream
+    spouts and counts distinct non-empty ``(key, span)`` pairs against
+    distinct spans — the mean number of key panes one grid span fires.
+    ``des_simulate(pane_keys=...)`` scales its grid-walk pane accounting by
+    this factor (the DES tracks rates, not tuple contents, so it cannot see
+    key occupancy itself); ``Plan.simulate`` plumbs the probe in
+    automatically.  Unkeyed windows are multiplicity 1 and omitted.
+    """
+    out: Dict[str, float] = {}
+    routes = compile_routes(app)
+    for op, sspec in (getattr(app, "state", None) or {}).items():
+        w = sspec.window
+        if w is None or not w.time or not w.keyed:
+            continue
+        key_by = routes.key_extractor(op)
+        pairs, spans = set(), set()
+        for arr in _spout_rows(app, op, batch, batches, seed):
+            if not len(arr):
+                continue
+            ets = extract_event_times(arr, w.time_by)
+            keys = extract_keys(arr, key_by)
+            k_lo, k_hi = pane_range(ets, w.size, w.slide)
+            for lo, hi, key in zip(k_lo, k_hi, keys):
+                for k in range(int(lo), int(hi) + 1):
+                    pairs.add((k, int(key)))
+                    spans.add(k)
+        out[op] = len(pairs) / max(len(spans), 1)
+    return out
+
+
+def replay_pane_counts(app, *, batches: int, batch: int = 256,
+                       seed: int = 0,
+                       parallelism: Optional[Dict[str, int]] = None
+                       ) -> Dict[str, int]:
+    """Exact pane ledger for a deterministic replay (``max_batches`` mode).
+
+    Replays every spout's seeded draws (replica ``i`` of a spout seeds
+    ``seed + 7919*i + b``, exactly the runtime's enumeration) through the
+    shared pane arithmetic and counts the non-empty panes each event-time
+    windowed operator must fire by end of stream: distinct ``(key, span)``
+    pairs for keyed pane groups, distinct spans otherwise.  Replication of
+    the windowed operator shards panes without changing their union, so
+    the ledger is the runtime's total ``panes_fired`` for any replica
+    count — provided no tuple goes late (lateness >= the stream's skew;
+    the benchmark sources guarantee it), since late rows never join a
+    pane.  This is the DES-side ground truth the runtime==DES pane-count
+    assertions compare against.
+    """
+    parallelism = parallelism or {}
+    out: Dict[str, int] = {}
+    routes = compile_routes(app)
+    from .runtime import upstream_spouts
+    for op, sspec in (getattr(app, "state", None) or {}).items():
+        w = sspec.window
+        if w is None or not w.time:
+            continue
+        key_by = routes.key_extractor(op) if w.keyed else None
+        panes = set()
+        for sp in upstream_spouts(app.graph, op):
+            source = app.source_for(sp)
+            for i in range(parallelism.get(sp, 1)):
+                for b in range(batches):
+                    arr = source(batch, seed + 7919 * i + b)
+                    if not len(arr):
+                        continue
+                    ets = extract_event_times(arr, w.time_by)
+                    keys = extract_keys(arr, key_by) if w.keyed \
+                        else np.zeros(len(arr), np.int64)
+                    k_lo, k_hi = pane_range(ets, w.size, w.slide)
+                    for lo, hi, key in zip(k_lo, k_hi, keys):
+                        for k in range(int(lo), int(hi) + 1):
+                            panes.add((k, int(key)))
+        out[op] = len(panes)
+    return out
+
+
 def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                  placement: List[int], input_rate,
                  batch: int = 64, horizon: float = 0.02,
@@ -210,7 +306,8 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                  seed: int = 0,
                  routes: Optional[RoutingTable] = None,
                  time_windows: Optional[Dict[str, WindowSpec]] = None,
-                 et_spacing: Union[float, Mapping[str, float]] = 1.0
+                 et_spacing: Union[float, Mapping[str, float]] = 1.0,
+                 pane_keys: Optional[Mapping[str, float]] = None
                  ) -> DesResult:
     """Simulate ``horizon`` seconds of plan execution.
 
@@ -254,6 +351,15 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
     spout -> pane firing — the latency cost of waiting for completeness
     (batching + queueing + lateness wait), which no other layer models.
     Panes are paced on the dense grid (the DES tracks rates, not contents).
+
+    ``pane_keys`` (``{operator: multiplicity}``, from
+    :func:`probe_pane_keys`) corrects the grid walk for *keyed* pane
+    groups: one grid span of a keyed window fires one pane per occupied
+    key, so ``panes_fired`` and the ``pane_latency`` sample weights scale
+    by the probed per-span multiplicity.  The multiplicity is divided
+    across the operator's units — keys shard over replicas, the grid does
+    not — so the op-level total matches the runtime's sharded-pane union
+    instead of multiplying by the replica count.
     """
     rng = np.random.default_rng(seed)
     n = graph.n_units
@@ -280,6 +386,17 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                     "paces event-time panes only")
             for vi in graph.units_of(op):
                 win_units[vi] = wspec
+    unit_mult: Dict[int, float] = {}
+    if pane_keys:
+        unknown = sorted(set(pane_keys) - set(time_windows or {}))
+        if unknown:
+            raise ValueError(
+                f"pane_keys names operators without a declared time "
+                f"window: {unknown}")
+        for op, mult in pane_keys.items():
+            # keys shard over the op's units; the grid walk repeats per unit
+            for vi in graph.units_of(op):
+                unit_mult[vi] = float(mult) / graph.parallelism[op]
     track_wm = bool(win_units)
     unit_wm = [-math.inf] * n
     lane_wm: Dict[Tuple[int, int], float] = {}
@@ -346,10 +463,15 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
             ends = grid_pane_ends(fired_bound[cv], bound,
                                   wspec.size, wspec.slide)
             if len(ends) and now >= warm:
-                panes_fired += len(ends)
+                # keyed pane groups: each grid span fires one pane per
+                # occupied key (probed multiplicity), so counts and the
+                # latency sample weights scale together
+                mult = unit_mult.get(cv, 1.0)
+                panes_fired += len(ends) * mult
                 pane_batches += 1
+                w = max(1, int(round(mult)))
                 for e in ends:
-                    pane_lat.append(now - _complete_wall(cv, e, now))
+                    pane_lat.extend([now - _complete_wall(cv, e, now)] * w)
             fired_bound[cv] = max(fired_bound[cv], bound)
 
     def spout_rate(v: int) -> float:
@@ -485,7 +607,7 @@ def des_simulate(graph: ExecutionGraph, machine: MachineSpec,
                           float(np.percentile(pane_arr, 50))),
         pane_latency_p99=(math.nan if pane_arr is None else
                           float(np.percentile(pane_arr, 99))),
-        panes_fired=int(panes_fired), pane_batches=int(pane_batches))
+        panes_fired=int(round(panes_fired)), pane_batches=int(pane_batches))
 
 
 def measure_capacity(graph: ExecutionGraph, machine: MachineSpec,

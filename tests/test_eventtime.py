@@ -467,3 +467,126 @@ if HAVE_HYPOTHESIS:
         for lane, v in updates:
             (g1 if lane in ("a", "b") else g2).update(lane, v)
         assert flat.merged == shuffled.merged == min(g1.merged, g2.merged)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6 satellites: adaptive cadence, keyed DES pane multiplicity,
+# probed residency pricing
+# ---------------------------------------------------------------------------
+
+def test_auto_watermark_cadence_resolution():
+    """``watermark_every="auto"`` derives the cadence from the declared
+    window grid; at the bench batch of 256 it reproduces the previously
+    hand-calibrated 8 for sd_et, scales with batch size, and explicit int
+    declarations stay as overrides."""
+    from repro.streaming.apps import spike_detection_keyed
+    from repro.streaming.runtime import prepare_app
+
+    sd_et = spike_detection_eventtime         # default cadence is "auto"
+    assert sd_et().watermark_every == {"spout": "auto"}
+    assert prepare_app(sd_et(), batch=256).wm_every == {"spout": 8}
+    assert prepare_app(sd_et(), batch=64).wm_every == {"spout": 32}
+    # keyed pane groups fire ~one pane per occupied device per span:
+    # far more panes per batch -> tighter cadence
+    assert prepare_app(spike_detection_keyed(), batch=256).wm_every \
+        == {"spout": 2}
+    assert prepare_app(sd_et(watermark_every=5), batch=256).wm_every \
+        == {"spout": 5}
+
+
+def test_auto_cadence_pane_contents_invariant():
+    """Cadence changes amortization, never pane contents: auto vs pinned
+    cadence agree on every counter under deterministic replay."""
+    kw = dict(batch=64, max_batches=6, seed=3)
+    r_auto = run_app(spike_detection_eventtime(), **kw)          # every 32
+    r_pin = run_app(spike_detection_eventtime(watermark_every=8), **kw)
+    assert r_auto.panes_fired == r_pin.panes_fired > 0
+    assert r_auto.late_drops == r_pin.late_drops
+    assert [dict(s) for s in r_auto.states["sink"]] \
+        == [dict(s) for s in r_pin.states["sink"]]
+
+
+def test_runtime_pane_counts_match_replay_ledger():
+    """The exact pane ledger (distinct non-empty (key, span) pairs over the
+    replayed spout draws) equals the runtime's fired-pane count — the
+    keyed-multiplicity acceptance check on sd_key, plus sd_et as the
+    unkeyed degenerate case."""
+    from repro.streaming.apps import spike_detection_keyed
+    from repro.streaming.simulator import replay_pane_counts
+
+    for make_app, op in [(spike_detection_keyed, "device_stats"),
+                         (spike_detection_eventtime, "pane_stats")]:
+        r = run_app(make_app(), batch=128, max_batches=6, seed=3)
+        ledger = replay_pane_counts(make_app(), batches=6, batch=128, seed=3)
+        assert r.panes_fired == ledger[op] > 0, op
+
+
+def test_des_keyed_pane_multiplicity():
+    """des_simulate scales pane firing by the probed per-span (key, span)
+    multiplicity: sd_key fires ~one pane per occupied device per span, not
+    one per span — the plumbed default matches the probe, and pane_keys=1.0
+    reproduces the old bare grid walk for comparison."""
+    from repro.streaming.apps import spike_detection_keyed
+    from repro.streaming.simulator import probe_pane_keys
+
+    mult = probe_pane_keys(spike_detection_keyed())["device_stats"]
+    assert 4.0 < mult <= 8.0                  # 8 devices, dense occupancy
+
+    plan = Job(spike_detection_keyed()).plan(server_a(), optimizer="ff")
+    bare = plan.simulate(backend="des", horizon=0.004,
+                         pane_keys={"device_stats": 1.0}).raw
+    keyed = plan.simulate(backend="des", horizon=0.004).raw
+    assert bare.panes_fired > 0
+    assert keyed.panes_fired == pytest.approx(bare.panes_fired * mult,
+                                              rel=0.05)
+    with pytest.raises(ValueError, match="pane_keys"):
+        plan.simulate(backend="des", horizon=0.004,
+                      pane_keys={"nope": 2.0})
+
+
+def _sparse_clock_app(stride):
+    """An event-time app whose source clock advances ``stride`` ticks per
+    tuple — the window then holds 1/stride as many rows resident."""
+    def source(batch, seed):
+        ets = (np.abs(seed) * batch
+               + np.arange(batch, dtype=np.float64)) * stride
+        return np.stack([ets, np.ones(batch)], axis=1)
+
+    def k_win(rows, state):
+        return [rows[:1]]
+
+    return (Topology("sparse")
+            .spout("s", source, exec_ns=100.0, tuple_bytes=16.0,
+                   event_time=0)
+            .op("win", k_win, exec_ns=100.0, tuple_bytes=16.0,
+                selectivity=1.0 / 16.0,
+                state=StateSpec("value", item_bytes=16.0,
+                                reads_per_tuple=0, writes_per_tuple=0,
+                                window=WindowSpec.time_sliding(
+                                    64.0, 16.0, lateness=8.0, time_by=0)))
+            .sink("k", lambda b, st: [], exec_ns=50.0)
+            .build())
+
+
+def test_probed_spacing_prices_window_residency():
+    """Job construction reprices ``state_resident_tuples`` from the probed
+    event-clock spacing: a stride-4 source holds a quarter of the declared
+    one-tick-per-reading occupancy resident; the benchmark apps (spacing
+    exactly 1.0) keep their declared value to the byte."""
+    declared = WindowSpec.time_sliding(64.0, 16.0, lateness=8.0,
+                                       time_by=0).resident_tuples()
+    assert Job(_sparse_clock_app(1.0)).graph.operators["win"] \
+        .state_resident_tuples == pytest.approx(declared)
+    assert Job(_sparse_clock_app(4.0)).graph.operators["win"] \
+        .state_resident_tuples == pytest.approx(declared / 4.0)
+    # repricing flows into the planner's per-socket memory ledger
+    ev_dense = Job(_sparse_clock_app(1.0)).plan(
+        server_a(), optimizer="ff").estimate().raw
+    ev_sparse = Job(_sparse_clock_app(4.0)).plan(
+        server_a(), optimizer="ff").estimate().raw
+    assert ev_sparse.state_resident_bytes.sum() \
+        < ev_dense.state_resident_bytes.sum()
+    # sd_et's source advances exactly one tick per reading: unchanged
+    app = spike_detection_eventtime()
+    assert Job(app).graph.operators["pane_stats"].state_resident_tuples \
+        == app.graph.operators["pane_stats"].state_resident_tuples

@@ -1,0 +1,311 @@
+"""Process-parallel backend contract (ISSUE 6).
+
+The parity contract: threads and processes execute the same prepared app
+over the same compiled routes — only the transport differs (in-process
+queues vs shared-memory SPSC rings) — so under deterministic replay the
+outputs are byte-identical: spout/sink counters, merged keyed state, pane
+multisets, late drops.  Plus: the ring speaks the executor's queue
+protocol, crashes and wedges tear down without orphaning ``/dev/shm``
+segments, state migrates across a process-backend replan byte-for-byte,
+and plan-faithful grouping realizes the plan's socket map.
+"""
+import os
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import server_a, subset
+from repro.streaming.api import Job, Topology
+from repro.streaming.apps import (linear_road, spike_detection_eventtime,
+                                  spike_detection_keyed, word_count)
+from repro.streaming.procexec import (BACKENDS, ShmRing, get_backend,
+                                      host_device_env, plan_placement,
+                                      register_backend, run_app_processes,
+                                      socket_core_map)
+from repro.streaming.runtime import _POISON, _Watermark, run_app
+from repro.streaming.state import (KeyedStore, StateSpec, WindowSpec,
+                                   merge_keyed, migrate_states)
+
+
+def _shm_leftovers():
+    return [f for f in os.listdir("/dev/shm") if f.startswith("bsr")]
+
+
+def _summary(r):
+    return (r.spout_tuples, r.sink_tuples, r.late_drops, r.panes_fired)
+
+
+def _keyed_bytes(r):
+    out = {}
+    for op, reps in r.states.items():
+        stores = [s.managed for s in reps if isinstance(s.managed, KeyedStore)]
+        if stores:
+            out[op] = merge_keyed(stores).tobytes()
+    return out
+
+
+def _sink_scratch(r, lg):
+    return {op: [{k: v for k, v in st.items() if np.isscalar(v)}
+                 for st in r.states[op]] for op in lg.sinks()}
+
+
+# ---------------------------------------------------------------------------
+# ShmRing: the executor queue protocol over one shared segment
+# ---------------------------------------------------------------------------
+
+def test_ring_roundtrip_data_watermark_poison():
+    ring = ShmRing(capacity=4)
+    try:
+        arr = np.arange(12.0).reshape(3, 4)
+        ring.put((arr, 1.25))
+        ring.put(_Watermark("spout#0", 64.0))
+        ring.put(_POISON)
+        got, t0 = ring.get()
+        assert got.tobytes() == arr.tobytes() and t0 == 1.25
+        wm = ring.get()
+        assert isinstance(wm, _Watermark)
+        assert (wm.lane, wm.value) == ("spout#0", 64.0)
+        assert ring.get() is _POISON          # sentinel survives by identity
+        with pytest.raises(queue.Empty):
+            ring.get_nowait()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_ring_backpressure_full_and_oversize():
+    ring = ShmRing(capacity=2, slot_bytes=4096)
+    try:
+        a = np.zeros(8)
+        ring.put((a, 0.0))
+        ring.put((a, 0.0))
+        t0 = time.perf_counter()
+        with pytest.raises(queue.Full):
+            ring.put((a, 0.0), timeout=0.05)   # full: bounded wait, then Full
+        assert time.perf_counter() - t0 < 2.0
+        with pytest.raises(ValueError, match="slot_bytes"):
+            ring.put((np.zeros(4096), 0.0))    # never split, always explain
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_backend_registry():
+    assert callable(get_backend("threads"))
+    assert get_backend("processes") is run_app_processes
+    with pytest.raises(ValueError, match="gpu.*processes.*threads"):
+        get_backend("gpu")
+    register_backend("test-noop", lambda app, **kw: None)
+    try:
+        assert get_backend("test-noop")(None) is None
+    finally:
+        del BACKENDS["test-noop"]
+
+
+# ---------------------------------------------------------------------------
+# The parity contract: threads vs processes, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_app", [word_count, linear_road,
+                                      spike_detection_eventtime,
+                                      spike_detection_keyed],
+                         ids=["wc", "lr", "sd_et", "sd_key"])
+def test_backend_parity_benchmark_apps(make_app):
+    kw = dict(batch=128, max_batches=5, seed=3)
+    rt = run_app(make_app(), **kw)
+    rp = run_app_processes(make_app(), **kw)
+    assert _summary(rt) == _summary(rp)
+    assert _keyed_bytes(rt) == _keyed_bytes(rp)
+    lg = make_app().graph
+    assert _sink_scratch(rt, lg) == _sink_scratch(rp, lg)
+    assert not _shm_leftovers()
+
+
+def test_backend_parity_parallel_and_grouped():
+    """Parity holds at parallelism > 1 for any worker grouping — solo
+    workers (every edge a ring) and two-socket grouping (mixed local
+    queues + rings) alike."""
+    par = {"splitter": 2, "counter": 2}
+    kw = dict(parallelism=par, batch=128, max_batches=5, seed=3)
+    rt = run_app(word_count(), **kw)
+    rp = run_app_processes(word_count(), **kw)
+    groups = {"spout": 0, ("splitter", 0): 0, ("splitter", 1): 1,
+              ("counter", 0): 0, ("counter", 1): 1, "sink": 1}
+    rg = run_app_processes(word_count(), groups=groups, pin={0: [0], 1: [0]},
+                           **kw)
+    assert _summary(rt) == _summary(rp) == _summary(rg)
+    assert _keyed_bytes(rt) == _keyed_bytes(rp) == _keyed_bytes(rg)
+    assert not _shm_leftovers()
+
+
+def test_pane_multiset_byte_parity_across_backends():
+    """Keyed event-time pane *contents* cross the rings byte-identically:
+    a recording sink keeps every pane-aggregate row it receives; the
+    multiset of row bytes matches the threaded run exactly."""
+    def recording_sink(batch, state):
+        state.setdefault("rows", []).extend(
+            np.ascontiguousarray(r).tobytes() for r in batch)
+        return []
+
+    def run(backend):
+        app = spike_detection_keyed()
+        app.kernels["sink"] = recording_sink
+        r = backend(app, batch=128, max_batches=5, seed=3)
+        return sorted(r.states["sink"][0]["rows"]), r.panes_fired
+
+    rows_t, panes_t = run(run_app)
+    rows_p, panes_p = run(run_app_processes)
+    assert panes_t == panes_p > 0
+    assert rows_t == rows_p
+
+
+def test_plan_execute_backend_dispatch_and_placement():
+    plan = Job(word_count()).plan(server_a(), optimizer="ff")
+    kw = dict(batch=128, batches=5, seed=3, max_threads=6)
+    rt = plan.execute(**kw)
+    rp = plan.execute(backend="processes", **kw)              # faithful
+    rf = plan.execute(backend="processes", faithful=False, **kw)
+    for m in (rt, rp, rf):
+        assert m.raw.spout_tuples > 0
+    assert _summary(rt.raw) == _summary(rp.raw) == _summary(rf.raw)
+    assert _keyed_bytes(rt.raw) == _keyed_bytes(rp.raw) == _keyed_bytes(rf.raw)
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        plan.execute(backend="fpga")
+    with pytest.raises(ValueError, match="backend='processes'"):
+        plan.execute(env={"X": "1"})          # env is a worker-process knob
+
+
+def test_plan_placement_groups_follow_socket_map():
+    plan = Job(word_count()).plan(server_a(), optimizer="ff")
+    par = {op: 1 for op in plan.parallelism}
+    groups, pins = plan_placement(plan, par)
+    assert set(groups) == {(op, 0) for op in par}
+    sockets = set(groups.values())
+    assert all(0 <= s < plan.machine.n_sockets for s in sockets)
+    # pins partition the host cores over the plan's sockets
+    assert set().union(*pins.values()) <= set(os.sched_getaffinity(0))
+
+
+# ---------------------------------------------------------------------------
+# State across process boundaries: migration round trip
+# ---------------------------------------------------------------------------
+
+def test_migration_round_trip_through_process_backend():
+    """The WC conservation contract (test_state) with both execution legs
+    on the process backend: interrupted + replanned + migrated equals the
+    uninterrupted threaded single-replica run, byte for byte."""
+    total, cut, seed = 8, 3, 42
+    app = word_count()
+    ref = run_app(word_count(), {n: 1 for n in app.graph.operators},
+                  batch=64, max_batches=total, seed=seed)
+    ref_counts = ref.states["counter"][0].managed.table
+
+    job = Job(app)
+    par1 = {"spout": 1, "parser": 1, "splitter": 2, "counter": 3, "sink": 1}
+    plan1 = job.plan(server_a(), optimizer="ff", parallelism=par1)
+    r1 = plan1.execute(batches=cut, batch=64, seed=seed, parallelism=par1,
+                       backend="processes").raw
+
+    plan2 = plan1.replan(subset(server_a(), 2))
+    par2 = {"spout": 1, "parser": 1, "splitter": 1, "counter": 2, "sink": 1}
+    seeded = migrate_states(app, r1.states, par2)
+    r2 = plan2.execute(batches=total - cut, batch=64, seed=seed + cut,
+                       parallelism=par2, initial_states=seeded,
+                       backend="processes").raw
+
+    merged = merge_keyed([st.managed for st in r2.states["counter"]])
+    assert merged.tobytes() == ref_counts.tobytes()
+    assert r1.spout_tuples + r2.spout_tuples == ref.spout_tuples
+    assert not _shm_leftovers()
+
+
+# ---------------------------------------------------------------------------
+# Failure paths: crashes and wedges must not orphan segments
+# ---------------------------------------------------------------------------
+
+def _chain_app(kernel):
+    return (Topology("chain")
+            .spout("s", lambda b, sd: np.random.default_rng(sd)
+                   .normal(size=b).astype(np.float64), exec_ns=100.0)
+            .op("work", kernel, exec_ns=100.0)
+            .sink("sink", lambda b, st: [], exec_ns=50.0)
+            .build())
+
+
+def test_worker_crash_raises_and_cleans_up():
+    def exploding(batch, state):
+        state["n"] = state.get("n", 0) + 1
+        if state["n"] >= 2:
+            raise RuntimeError("kaboom in worker")
+        return [batch]
+
+    with pytest.raises(RuntimeError, match="kaboom in worker"):
+        run_app_processes(_chain_app(exploding), batch=32, max_batches=6,
+                          seed=0, timeout=30.0)
+    assert not _shm_leftovers()
+
+
+def test_wedged_worker_times_out_fast_and_cleans_up():
+    def wedged(batch, state):
+        time.sleep(60.0)
+        return [batch]
+
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError, match="deadline"):
+        run_app_processes(_chain_app(wedged), batch=32, max_batches=4,
+                          seed=0, timeout=2.0)
+    assert time.perf_counter() - t0 < 20.0    # fail fast, not join_timeout
+    assert not _shm_leftovers()
+
+
+# ---------------------------------------------------------------------------
+# Worker environment: pinning, env injection, the JAX host-device variant
+# ---------------------------------------------------------------------------
+
+def test_env_and_affinity_reach_the_worker():
+    def observer(batch, state):
+        if "env" not in state:
+            state["env"] = os.environ.get("PROCEXEC_TEST_FLAG", "")
+            state["affinity"] = sorted(os.sched_getaffinity(0))
+        return [batch]
+
+    host = sorted(os.sched_getaffinity(0))
+    groups = {"s": 0, "work": 0, "sink": 0}
+    r = run_app_processes(_chain_app(observer), batch=32, max_batches=3,
+                          seed=0, groups=groups, pin={0: [host[0]]},
+                          env={"PROCEXEC_TEST_FLAG": "on"})
+    st = r.states["work"][0]
+    assert st["env"] == "on"                   # injected pre-kernel
+    assert st["affinity"] == [host[0]]         # sched_setaffinity applied
+    assert os.environ.get("PROCEXEC_TEST_FLAG") is None   # parent untouched
+
+
+def test_host_device_env_composes_xla_flags():
+    env = host_device_env(4)
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    assert "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" in env
+    # an existing count flag is replaced, other flags preserved
+    old = os.environ.get("XLA_FLAGS")
+    os.environ["XLA_FLAGS"] = \
+        "--xla_cpu_enable_fast_math=true " \
+        "--xla_force_host_platform_device_count=2"
+    try:
+        env = host_device_env(8, base={"A": "b"})
+        assert env["A"] == "b"
+        assert "--xla_cpu_enable_fast_math=true" in env["XLA_FLAGS"]
+        assert "device_count=8" in env["XLA_FLAGS"]
+        assert "device_count=2" not in env["XLA_FLAGS"]
+    finally:
+        if old is None:
+            del os.environ["XLA_FLAGS"]
+        else:
+            os.environ["XLA_FLAGS"] = old
+
+
+def test_socket_core_map_round_robin():
+    assert socket_core_map(2, cores=[0, 1, 2, 3, 4]) == \
+        {0: [0, 2, 4], 1: [1, 3]}
+    # more sockets than cores: empty buckets dropped (those workers float)
+    assert socket_core_map(4, cores=[7]) == {0: [7]}
