@@ -11,7 +11,10 @@ Results append to the CSV row protocol (``name,us_per_call,derived``) and
 are recorded in ``BENCH_streaming.json`` for the perf trajectory.
 
 ``--backend processes`` adds the process-parallel sections (ISSUE 6): a
-threads-vs-processes A/B on WC plus the placement-sensitivity sweep — the
+threads-vs-processes A/B on WC, the serialization A/B (ISSUE 7 — raw
+zero-copy ring slots vs the pickled baseline, micro us/slot +
+bytes-copied-per-tuple and cross-group WC throughput, replay parity
+asserted across formats) plus the placement-sensitivity sweep — the
 same WC replay executed under the RLAS plan's worker grouping, a seeded
 random grouping, and a worst-case grouping that alternates sockets along
 the chain so every edge pays a shared-memory ring copy.  The spread
@@ -234,6 +237,81 @@ def bench_backends(batch: int, duration: float, repeat: int,
     return out
 
 
+def bench_serialization(batch: int, duration: float, repeat: int,
+                        batches: int) -> dict:
+    """The zero-copy slot format A/B (ISSUE 7): raw-header slots vs the
+    pickled baseline, micro and end to end.
+
+    Micro: one producer/consumer pair hammering a single ``ShmRing`` with
+    the WC splitter jumbo (batch x 10 int64 words) — us/slot plus the
+    ring's own bytes-copied-per-tuple counters (raw pays exactly one copy
+    in and one copy out; pickle adds the serialize + deserialize + staging
+    ``bytes``).  End to end: WC under a two-worker grouping that cuts the
+    pipeline at the heavy splitter->counter edge, so the selectivity-10
+    word stream crosses a ring in both formats; replay parity across
+    formats is asserted on the same fingerprint the backend A/B uses."""
+    from repro.streaming.procexec import ShmRing, run_app_processes
+    from repro.streaming.state import KeyedStore, merge_keyed
+
+    jumbo = np.arange(batch * 10, dtype=np.int64)      # WC splitter flush
+    slots = 200 if batch <= 256 else 50
+    out = {"batch": batch, "jumbo_rows": len(jumbo)}
+    for label, raw in [("pickle", False), ("raw", True)]:
+        ring = ShmRing(capacity=4, slot_bytes=1 << 20, raw=raw)
+        try:
+            ring.put((jumbo, 0.0))                     # warm
+            ring.get()
+            t0 = time.perf_counter()
+            for _ in range(slots):
+                ring.put((jumbo, 0.0))
+                ring.get()
+            us = (time.perf_counter() - t0) / slots * 1e6
+            copied = (ring.put_bytes + ring.get_bytes) / \
+                max(ring.put_tuples, 1)
+        finally:
+            ring.close()
+            ring.unlink()
+        out[f"ring_{label}"] = {"us_per_slot": round(us, 3),
+                                "bytes_copied_per_tuple": round(copied, 2)}
+        emit(f"serialization_ring_{label}_b{batch}", us,
+             f"{copied:.0f}B_per_tuple")
+    out["ring_speedup"] = round(out["ring_pickle"]["us_per_slot"] /
+                                max(out["ring_raw"]["us_per_slot"], 1e-9), 3)
+
+    # end to end: cut the pipeline mid-chain so the word stream pays a ring
+    par = {"splitter": 2, "counter": 4}
+    groups = {"spout": 0, "parser": 0, "splitter": 0, "counter": 1,
+              "sink": 1}
+    out["parallelism"], out["groups"] = par, "spout..splitter|counter..sink"
+    for label in ("pickle", "raw"):
+        thr = []
+        for r in range(repeat):
+            res = run_app_processes(word_count(), par, batch=batch,
+                                    duration=duration, seed=750 + r,
+                                    groups=groups, ring_format=label)
+            thr.append(res.throughput)
+        out[f"wc_{label}"] = {"throughput": round(statistics.median(thr), 1)}
+        emit(f"serialization_wc_{label}_b{batch}", duration * 1e6,
+             f"{out[f'wc_{label}']['throughput']:.0f}tps")
+    out["wc_speedup"] = round(out["wc_raw"]["throughput"] /
+                              max(out["wc_pickle"]["throughput"], 1e-9), 3)
+    emit(f"serialization_wc_speedup_b{batch}", 0.0,
+         f"{out['wc_speedup']:.3f}x")
+
+    def fingerprint(res):
+        keyed = merge_keyed([s.managed for s in res.states["counter"]
+                             if isinstance(s.managed, KeyedStore)])
+        return (res.spout_tuples, res.sink_tuples, keyed.tobytes())
+
+    fps = [fingerprint(run_app_processes(word_count(), par, batch=batch,
+                                         max_batches=batches, seed=910,
+                                         groups=groups, ring_format=label))
+           for label in ("pickle", "raw")]
+    out["replay_parity"] = fps[0] == fps[1]
+    emit(f"serialization_wc_parity_b{batch}", 0.0, str(out["replay_parity"]))
+    return out
+
+
 def bench_placement(repeat: int, batches: int, batch: int = 256) -> dict:
     """Placement sensitivity under the process backend: the same WC replay
     under (a) the RLAS plan's socket grouping, (b) a seeded random
@@ -388,6 +466,8 @@ def main(argv=None) -> dict:
     if args.backend == "processes":
         bb = 8 if args.smoke else 20
         report["backends"] = bench_backends(256, duration, repeat, bb)
+        report["serialization"] = bench_serialization(256, duration, repeat,
+                                                      bb)
         report["placement"] = bench_placement(max(1, repeat // 2), bb)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

@@ -14,12 +14,21 @@ executors in **worker processes**:
 * tuples that stay inside a group move by reference through ordinary
   in-process queues, exactly as in the threaded backend;
 * tuples that cross groups move over fixed-slot **shared-memory SPSC jumbo
-  rings** (:class:`ShmRing`, ``multiprocessing.shared_memory``): the
-  producer serializes the jumbo batch into a slot, the consumer
-  deserializes — a real copy with real cost, the shared-memory analogue of
-  the paper's remote-memory / QPI hop.  Watermarks and end-of-stream marks
-  travel the same rings as in-band control slots, so the
-  :class:`~.runtime.Executor` routing/merge/shutdown logic is reused
+  rings** (:class:`ShmRing`, ``multiprocessing.shared_memory``) in a **raw
+  zero-copy slot format**: a fixed header (tag, dtype id, shape, ``t0``)
+  followed by the batch's raw bytes, written straight into the slot
+  through a NumPy view (one vectorized copy, no pickle, no intermediate
+  ``bytes``) and read back as a view over the slot that is copied exactly
+  once on hand-off before the head advances — the minimum physical
+  movement a cross-process edge can pay, the shared-memory analogue of
+  the paper's remote-memory / QPI hop.  Batch dtypes resolve through a
+  small table (:func:`register_ring_dtype`) negotiated at worker spawn
+  (fork inherits the parent's table); anything unregistered falls back to
+  a tagged pickle slot with byte-identical semantics
+  (``ring_format="pickle"`` forces the fallback everywhere — the
+  serialization A/B in ``benchmarks/bench_runtime.py``).  Watermarks and
+  end-of-stream marks travel the same rings as in-band tagged slots, so
+  the :class:`~.runtime.Executor` routing/merge/shutdown logic is reused
   *verbatim* — the ring endpoints implement the ``queue.Queue`` protocol
   the executor already speaks.
 
@@ -33,7 +42,7 @@ ring crossings) by a real margin — the ``placement_sensitivity`` section of
 Workers are **forked**, not spawned: app kernels, sources and
 ``StateSpec.init`` factories are closures and need not pickle — they are
 inherited.  What crosses process boundaries explicitly is (a) ring slots —
-pickled ``numpy`` batches — and (b) the end-of-run **state payloads**:
+raw-encoded ``numpy`` batches — and (b) the end-of-run **state payloads**:
 each worker reduces its replicas' :class:`~.state.OperatorState` handles to
 plain arrays (:func:`_state_payload`), ships them over a pipe, and the
 parent restores them onto its own handles (:func:`_restore_state`) — so
@@ -71,9 +80,9 @@ from .runtime import (RuntimeResult, _POISON, _Watermark, build_executors,
 from .state import (BroadcastTable, EventTimeWindowState, KeyedStore,
                     OperatorState, ValueStore, WindowState)
 
-__all__ = ["ShmRing", "run_app_processes", "plan_placement",
-           "socket_core_map", "host_device_env", "get_backend",
-           "register_backend", "BACKENDS"]
+__all__ = ["ShmRing", "register_ring_dtype", "run_app_processes",
+           "plan_placement", "socket_core_map", "host_device_env",
+           "get_backend", "register_backend", "BACKENDS"]
 
 _SLOT_BYTES = 128 * 1024     # default ring slot: comfortably holds the
 # largest benchmark jumbo (WC's splitter emits batch x 10 int64 words —
@@ -84,6 +93,50 @@ _RING_SLOTS = 8              # slots per ring (jumbos in flight per lane)
 _CTRL = 16                   # ring header: head int64 @0, tail int64 @8
 _POLL = 50e-6                # idle poll quantum (grows to _POLL_MAX)
 _POLL_MAX = 2e-3
+_SPIN = 128                  # bounded busy-spin tries before the first
+# sleep: a slot under load frees in O(µs), while even the shortest
+# time.sleep costs a scheduler round-trip (~50µs wake latency) on every
+# slot — the hybrid spins briefly, then falls back to the sleep ladder
+
+# -- raw slot format --------------------------------------------------------
+# slot := tag u8, then per tag:
+#   RAW    @1 dtype-id u8, @2 ndim u8, @8 t0 f64, @16 shape ndim*i64,
+#          @16+8*ndim raw row bytes (8-aligned: slots start 8-aligned and
+#          the header is a multiple of 8)
+#   PICKLE @1 blob-length u32, @5 pickled ("d", array, t0) payload
+#   WM     @1 lane-length u32, @5 lane utf-8, then value f64
+#   POISON tag only
+_TAG_RAW, _TAG_PICKLE, _TAG_WM, _TAG_POISON = 0, 1, 2, 3
+_RAW_HDR = 16
+_RAW_MAX_DIMS = 4
+
+#: the dtype table: id <-> dtype, shared producer/consumer.  Negotiated at
+#: worker spawn — forked workers inherit the parent's table, so structured
+#: or otherwise app-specific dtypes must register *before*
+#: ``run_app_processes`` forks (a registration after spawn stays local to
+#: the registering process and the other side falls back to pickle).
+_DTYPE_TABLE: List[np.dtype] = [np.dtype(s) for s in (
+    "bool", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+    "float16", "float32", "float64", "complex64", "complex128")]
+_DTYPE_IDS: Dict[np.dtype, int] = {dt: i
+                                   for i, dt in enumerate(_DTYPE_TABLE)}
+
+
+def register_ring_dtype(dtype) -> int:
+    """Register ``dtype`` (structured dtypes included) in the ring's raw
+    slot dtype table and return its id.  Idempotent.  Must run before the
+    worker fork to be visible on both ring endpoints; unregistered dtypes
+    are not an error — they ride the tagged pickle fallback."""
+    dt = np.dtype(dtype)
+    did = _DTYPE_IDS.get(dt)
+    if did is None:
+        if len(_DTYPE_TABLE) >= 256:
+            raise ValueError("ring dtype table is full (256 entries)")
+        _DTYPE_TABLE.append(dt)
+        did = _DTYPE_IDS[dt] = len(_DTYPE_TABLE) - 1
+    return did
+
 
 _seq_lock = threading.Lock()
 _seq = [0]
@@ -99,28 +152,52 @@ class ShmRing:
     """Fixed-slot SPSC ring over one shared-memory segment.
 
     Layout: ``head`` (int64, consumer-owned) at offset 0, ``tail`` (int64,
-    producer-owned) at offset 8, then ``capacity`` slots of ``slot_bytes``.
-    Each slot is ``uint32 length + pickled payload``.  Exactly one producer
-    process writes ``tail`` and slots; exactly one consumer process writes
+    producer-owned) at offset 8, then ``capacity`` slots of ``slot_bytes``
+    in the tagged raw format (see the module header): data batches are a
+    fixed header plus raw row bytes written through a NumPy view directly
+    into the slot — no pickle, no intermediate ``bytes`` — with a tagged
+    pickle fallback for dtypes outside the negotiated table (or everywhere
+    under ``raw=False``, the A/B baseline).  Exactly one producer process
+    writes ``tail`` and slots; exactly one consumer process writes
     ``head`` — no locks, just the two indices (single-writer per cache
     line; CPython's bytecode boundaries plus x86 store ordering make the
     payload-then-tail publication safe).
+
+    The consumer materializes a batch as an ``ndarray`` view over the
+    slot and copies it exactly once — *before* advancing ``head``, since
+    the advance hands the slot back to the producer for reuse.  Waits are
+    hybrid: a short bounded spin (:data:`_SPIN` tries) before the first
+    ``time.sleep``, then an exponential sleep ladder — the immediate-sleep
+    path paid one scheduler wake latency per slot under load.
 
     The endpoint speaks the ``queue.Queue`` protocol the
     :class:`~.runtime.Executor` uses: blocking ``put`` (backpressure),
     ``put(timeout=)`` raising ``queue.Full`` (the spout's interruptible
     path), blocking ``get`` and ``get_nowait`` raising ``queue.Empty``.
     Data tuples, watermarks and the poison sentinel are tagged in-band —
-    consumers receive the exact runtime objects (poison by identity).
+    consumers receive the exact runtime objects (poison by identity; data
+    as ``(array, t0, None)`` items).  ``put_slots``/``put_tuples``/
+    ``put_bytes`` and the ``get_*`` mirrors count slots, tuples and bytes
+    actually copied per side — the bytes-copied-per-tuple instrumentation
+    behind the ``serialization`` bench section.
     """
 
-    __slots__ = ("name", "capacity", "slot_bytes", "shm", "_buf")
+    #: rings copy payloads out of the producer's address space inside
+    #: ``put`` — the emit path releases pooled-buffer leases immediately
+    #: instead of expecting the (other-process) consumer to
+    by_reference = False
+
+    __slots__ = ("name", "capacity", "slot_bytes", "raw", "shm", "_buf",
+                 "put_slots", "put_tuples", "put_bytes",
+                 "get_slots", "get_tuples", "get_bytes")
 
     def __init__(self, name: Optional[str] = None, *,
                  capacity: int = _RING_SLOTS,
-                 slot_bytes: int = _SLOT_BYTES, create: bool = True):
+                 slot_bytes: int = _SLOT_BYTES, create: bool = True,
+                 raw: bool = True):
         self.capacity = capacity
         self.slot_bytes = slot_bytes
+        self.raw = raw
         size = _CTRL + capacity * slot_bytes
         if create:
             name = name or _ring_name()
@@ -131,6 +208,8 @@ class ShmRing:
             self.shm = shared_memory.SharedMemory(name=name)
         self.name = self.shm.name
         self._buf = self.shm.buf
+        self.put_slots = self.put_tuples = self.put_bytes = 0
+        self.get_slots = self.get_tuples = self.get_bytes = 0
 
     # -- the two indices ---------------------------------------------------
     def _head(self) -> int:
@@ -145,49 +224,76 @@ class ShmRing:
     def _set_tail(self, v: int) -> None:
         struct.pack_into("<q", self._buf, 8, v)
 
-    # -- encode/decode: in-band control slots ------------------------------
-    @staticmethod
-    def _encode(item) -> bytes:
-        if item is _POISON:
-            payload = ("p",)
-        elif isinstance(item, _Watermark):
-            payload = ("w", item.lane, item.value)
-        else:                       # (arr, t0) data jumbo
-            arr, t0 = item
-            payload = ("d", np.ascontiguousarray(arr), t0)
-        return pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
-
-    @staticmethod
-    def _decode(blob: bytes):
-        payload = pickle.loads(blob)
-        tag = payload[0]
-        if tag == "p":
-            return _POISON
-        if tag == "w":
-            return _Watermark(payload[1], payload[2])
-        return (payload[1], payload[2])
+    def _oversize(self, nbytes: int) -> ValueError:
+        return ValueError(
+            f"ring payload of {nbytes} bytes exceeds the "
+            f"{self.slot_bytes}-byte slot; raise slot_bytes= "
+            "(run_app_processes / ShmRing) for jumbo batches this "
+            "large — the ring never splits a batch, splitting would "
+            "change stateful kernels' outputs")
 
     # -- producer side -----------------------------------------------------
     def put(self, item, timeout: Optional[float] = None) -> None:
-        blob = self._encode(item)
-        if len(blob) + 4 > self.slot_bytes:
-            raise ValueError(
-                f"ring payload of {len(blob)} bytes exceeds the "
-                f"{self.slot_bytes}-byte slot; raise slot_bytes= "
-                "(run_app_processes / ShmRing) for jumbo batches this "
-                "large — the ring never splits a batch, splitting would "
-                "change stateful kernels' outputs")
+        # classify + size the slot before claiming it (the oversize check
+        # must fire even when the ring is full)
+        arr = blob = lane = None
+        if item is _POISON:
+            tag, need = _TAG_POISON, 1
+        elif isinstance(item, _Watermark):
+            tag = _TAG_WM
+            lane = item.lane.encode()
+            need = 5 + len(lane) + 8
+        else:                           # (arr, t0[, lease]) data jumbo
+            arr, t0 = item[0], item[1]
+            did = _DTYPE_IDS.get(arr.dtype) if self.raw else None
+            if did is not None and 1 <= arr.ndim <= _RAW_MAX_DIMS:
+                tag = _TAG_RAW
+                arr = np.ascontiguousarray(arr)
+                need = _RAW_HDR + 8 * arr.ndim + arr.nbytes
+            else:                       # unregistered dtype: tagged fallback
+                tag = _TAG_PICKLE
+                blob = pickle.dumps(("d", np.ascontiguousarray(arr), t0),
+                                    protocol=pickle.HIGHEST_PROTOCOL)
+                need = 5 + len(blob)
+        if need > self.slot_bytes:
+            raise self._oversize(need)
         deadline = None if timeout is None else time.monotonic() + timeout
         tail = self._tail()
+        spins = _SPIN
         sleep = _POLL
         while tail - self._head() >= self.capacity:
+            if spins:                    # bounded spin before first sleep
+                spins -= 1
+                continue
             if deadline is not None and time.monotonic() > deadline:
                 raise queue.Full
             time.sleep(sleep)
             sleep = min(sleep * 2, _POLL_MAX)
         off = _CTRL + (tail % self.capacity) * self.slot_bytes
-        struct.pack_into("<I", self._buf, off, len(blob))
-        self._buf[off + 4:off + 4 + len(blob)] = blob
+        if tag == _TAG_RAW:
+            struct.pack_into("<BBB", self._buf, off, tag, did, arr.ndim)
+            struct.pack_into("<d", self._buf, off + 8, float(t0))
+            struct.pack_into(f"<{arr.ndim}q", self._buf, off + _RAW_HDR,
+                             *arr.shape)
+            if arr.nbytes:
+                dst = np.ndarray(arr.shape, arr.dtype, buffer=self._buf,
+                                 offset=off + _RAW_HDR + 8 * arr.ndim)
+                dst[...] = arr        # the one producer-side copy, into shm
+            self.put_tuples += len(arr)
+            self.put_bytes += arr.nbytes
+        elif tag == _TAG_PICKLE:
+            struct.pack_into("<BI", self._buf, off, tag, len(blob))
+            self._buf[off + 5:off + 5 + len(blob)] = blob
+            self.put_tuples += len(arr)
+            self.put_bytes += arr.nbytes + len(blob)   # dumps + slot write
+        elif tag == _TAG_WM:
+            struct.pack_into("<BI", self._buf, off, tag, len(lane))
+            self._buf[off + 5:off + 5 + len(lane)] = lane
+            struct.pack_into("<d", self._buf, off + 5 + len(lane),
+                             item.value)
+        else:
+            self._buf[off] = _TAG_POISON
+        self.put_slots += 1
         self._set_tail(tail + 1)
 
     # -- consumer side -----------------------------------------------------
@@ -196,17 +302,51 @@ class ShmRing:
         if self._tail() - head <= 0:
             raise queue.Empty
         off = _CTRL + (head % self.capacity) * self.slot_bytes
-        (length,) = struct.unpack_from("<I", self._buf, off)
-        blob = bytes(self._buf[off + 4:off + 4 + length])
+        tag = self._buf[off]
+        if tag == _TAG_RAW:
+            did, ndim = self._buf[off + 1], self._buf[off + 2]
+            (t0,) = struct.unpack_from("<d", self._buf, off + 8)
+            shape = struct.unpack_from(f"<{ndim}q", self._buf,
+                                       off + _RAW_HDR)
+            dt = _DTYPE_TABLE[did]
+            if math.prod(shape):
+                src = np.ndarray(shape, dt, buffer=self._buf,
+                                 offset=off + _RAW_HDR + 8 * ndim)
+                arr = src.copy()   # the one hand-off copy, pre head-advance
+            else:
+                arr = np.empty(shape, dt)
+            self.get_tuples += len(arr)
+            self.get_bytes += arr.nbytes
+            item = (arr, t0, None)
+        elif tag == _TAG_PICKLE:
+            (length,) = struct.unpack_from("<I", self._buf, off + 1)
+            payload = pickle.loads(self._buf[off + 5:off + 5 + length])
+            arr = payload[1]
+            self.get_tuples += len(arr)
+            self.get_bytes += arr.nbytes
+            item = (arr, payload[2], None)
+        elif tag == _TAG_WM:
+            (length,) = struct.unpack_from("<I", self._buf, off + 1)
+            lane = bytes(self._buf[off + 5:off + 5 + length]).decode()
+            (value,) = struct.unpack_from("<d", self._buf,
+                                          off + 5 + length)
+            item = _Watermark(lane, value)
+        else:
+            item = _POISON
+        self.get_slots += 1
         self._set_head(head + 1)
-        return self._decode(blob)
+        return item
 
     def get(self):
+        spins = _SPIN
         sleep = _POLL
         while True:
             try:
                 return self.get_nowait()
             except queue.Empty:
+                if spins:                # bounded spin before first sleep
+                    spins -= 1
+                    continue
                 time.sleep(sleep)
                 sleep = min(sleep * 2, _POLL_MAX)
 
@@ -240,6 +380,7 @@ class _FanIn:
         self._i = 0
 
     def get(self):
+        spins = _SPIN
         sleep = _POLL
         while True:
             for _ in range(len(self.sources)):
@@ -249,6 +390,9 @@ class _FanIn:
                     return src.get_nowait()
                 except queue.Empty:
                     pass
+            if spins:                    # bounded spin before first sleep
+                spins -= 1
+                continue
             time.sleep(sleep)
             sleep = min(sleep * 2, _POLL_MAX)
 
@@ -356,13 +500,64 @@ def _normalize_groups(groups, replicas: List[Replica]) -> Dict[Replica, object]:
     return out
 
 
+def _numa_node_cpus(sysfs: str = "/sys/devices/system/node"
+                    ) -> List[List[int]]:
+    """Per-NUMA-node CPU lists from sysfs (``node*/cpulist``, the kernel's
+    ``"0-3,8-11"`` range syntax), sorted by node id.  Empty when the tree
+    is absent (non-Linux, containers masking /sys) — callers fall back to
+    topology-blind round-robin."""
+    try:
+        nodes = sorted((d for d in os.listdir(sysfs)
+                        if d.startswith("node") and d[4:].isdigit()),
+                       key=lambda d: int(d[4:]))
+    except OSError:
+        return []
+    out: List[List[int]] = []
+    for node in nodes:
+        try:
+            with open(os.path.join(sysfs, node, "cpulist")) as fh:
+                text = fh.read().strip()
+        except OSError:
+            continue
+        cpus: List[int] = []
+        for part in text.split(","):
+            if not part:
+                continue
+            lo, _, hi = part.partition("-")
+            cpus.extend(range(int(lo), int(hi or lo) + 1))
+        if cpus:
+            out.append(cpus)
+    return out
+
+
 def socket_core_map(n_sockets: int,
-                    cores: Optional[List[int]] = None) -> Dict[int, List[int]]:
-    """Round-robin the host's available cores into ``n_sockets`` buckets —
-    the worker-pinning map for plan-faithful execution.  Sockets left with
-    no core on small hosts are simply unpinned (the scheduler places
-    them)."""
-    cores = sorted(cores if cores is not None else os.sched_getaffinity(0))
+                    cores: Optional[List[int]] = None,
+                    sysfs: str = "/sys/devices/system/node"
+                    ) -> Dict[int, List[int]]:
+    """Host cores bucketed into ``n_sockets`` pinning sets — the worker
+    map for plan-faithful execution.
+
+    When the host exposes more than one NUMA node (``sysfs``) and no
+    explicit ``cores=`` override is given, modelled socket ``s`` gets the
+    affinity-visible cores of host node ``s % n_nodes`` — so a plan
+    socket's workers really share one physical memory domain and
+    cross-socket rings really cross the interconnect, the topology the
+    paper's remote-memory penalty models.  Single-node hosts (and
+    explicit ``cores=``) keep the topology-blind round-robin.  Sockets
+    left with no core on small hosts are simply unpinned (the scheduler
+    places them)."""
+    if cores is None:
+        avail = os.sched_getaffinity(0)
+        nodes = [[c for c in node if c in avail]
+                 for node in _numa_node_cpus(sysfs)]
+        nodes = [n for n in nodes if n]
+        if len(nodes) > 1:
+            buckets = {s: [] for s in range(n_sockets)}
+            for s in range(n_sockets):
+                buckets[s] = list(nodes[s % len(nodes)])
+            return {s: cs for s, cs in buckets.items() if cs}
+        cores = avail
+    cores = sorted(cores)
     buckets: Dict[int, List[int]] = {s: [] for s in range(n_sockets)}
     for idx, c in enumerate(cores):
         buckets[idx % n_sockets].append(c)
@@ -429,16 +624,20 @@ def run_app_processes(app: StreamingApp,
                       env: Optional[Mapping[str, str]] = None,
                       slot_bytes: int = _SLOT_BYTES,
                       ring_slots: int = _RING_SLOTS,
+                      ring_format: str = "raw",
                       timeout: Optional[float] = None) -> RuntimeResult:
     """Execute ``app`` on forked worker processes (see module docstring).
 
     Accepts the full ``run_app`` surface plus: ``groups`` (replica/operator
     -> worker group id; default one worker per replica), ``pin`` (group id
     -> CPU cores, applied via ``sched_setaffinity``), ``env`` (extra
-    worker environment), ``slot_bytes``/``ring_slots`` (ring geometry) and
-    ``timeout`` (whole-run deadline; on expiry workers are terminated,
-    every shared-memory segment is unlinked and ``TimeoutError`` is
-    raised — a wedged ring cannot orphan segments or hang the caller).
+    worker environment), ``slot_bytes``/``ring_slots``/``ring_format``
+    (ring geometry and slot encoding — ``"raw"`` is the zero-copy default,
+    ``"pickle"`` forces the fallback path everywhere for serialization
+    A/Bs) and ``timeout`` (whole-run deadline; on expiry workers are
+    terminated, every shared-memory segment is unlinked and
+    ``TimeoutError`` is raised — a wedged ring cannot orphan segments or
+    hang the caller).
 
     Parity contract: under deterministic replay (``max_batches``) the
     result — sink counters, keyed state bytes, pane multisets, late
@@ -446,6 +645,9 @@ def run_app_processes(app: StreamingApp,
     both backends run the same executors over the same compiled routes and
     only the transport differs.
     """
+    if ring_format not in ("raw", "pickle"):
+        raise ValueError(f"ring_format must be 'raw' or 'pickle', "
+                         f"got {ring_format!r}")
     prep = prepare_app(app, parallelism, partition, initial_states,
                        batch=batch)
     lg, par = prep.lg, prep.parallelism
@@ -472,8 +674,9 @@ def run_app_processes(app: StreamingApp,
                         if cr not in local_qs:
                             local_qs[cr] = queue.Queue(maxsize=queue_cap)
                     else:
-                        rings[(pr, cr)] = ShmRing(capacity=ring_cap,
-                                                  slot_bytes=slot_bytes)
+                        rings[(pr, cr)] = ShmRing(
+                            capacity=ring_cap, slot_bytes=slot_bytes,
+                            raw=ring_format == "raw")
 
     ctrl = shared_memory.SharedMemory(name=_ring_name(), create=True, size=16)
     ctrl.buf[:16] = b"\0" * 16

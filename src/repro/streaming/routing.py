@@ -307,6 +307,25 @@ class Route:
         self.vectorized = vectorized
         self._rr = 0
 
+    @property
+    def is_broadcast(self) -> bool:
+        """True when every consumer replica receives every tuple — the
+        fan-out shape where the runtime shares **one** jumbo flush across
+        all lanes (one refcounted buffer view enqueued ``fanout`` times)
+        instead of accumulating a private per-lane copy.  Lanes of a
+        broadcast route fill in lockstep by definition, which is what makes
+        a single shared accumulation buffer correct."""
+        return self.spec.strategy == "broadcast"
+
+    def aliases_input(self) -> bool:
+        """True when :meth:`split` may return arrays sharing memory with
+        its input (shuffle passes the whole batch through; broadcast hands
+        the same array to every lane).  Keyed splits always materialize new
+        arrays (argsort+gather or boolean masks), so their parts never
+        alias — the emit path uses this to skip the overlap check that
+        guards pooled-buffer recycling."""
+        return self.fanout == 1 or self.spec.strategy != "key"
+
     def split(self, arr: np.ndarray) -> List[Tuple[int, np.ndarray]]:
         """Assign a batch to consumer replicas: ``[(replica, rows), ...]``."""
         k = self.fanout

@@ -64,71 +64,180 @@ class RuntimeResult:
     panes_fired: int = 0            # event-time panes emitted
 
 
-class _JumboBuffer:
-    """Preallocated jumbo accumulator for one (stream, consumer-replica) lane.
+class _Lease:
+    """Reference count over one pooled arena buffer.
 
-    Rows are copied in place into a fixed ``cap``-row store — no per-emit
-    list append + concatenate — and ``add`` hands back full jumbos.  The
-    flush timestamp is the *oldest* buffered tuple's, so end-to-end latency
-    accounting matches the seed runtime.  A whole batch that already fills a
-    jumbo passes through untouched (zero copies), which keeps the common
-    selectivity-one shuffle path as cheap as before.
+    Every queue item built from a pooled buffer carries the lease with a
+    reference already counted for it; the consumer releases after fully
+    processing the item, and the buffer returns to its arena's free list
+    when the last reference drops.  ``retain``/``release`` are cross-thread
+    (producer flushes, consumers release), hence the lock — one lock
+    operation per *jumbo*, not per tuple.
     """
 
-    __slots__ = ("cap", "_store", "_n", "_t0")
+    __slots__ = ("buf", "_arena", "_rc", "_lock")
 
-    def __init__(self, cap: int):
+    def __init__(self, buf: np.ndarray, arena: "_Arena"):
+        self.buf = buf
+        self._arena = arena
+        self._rc = 1
+        self._lock = threading.Lock()
+
+    def retain(self, n: int = 1) -> None:
+        with self._lock:
+            self._rc += n
+
+    def release(self) -> None:
+        with self._lock:
+            self._rc -= 1
+            free = self._rc == 0
+        if free:
+            self._arena.recycle(self.buf)
+
+
+class _Arena:
+    """Pool of fixed-cap jumbo row buffers, shared by one output port.
+
+    ``acquire`` hands out a ``(cap, *row_shape)`` buffer plus its
+    :class:`_Lease`; ``recycle`` (called by the last ``release``) returns
+    it to the free list, so steady-state flushing reuses a small warm set
+    of buffers instead of allocating one per flush and copying on every
+    hand-off.  Buffers whose shape/dtype no longer match, or beyond the
+    pool bound, are simply dropped to the garbage collector.
+    """
+
+    __slots__ = ("cap", "max_pooled", "_free", "_lock")
+
+    def __init__(self, cap: int, max_pooled: int = 8):
         self.cap = cap
+        self.max_pooled = max_pooled
+        self._free: List[np.ndarray] = []
+        self._lock = threading.Lock()
+
+    def acquire(self, row_shape: Tuple[int, ...],
+                dtype: np.dtype) -> Tuple[np.ndarray, _Lease]:
+        with self._lock:
+            for i in range(len(self._free) - 1, -1, -1):
+                buf = self._free[i]
+                if buf.shape[1:] == row_shape and buf.dtype == dtype:
+                    del self._free[i]
+                    return buf, _Lease(buf, self)
+        buf = np.empty((self.cap,) + tuple(row_shape), dtype)
+        return buf, _Lease(buf, self)
+
+    def recycle(self, buf: np.ndarray) -> None:
+        with self._lock:
+            if len(self._free) < self.max_pooled:
+                self._free.append(buf)
+
+
+#: a flushed jumbo: (rows, oldest-buffered t0, lease or None).  A non-None
+#: lease already counts the reference this item hands its consumer.
+_Flush = Tuple[np.ndarray, float, Optional[_Lease]]
+
+
+class _JumboBuffer:
+    """Pooled jumbo accumulator for one (stream, consumer-replica) lane.
+
+    Rows are copied in place into an arena-acquired ``cap``-row store — no
+    per-emit list append + concatenate — and ``add`` hands back full
+    jumbos.  Flushes are **views** into the pooled store (read-only, with
+    the store's refcount lease attached) instead of the former
+    copy-on-flush: the consumer reads the view and releases the lease, at
+    which point the buffer recycles.  The flush timestamp is the *oldest*
+    buffered tuple's, so end-to-end latency accounting matches the seed
+    runtime.  A whole batch that already fills a jumbo passes through
+    untouched (zero copies), which keeps the common selectivity-one
+    shuffle path as cheap as before.  Flush boundaries are byte-identical
+    to the copying implementation (the overflow case still concatenates,
+    preserving jumbo sizes exactly — boundary changes would alter stateful
+    kernels' running outputs).
+    """
+
+    __slots__ = ("cap", "arena", "_store", "_lease", "_n", "_t0")
+
+    def __init__(self, cap: int, arena: Optional[_Arena] = None):
+        self.cap = cap
+        self.arena = arena if arena is not None else _Arena(cap)
         self._store: Optional[np.ndarray] = None
+        self._lease: Optional[_Lease] = None
         self._n = 0
         self._t0 = 0.0
 
-    def add(self, arr: np.ndarray,
-            t0: float) -> List[Tuple[np.ndarray, float]]:
+    def _flush(self) -> _Flush:
+        """Hand the filled prefix to a consumer: a read-only view carrying
+        the store's lease (ownership transfers — the filler stops using
+        this buffer and acquires a fresh one on the next partial add)."""
+        view = self._store[: self._n]
+        view.flags.writeable = False
+        lease, self._lease = self._lease, None
+        self._store = None
+        self._n = 0
+        return view, self._t0, lease
+
+    def add(self, arr: np.ndarray, t0: float) -> List[_Flush]:
         """Buffer ``arr``; return the jumbos (if any) now ready to flush."""
-        out: List[Tuple[np.ndarray, float]] = []
+        out: List[_Flush] = []
         store = self._store
         if self._n and (store.shape[1:] != arr.shape[1:]
                         or store.dtype != arr.dtype):
             # the stream changed row shape mid-lane: flush what we have
-            out.append((store[: self._n].copy(), self._t0))
-            self._n = 0
+            out.append(self._flush())
+            store = None
         if self._n == 0 and len(arr) >= self.cap:
-            out.append((arr, t0))                      # zero-copy fast path
+            out.append((arr, t0, None))                # zero-copy fast path
             return out
         if store is None or store.shape[1:] != arr.shape[1:] \
                 or store.dtype != arr.dtype:
-            self._store = store = np.empty((self.cap,) + arr.shape[1:],
-                                           arr.dtype)
+            if self._lease is not None:    # empty store of the wrong shape
+                self._lease.release()
+            self._store, self._lease = self.arena.acquire(arr.shape[1:],
+                                                          arr.dtype)
+            store = self._store
         if self._n == 0:
             self._t0 = t0
         end = self._n + len(arr)
-        if end >= self.cap:
-            out.append((np.concatenate([store[: self._n], arr]), self._t0))
+        if end > self.cap:
+            # rare overflow: concatenate so the jumbo boundary lands where
+            # it always did (a fresh array — no lease)
+            out.append((np.concatenate([store[: self._n], arr]),
+                        self._t0, None))
             self._n = 0
+        elif end == self.cap:
+            store[self._n:end] = arr
+            self._n = end
+            out.append(self._flush())
         else:
             store[self._n:end] = arr
             self._n = end
         return out
 
-    def drain(self) -> Optional[Tuple[np.ndarray, float]]:
+    def drain(self) -> Optional[_Flush]:
         if self._n == 0:
             return None
-        out = self._store[: self._n].copy()
-        self._n = 0
-        return out, self._t0
+        return self._flush()
 
 
 class _OutPort:
     """One output stream of an executor: a bound route plus the consumer
-    replica queues and their jumbo lanes."""
+    replica queues and their jumbo lanes.
 
-    __slots__ = ("route", "queues", "buffers", "delivered")
+    All lanes share one :class:`_Arena` (their rows have one shape/dtype
+    per stream, so recycled buffers rotate across lanes).  A broadcast
+    route collapses to a **single shared lane buffer**: every consumer
+    replica receives every tuple, so the lanes fill in lockstep and one
+    flush view — refcounted once per lane — replaces the former
+    one-accumulated-copy-per-consumer."""
+
+    __slots__ = ("route", "queues", "buffers", "delivered", "shared_flush")
 
     def __init__(self, route: Route, queues: List[queue.Queue], batch: int):
         self.route = route
         self.queues = queues
-        self.buffers = [_JumboBuffer(batch) for _ in queues]
+        self.shared_flush = route.is_broadcast and len(queues) > 1
+        arena = _Arena(batch)
+        n_buffers = 1 if self.shared_flush else len(queues)
+        self.buffers = [_JumboBuffer(batch, arena) for _ in range(n_buffers)]
         self.delivered = [0] * len(queues)   # tuples enqueued, per lane
 
     def tuples_entered(self) -> int:
@@ -248,16 +357,26 @@ class Executor(threading.Thread):
             if isinstance(item, _Watermark):
                 self._on_watermark(item)
                 continue
-            arr, t0 = item
+            arr, t0, lease = item
             if self.lat_sink is not None:
                 self.lat_sink.append(time.perf_counter() - t0)
             if self._et_win is not None:
                 # event-time windowed operator: arriving batches only fill
                 # the buffer; the kernel runs per fired pane on watermark
-                # passage (complete panes in, whatever the batch cut was)
+                # passage (complete panes in, whatever the batch cut was).
+                # The window retains rows past this item's release point,
+                # so a pooled view is privatized first (the only consumer
+                # that holds input rows beyond the batch boundary).
+                if lease is not None:
+                    arr = arr.copy()
+                    lease.release()
                 self._et_win.insert(arr, t0)
                 continue
-            self._dispatch(self.kernel(arr, self.state), t0)
+            try:
+                self._dispatch(self.kernel(arr, self.state), t0, lease)
+            finally:
+                if lease is not None:
+                    lease.release()
 
     def _on_watermark(self, msg: _Watermark) -> None:
         """Merge one lane's watermark; on advance, fire panes and forward.
@@ -331,7 +450,13 @@ class Executor(threading.Thread):
         q.put(msg)
 
     # -- the one emit path -------------------------------------------------
-    def _dispatch(self, outs, t0: float) -> None:
+    def _dispatch(self, outs, t0: float,
+                  lease: Optional[_Lease] = None) -> None:
+        """Route kernel/spout outputs to consumer lanes.  ``lease`` is the
+        *input* batch's pooled-buffer lease (None for fresh arrays): any
+        enqueued array still sharing that buffer's memory — pass-through
+        jumbos, kernel outputs that are views of the input — retains it so
+        the buffer cannot recycle under a downstream reader."""
         if len(outs) != len(self.ports):
             raise ValueError(
                 f"{self.name}: kernel returned {len(outs)} output streams "
@@ -339,31 +464,76 @@ class Executor(threading.Thread):
         for port, arr in zip(self.ports, outs):
             if arr is None or len(arr) == 0:
                 continue
+            if port.shared_flush:        # broadcast: one flush, all lanes
+                self._deliver_fanout(port, arr, t0, lease)
+                continue
             for j, part in port.route.split(arr):
-                self._deliver(port, j, part, t0)
+                self._deliver(port, j, part, t0, lease)
+
+    def _passthrough_lease(self, port: _OutPort, jumbo: np.ndarray,
+                           jlease: Optional[_Lease],
+                           in_lease: Optional[_Lease]) -> Optional[_Lease]:
+        """Lease for one enqueued jumbo: a flush's own lease (already
+        counted), else the input's lease when the jumbo still aliases the
+        input's pooled buffer (retained here, once per enqueue)."""
+        if jlease is not None:
+            return jlease
+        if in_lease is not None and port.route.aliases_input() \
+                and np.may_share_memory(jumbo, in_lease.buf):
+            in_lease.retain()
+            return in_lease
+        return None
 
     def _deliver(self, port: _OutPort, j: int, part: np.ndarray,
-                 t0: float) -> None:
+                 t0: float, in_lease: Optional[_Lease] = None) -> None:
         if not self.jumbo:
             for row in part:             # per-tuple insertion (Fig. 16)
                 self._put(port, j, np.asarray([row]), t0)
             return
-        for jumbo, jt0 in port.buffers[j].add(part, t0):
-            self._put(port, j, jumbo, jt0)
+        for jumbo, jt0, jlease in port.buffers[j].add(part, t0):
+            self._put(port, j, jumbo, jt0,
+                      self._passthrough_lease(port, jumbo, jlease, in_lease))
+
+    def _deliver_fanout(self, port: _OutPort, arr: np.ndarray, t0: float,
+                        in_lease: Optional[_Lease] = None) -> None:
+        """Broadcast emit: accumulate once in the port's shared lane buffer
+        and enqueue the *same* flush view on every lane, refcounted once
+        per lane — no per-consumer copy is ever materialized."""
+        k = len(port.queues)
+        if not self.jumbo:
+            for row in arr:
+                row1 = np.asarray([row])
+                for j in range(k):
+                    self._put(port, j, row1, t0)
+            return
+        for jumbo, jt0, jlease in port.buffers[0].add(arr, t0):
+            lease = self._passthrough_lease(port, jumbo, jlease, in_lease)
+            if lease is not None:
+                lease.retain(k - 1)      # one reference per lane
+            for j in range(k):
+                self._put(port, j, jumbo, jt0, lease)
 
     def _put(self, port: _OutPort, j: int, arr: np.ndarray,
-             t0: float) -> None:
+             t0: float, lease: Optional[_Lease] = None) -> None:
         q = port.queues[j]
+        item = (arr, t0, lease)
         if self.is_spout:                # interruptible put: stop wins
             while True:
                 try:
-                    q.put((arr, t0), timeout=0.02)
+                    q.put(item, timeout=0.02)
                     break
                 except queue.Full:
                     if self.stop_event.is_set():
+                        if lease is not None:
+                            lease.release()
                         return           # dropped, never counted
         else:                            # task: block (backpressure)
-            q.put((arr, t0))
+            q.put(item)
+        if lease is not None and not getattr(q, "by_reference", True):
+            # copying transports (shared-memory rings) consumed the bytes
+            # synchronously inside put — the consumer process never sees
+            # the lease, so this side retires its reference now
+            lease.release()
         port.delivered[j] += len(arr)
 
     def _shutdown(self):
@@ -373,6 +543,15 @@ class Executor(threading.Thread):
     def _drain(self):
         # flush partially-filled jumbo lanes
         for port in self.ports:
+            if port.shared_flush:
+                out = port.buffers[0].drain()
+                if out is not None:
+                    jumbo, t0, lease = out
+                    if lease is not None:
+                        lease.retain(len(port.queues) - 1)
+                    for j in range(len(port.queues)):
+                        self._put(port, j, jumbo, t0, lease)
+                continue
             for j, buf in enumerate(port.buffers):
                 out = buf.drain()
                 if out is not None:

@@ -22,8 +22,8 @@ from repro.streaming.apps import (linear_road, spike_detection_eventtime,
                                   spike_detection_keyed, word_count)
 from repro.streaming.procexec import (BACKENDS, ShmRing, get_backend,
                                       host_device_env, plan_placement,
-                                      register_backend, run_app_processes,
-                                      socket_core_map)
+                                      register_backend, register_ring_dtype,
+                                      run_app_processes, socket_core_map)
 from repro.streaming.runtime import _POISON, _Watermark, run_app
 from repro.streaming.state import (KeyedStore, StateSpec, WindowSpec,
                                    merge_keyed, migrate_states)
@@ -62,8 +62,9 @@ def test_ring_roundtrip_data_watermark_poison():
         ring.put((arr, 1.25))
         ring.put(_Watermark("spout#0", 64.0))
         ring.put(_POISON)
-        got, t0 = ring.get()
+        got, t0, lease = ring.get()
         assert got.tobytes() == arr.tobytes() and t0 == 1.25
+        assert lease is None        # ring hand-off already owns its copy
         wm = ring.get()
         assert isinstance(wm, _Watermark)
         assert (wm.lane, wm.value) == ("spout#0", 64.0)
@@ -73,6 +74,126 @@ def test_ring_roundtrip_data_watermark_poison():
     finally:
         ring.close()
         ring.unlink()
+
+
+def _tag_of(ring, slot):
+    return ring._buf[16 + slot * ring.slot_bytes]
+
+
+@pytest.mark.parametrize("arr", [
+    np.arange(7, dtype=np.int64),
+    np.random.default_rng(0).random((3, 5)).astype(np.float32),
+    np.zeros((2, 3, 4), dtype=np.uint16),
+    np.array([True, False, True]),
+    np.empty((0,), dtype=np.float64),          # empty batch
+    np.empty((0, 8), dtype=np.int32),
+], ids=["i64", "f32-2d", "u16-3d", "bool", "empty", "empty-2d"])
+def test_ring_raw_roundtrip_preserves_bytes_dtype_shape(arr):
+    ring = ShmRing(capacity=2, slot_bytes=8192)
+    try:
+        slot = ring._tail() % ring.capacity
+        ring.put((arr, 2.5))
+        assert _tag_of(ring, slot) == 0        # raw tag, no pickle
+        got, t0, _ = ring.get()
+        assert got.dtype == arr.dtype and got.shape == arr.shape
+        assert got.tobytes() == np.ascontiguousarray(arr).tobytes()
+        assert t0 == 2.5
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_ring_pickle_fallback_tag_parity():
+    """Unregistered dtypes fall back to tagged pickle slots; registering
+    them moves the same batch to the raw path — bytes identical either
+    way.  ``raw=False`` forces the fallback everywhere (the A/B flag)."""
+    sd = np.dtype([("key", "i8"), ("val", "f4")])
+    s = np.zeros(5, sd)
+    s["key"] = np.arange(5)
+    s["val"] = 0.5
+    u = np.array(["event", "spïke", ""], dtype="<U8")
+    ring = ShmRing(capacity=4, slot_bytes=8192)
+    try:
+        for a in (s, u):                       # unregistered -> pickle tag
+            slot = ring._tail() % ring.capacity
+            ring.put((a, 1.0))
+            assert _tag_of(ring, slot) == 1
+            got, t0, _ = ring.get()
+            assert got.dtype == a.dtype and got.tobytes() == a.tobytes()
+        did = register_ring_dtype(sd)
+        assert register_ring_dtype(sd) == did  # idempotent
+        register_ring_dtype("<U8")
+        for a in (s, u):                       # registered -> raw tag
+            slot = ring._tail() % ring.capacity
+            ring.put((a, 1.0))
+            assert _tag_of(ring, slot) == 0
+            got, t0, _ = ring.get()
+            assert got.dtype == a.dtype and got.tobytes() == a.tobytes()
+    finally:
+        ring.close()
+        ring.unlink()
+    forced = ShmRing(capacity=2, slot_bytes=8192, raw=False)
+    try:
+        slot = forced._tail() % forced.capacity
+        forced.put((np.arange(4.0), 3.0))      # registered dtype, still pickle
+        assert _tag_of(forced, slot) == 1
+        got, t0, _ = forced.get()
+        assert got.tobytes() == np.arange(4.0).tobytes() and t0 == 3.0
+    finally:
+        forced.close()
+        forced.unlink()
+
+
+def test_ring_wrap_around_and_copy_counters():
+    """Slots reuse cleanly past the wrap point (consumer copies before the
+    head advance hands the slot back) and the byte counters account every
+    copy on both sides."""
+    ring = ShmRing(capacity=3, slot_bytes=4096)
+    try:
+        for k in range(10):                    # > 3 laps over 3 slots
+            a = np.full(16, k, dtype=np.int64)
+            ring.put((a, float(k)))
+            got, t0, _ = ring.get()
+            assert np.array_equal(got, a) and t0 == float(k)
+        assert ring.put_slots == ring.get_slots == 10
+        assert ring.put_tuples == ring.get_tuples == 160
+        assert ring.put_bytes == ring.get_bytes == 10 * 16 * 8
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_ring_property_roundtrip():
+    """Property-test the slot codec over random shapes/dtypes/offsets —
+    every batch that fits must round-trip byte-identically, raw or
+    fallback alike."""
+    hyp = pytest.importorskip("hypothesis")
+    hnp = pytest.importorskip("hypothesis.extra.numpy")
+    from hypothesis import given, settings, strategies as st
+
+    dtypes = st.sampled_from([np.dtype(s) for s in
+                              ("int8", "uint32", "int64", "float32",
+                               "float64", "complex64", "<U3")])
+    shapes = st.lists(st.integers(0, 7), min_size=1, max_size=3).map(tuple)
+
+    @settings(max_examples=60, deadline=None)
+    @given(dt=dtypes, shape=shapes, data=st.data(),
+           t0=st.floats(allow_nan=False, allow_infinity=False, width=32))
+    def roundtrip(dt, shape, data, t0):
+        arr = data.draw(hnp.arrays(dt, shape))
+        ring = ShmRing(capacity=2, slot_bytes=1 << 14)
+        try:
+            ring.put((arr, float(t0)))
+            got, got_t0, _ = ring.get()
+            assert got.dtype == arr.dtype and got.shape == arr.shape
+            assert got.tobytes() == np.ascontiguousarray(arr).tobytes()
+            assert got_t0 == float(t0)
+        finally:
+            ring.close()
+            ring.unlink()
+
+    roundtrip()
+    assert not _shm_leftovers()
 
 
 def test_ring_backpressure_full_and_oversize():
@@ -120,6 +241,20 @@ def test_backend_parity_benchmark_apps(make_app):
     assert _keyed_bytes(rt) == _keyed_bytes(rp)
     lg = make_app().graph
     assert _sink_scratch(rt, lg) == _sink_scratch(rp, lg)
+    assert not _shm_leftovers()
+
+
+def test_ring_format_parity_raw_vs_pickle():
+    """The slot encoding is invisible to results: forcing every ring back
+    to the pickle fallback (``ring_format="pickle"``) reproduces the raw
+    default byte for byte — the invariant behind the serialization A/B."""
+    kw = dict(batch=128, max_batches=5, seed=3)
+    raw = run_app_processes(word_count(), ring_format="raw", **kw)
+    pkl = run_app_processes(word_count(), ring_format="pickle", **kw)
+    assert _summary(raw) == _summary(pkl)
+    assert _keyed_bytes(raw) == _keyed_bytes(pkl)
+    with pytest.raises(ValueError, match="ring_format"):
+        run_app_processes(word_count(), ring_format="arrow", **kw)
     assert not _shm_leftovers()
 
 
@@ -309,3 +444,32 @@ def test_socket_core_map_round_robin():
         {0: [0, 2, 4], 1: [1, 3]}
     # more sockets than cores: empty buckets dropped (those workers float)
     assert socket_core_map(4, cores=[7]) == {0: [7]}
+
+
+def test_socket_core_map_numa_topology(tmp_path, monkeypatch):
+    """With a multi-node sysfs tree, modelled sockets map onto whole NUMA
+    nodes (affinity-intersected) instead of round-robining blindly; a
+    single-node or absent tree falls back to round-robin."""
+    for node, cpulist in [("node0", "0-3,8-9"), ("node1", "4-7"),
+                          ("node7x", "ignored")]:     # non-numeric suffix
+        d = tmp_path / node
+        d.mkdir()
+        (d / "cpulist").write_text(cpulist + "\n")
+    monkeypatch.setattr(os, "sched_getaffinity",
+                        lambda pid: {0, 1, 2, 3, 4, 5, 6, 7, 8, 9})
+    m = socket_core_map(2, sysfs=str(tmp_path))
+    assert m == {0: [0, 1, 2, 3, 8, 9], 1: [4, 5, 6, 7]}
+    # more modelled sockets than nodes: wrap around the nodes
+    m4 = socket_core_map(4, sysfs=str(tmp_path))
+    assert m4[0] == m4[2] == [0, 1, 2, 3, 8, 9]
+    assert m4[1] == m4[3] == [4, 5, 6, 7]
+    # affinity mask hides node1 entirely -> single visible node -> fallback
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0, 1, 8})
+    assert socket_core_map(2, sysfs=str(tmp_path)) == {0: [0, 8], 1: [1]}
+    # absent tree -> plain round-robin over the affinity set
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {3, 5})
+    assert socket_core_map(2, sysfs=str(tmp_path / "missing")) == \
+        {0: [3], 1: [5]}
+    # explicit cores= always bypasses topology
+    assert socket_core_map(2, cores=[1, 2, 3], sysfs=str(tmp_path)) == \
+        {0: [1, 3], 1: [2]}

@@ -158,3 +158,75 @@ def test_runtime_jumbo_beats_per_tuple():
     jumbo = run_app(app, batch=256, duration=0.4, jumbo=True)
     single = run_app(app, batch=256, duration=0.4, jumbo=False)
     assert jumbo.throughput > single.throughput
+
+
+# ---------------------------------------------------------------------------
+# the refcounted jumbo arena: flush views, release discipline, recycling
+# ---------------------------------------------------------------------------
+
+def test_jumbo_flush_is_read_only_view_recycled_on_release():
+    from repro.streaming.runtime import _JumboBuffer
+    buf = _JumboBuffer(4)
+    assert buf.add(np.arange(3, dtype=np.int64), 1.0) == []
+    ((view, t0, lease),) = buf.add(np.arange(1, dtype=np.int64), 2.0)
+    assert not view.flags.writeable          # views are read-only...
+    assert t0 == 1.0                         # oldest buffered t0 wins
+    assert lease is not None and np.shares_memory(view, lease.buf)
+    assert np.array_equal(view, [0, 1, 2, 0])
+    store = lease.buf
+    lease.release()                          # ...until released -> recycled
+    buf.add(np.arange(2, dtype=np.int64), 3.0)
+    assert buf._store is store               # same pooled buffer, no alloc
+
+
+def test_lease_refcount_gates_recycling():
+    from repro.streaming.runtime import _Arena
+    arena = _Arena(cap=4)
+    buf, lease = arena.acquire((), np.dtype(np.int64))
+    lease.retain(2)                          # fan-out: 3 consumers total
+    lease.release()
+    lease.release()
+    assert arena._free == []                 # live references pin the buffer
+    lease.release()
+    assert len(arena._free) == 1 and arena._free[0] is buf
+
+
+def test_jumbo_zero_copy_passthrough_and_boundary_parity():
+    """A full batch into an empty lane passes through by reference (no
+    lease, no copy); the overflow path still concatenates so flush
+    boundaries land exactly where the copying implementation put them."""
+    from repro.streaming.runtime import _JumboBuffer
+    buf = _JumboBuffer(4)
+    a = np.arange(5, dtype=np.float64)
+    ((out, t0, lease),) = buf.add(a, 1.5)
+    assert out is a and lease is None        # zero-copy fast path
+    assert buf.add(np.zeros(3), 2.0) == []
+    ((out, t0, lease),) = buf.add(np.ones(3), 3.0)   # 3 + 3 > 4: overflow
+    assert len(out) == 6 and t0 == 2.0 and lease is None
+    assert out.flags.owndata                 # fresh concatenate, old boundary
+
+
+def test_broadcast_shared_flush_parity():
+    """Broadcast fan-out delivers one shared flush view per jumbo (lease
+    refcounted across lanes) — every replica still sees the exact stream,
+    byte-identical to fanout=1, under deterministic replay."""
+    from repro.streaming.api import Topology
+
+    def recorder(batch, state):
+        state.setdefault("rows", []).append(
+            np.ascontiguousarray(batch).tobytes())
+        return []
+
+    def build():
+        return (Topology("bc")
+                .spout("s", lambda b, sd: np.random.default_rng(sd)
+                       .integers(0, 50, size=b).astype(np.int64),
+                       exec_ns=100.0)
+                .op("fan", recorder, exec_ns=100.0, partition="broadcast")
+                .build())
+
+    kw = dict(batch=64, max_batches=6, seed=7)
+    solo = run_app(build(), {"fan": 1}, **kw)
+    fan = run_app(build(), {"fan": 3}, **kw)
+    ref = solo.states["fan"][0]["rows"]
+    assert ref and all(st["rows"] == ref for st in fan.states["fan"])
