@@ -10,6 +10,13 @@ whose counter mutates a bare dict-held array, at identical profile.
 Results append to the CSV row protocol (``name,us_per_call,derived``) and
 are recorded in ``BENCH_streaming.json`` for the perf trajectory.
 
+The ``inference`` section (ISSUE 8) A/Bs the async device-dispatch
+pipeline: ``streaming_inference`` ingest at ``dispatch_depth`` 1 vs 2 vs 4,
+every data point in a fresh interpreter (jax-clean parents for the process
+backend; cold JIT caches for fair rows), with a depth-1-vs-2 replay-parity
+gate asserted on exit.  ``--backend processes`` adds the same A/B through
+the process backend as ``inference_processes``.
+
 ``--backend processes`` adds the process-parallel sections (ISSUE 6): a
 threads-vs-processes A/B on WC, the serialization A/B (ISSUE 7 — raw
 zero-copy ring slots vs the pickled baseline, micro us/slot +
@@ -35,6 +42,7 @@ import argparse
 import json
 import os
 import statistics
+import subprocess
 import sys
 import time
 
@@ -83,19 +91,23 @@ def bench_app(name: str, make, parallelism: dict, batch: int,
     the per-edge auto selection (``vectorized=None``, the default)."""
     out = {"batch": batch, "parallelism": parallelism}
     run_app(make(), parallelism, batch=batch, duration=min(duration, 0.2))
-    for mode, vectorized in [("masks", False), ("vectorized", True),
-                             ("auto", None)]:
-        # a throwaway warm run above stabilises thread startup; repeat
-        # medians absorb scheduler noise
-        thr, p99 = [], []
-        for r in range(repeat):
+    modes = [("masks", False), ("vectorized", True), ("auto", None)]
+    # a throwaway warm run above stabilises thread startup; repeats are
+    # interleaved round-robin across modes (not sequential per-mode
+    # blocks) so slow host drift lands on every mode equally — sequential
+    # blocks once mis-read a healthy auto selection as 0.836x of best
+    thr = {m: [] for m, _ in modes}
+    p99 = {m: [] for m, _ in modes}
+    for r in range(repeat):
+        for mode, vectorized in modes:
             res = run_app(make(), parallelism, batch=batch,
                           duration=duration, seed=100 + r,
                           vectorized=vectorized)
-            thr.append(res.throughput)
-            p99.append(res.latency_p99)
-        out[mode] = {"throughput": round(statistics.median(thr), 1),
-                     "latency_p99": round(statistics.median(p99), 6)}
+            thr[mode].append(res.throughput)
+            p99[mode].append(res.latency_p99)
+    for mode, _ in modes:
+        out[mode] = {"throughput": round(statistics.median(thr[mode]), 1),
+                     "latency_p99": round(statistics.median(p99[mode]), 6)}
         emit(f"runtime_{name}_{mode}_b{batch}",
              duration * 1e6, f"{out[mode]['throughput']:.0f}tps")
     out["speedup"] = round(out["vectorized"]["throughput"] /
@@ -408,6 +420,111 @@ def bench_cadence(batch: int, duration: float, repeat: int) -> dict:
     return out
 
 
+#: run one streaming_inference measurement in a *fresh* interpreter: the
+#: process backend demands a JAX-clean parent (jax's fork-unsafe runtime
+#: deadlocks a forked child's jit call once the parent touched XLA), and a
+#: cold process per data point also keeps the sync/async rows free of
+#: cross-run JIT-cache and allocator state.  Prints one JSON line.
+_INF_CHILD = r"""
+import json, sys
+backend, depth, batch, nbatches, duration, seed = sys.argv[1:7]
+from repro.streaming.apps import streaming_inference
+app = streaming_inference(model_versions=1)
+kw = dict(batch=int(batch), seed=int(seed), dispatch_depth=int(depth))
+if float(duration) > 0:
+    kw["duration"] = float(duration)
+else:
+    kw["max_batches"] = int(nbatches)
+if backend == "threads":
+    from repro.streaming.runtime import run_app as runner
+    # warm run: jit trace+compile (~0.6s, dwarfs the window) happens here,
+    # not inside the measured run; states are rebuilt per run so this
+    # leaves no trace in results
+    runner(app, {}, batch=int(batch), max_batches=6, seed=7,
+           dispatch_depth=int(depth))
+else:
+    from repro.streaming.procexec import run_app_processes as runner
+res = runner(app, {}, **kw)
+sink = res.states["sink"][0]
+print(json.dumps({
+    "throughput": res.throughput,
+    "spout_tuples": res.spout_tuples,
+    "sink_tuples": res.sink_tuples,
+    "seen": int(sink.get("seen", 0)),
+    "score": float(sink.get("score", 0.0)).hex(),
+}))
+"""
+
+
+def _inf_child(backend: str, depth: int, batch: int, *, duration: float = 0.0,
+               batches: int = 0, seed: int = 0,
+               timeout: float = 240.0) -> dict:
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cp = subprocess.run(
+        [sys.executable, "-c", _INF_CHILD, backend, str(depth), str(batch),
+         str(batches), str(duration), str(seed)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    if cp.returncode != 0:
+        raise RuntimeError(
+            f"inference child failed (backend={backend}, depth={depth}):\n"
+            f"{cp.stderr[-2000:]}")
+    return json.loads(cp.stdout.strip().splitlines()[-1])
+
+
+def bench_inference(batch: int, duration: float, repeat: int, batches: int,
+                    backend: str) -> dict:
+    """The async device-dispatch A/B (ISSUE 8 tentpole): streaming_inference
+    ingest at dispatch_depth 1 (synchronous materialization) vs 2 and 4.
+
+    On a small host the win is not device/host overlap but the per-call
+    dispatch bubble — with depth>1 the executor enqueues the next jitted
+    call before blocking on the oldest, so XLA's queue never drains between
+    batches; the bubble is fixed per call, hence the small batch.  Each
+    data point runs in a fresh interpreter (see ``_INF_CHILD``) with a
+    timeout guard; rounds interleave across depths and the row keeps
+    best-of-N — sink throughput swings ~20% run to run and medians of
+    interleaved bests are the stable readout on a noisy 1-2 core box.
+    ``replay_parity`` replays a fixed batch budget at depth 1 vs 2 and
+    demands byte-identical sink state (count + float64 score hex) — the
+    async window must be invisible to results, not just faster.
+
+    Threads children warm the jit before the window; process-backend
+    workers fork fresh per run and compile *inside* it, so that section
+    stretches the window to keep the compile from drowning the signal —
+    its rows still understate the async win and the acceptance ratio is
+    read from the threads section."""
+    if backend == "processes":
+        duration = max(duration, 1.6)
+    depths = (1, 2, 4)
+    thr = {d: [] for d in depths}
+    for r in range(repeat):
+        for d in depths:
+            thr[d].append(_inf_child(backend, d, batch, duration=duration,
+                                     seed=100 + r)["throughput"])
+    out = {"batch": batch, "backend": backend}
+    for d in depths:
+        out[f"depth{d}"] = {"throughput": round(max(thr[d]), 1)}
+        emit(f"inference_{backend}_depth{d}_b{batch}", duration * 1e6,
+             f"{out[f'depth{d}']['throughput']:.0f}tps")
+    sync = max(out["depth1"]["throughput"], 1e-9)
+    out["async2_vs_sync"] = round(out["depth2"]["throughput"] / sync, 3)
+    out["async4_vs_sync"] = round(out["depth4"]["throughput"] / sync, 3)
+    out["async_speedup"] = max(out["async2_vs_sync"], out["async4_vs_sync"])
+    emit(f"inference_{backend}_async_speedup_b{batch}", 0.0,
+         f"{out['async_speedup']:.3f}x")
+
+    fps = [(p["spout_tuples"], p["sink_tuples"], p["seen"], p["score"])
+           for p in (_inf_child(backend, d, batch, batches=batches, seed=42)
+                     for d in (1, 2))]
+    out["replay_parity"] = fps[0] == fps[1]
+    emit(f"inference_{backend}_parity_b{batch}", 0.0,
+         str(out["replay_parity"]))
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -431,12 +548,14 @@ def main(argv=None) -> dict:
     repeat = args.repeat or (1 if args.smoke else 7)
     iters = 50 if args.smoke else 400
     procexec_only = args.backend == "processes" and args.smoke
+    single_cpu = len(os.sched_getaffinity(0)) < 2
 
     report = {
         "meta": {"cpus": os.cpu_count(), "duration_s": duration,
                  "repeat": repeat, "smoke": bool(args.smoke),
-                 "backend": args.backend},
+                 "backend": args.backend, "single_cpu": single_cpu},
     }
+    failures = []
     if not procexec_only:
         report["micro"] = [bench_split(rows, k, iters)
                           for rows in (256, 2560, 10240) for k in (2, 4, 8)]
@@ -463,35 +582,69 @@ def main(argv=None) -> dict:
         et_repeat = max(repeat, 5) if args.floor_eventtime else repeat
         report["eventtime"] = bench_eventtime(256, et_duration, et_repeat)
         report["cadence"] = bench_cadence(256, duration, repeat)
+    inf_repeat = 1 if args.smoke else max(3, min(repeat, 5))
+    inf_batches = 20 if args.smoke else 60
+    if not procexec_only:
+        report["inference"] = bench_inference(16, duration, inf_repeat,
+                                              inf_batches, "threads")
     if args.backend == "processes":
         bb = 8 if args.smoke else 20
         report["backends"] = bench_backends(256, duration, repeat, bb)
         report["serialization"] = bench_serialization(256, duration, repeat,
                                                       bb)
         report["placement"] = bench_placement(max(1, repeat // 2), bb)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {os.path.abspath(args.out)}")
-    if args.floor_eventtime is not None:
+        report["inference_processes"] = bench_inference(
+            16, duration, inf_repeat, inf_batches, "processes")
+
+    # gates — evaluated before the dump so skips leave a marker in meta
+    # rather than only a line on stdout
+    skipped = report["meta"].setdefault("skipped_floor", [])
+    for sec in ("inference", "inference_processes"):
+        if sec in report and not report[sec]["replay_parity"]:
+            failures.append(f"{sec} replay_parity is False (async dispatch "
+                            "window changed results)")
+    if "apps" in report:
+        worst_auto = min(s["auto_vs_best"] for s in report["apps"].values())
+        report["meta"]["auto_vs_best_worst"] = worst_auto
+        # the per-edge auto selection contract: within ~4% of the best
+        # forced mode; 0.90 leaves margin for residual scheduler noise on
+        # top of the interleaved-repeat protocol
+        if worst_auto < 0.90:
+            failures.append(f"auto_vs_best {worst_auto:.3f} < 0.90 "
+                            "(per-edge keyed-split selection regressed)")
+    if args.floor_eventtime is not None and "eventtime" in report:
         ratio = report["eventtime"]["ingest_ratio"]
         # the ratio compares two *threaded* pipelines whose scaling differs
         # with core count: on a single-CPU host the count-window denominator
         # runs ~4x faster relative to the event-time path, so a healthy
         # engine measures ~0.25 there and the floor cannot separate it from
         # the pane-at-a-time regression (0.217) it guards against
-        if len(os.sched_getaffinity(0)) < 2:
+        if single_cpu:
+            skipped.append({"gate": "floor_eventtime",
+                            "floor": args.floor_eventtime, "ratio": ratio,
+                            "reason": "single-CPU host; ratio only "
+                                      "comparable on >=2 cores"})
             print(f"# eventtime ingest_ratio {ratio:.3f} — floor "
                   f"{args.floor_eventtime:.3f} skipped (single-CPU host; "
                   "ratio only comparable on >=2 cores)")
         elif ratio < args.floor_eventtime:
-            print(f"# FAIL eventtime ingest_ratio {ratio:.3f} < floor "
-                  f"{args.floor_eventtime:.3f} (segmented pane engine "
-                  "regressed toward pane-at-a-time cost)")
-            sys.exit(1)
+            failures.append(f"eventtime ingest_ratio {ratio:.3f} < floor "
+                            f"{args.floor_eventtime:.3f} (segmented pane "
+                            "engine regressed toward pane-at-a-time cost)")
         else:
             print(f"# eventtime ingest_ratio {ratio:.3f} >= floor "
                   f"{args.floor_eventtime:.3f}")
+    if not skipped:
+        del report["meta"]["skipped_floor"]
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(args.out)}")
+    if failures:
+        for msg in failures:
+            print(f"# FAIL {msg}")
+        sys.exit(1)
     return report
 
 

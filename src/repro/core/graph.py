@@ -65,10 +65,31 @@ class OperatorSpec:
     #: every replica holds its own full buffer (count-window history is
     #: per-replica arrival position, so replication multiplies it)
     state_resident_shared: bool = True
+    #: device operator: the kernel is a jitted JAX computation dispatched to
+    #: an accelerator (or XLA host device).  ``device_ns`` is the per-tuple
+    #: device compute time; ``exec_ns`` keeps its meaning as the *host-side*
+    #: work (decode/route/emit).  ``dispatch_depth`` is the bounded in-flight
+    #: dispatch window the Executor runs with (1 == synchronous).
+    device: bool = False
+    device_ns: float = 0.0
+    dispatch_depth: int = 1
 
     @property
     def exec_s(self) -> float:
-        return self.exec_ns * 1e-9
+        """Effective per-tuple service time in seconds.
+
+        Host operators: ``exec_ns``.  Device operators at ``dispatch_depth``
+        1 pay host + device serially; at depth >= 2 the async dispatch window
+        overlaps host ingest with device compute, so the bottleneck is
+        ``max(host, device/depth)`` — the planner, placement model, and DES
+        all consume this property, so overlap pricing propagates everywhere
+        from this one definition.
+        """
+        if not self.device:
+            return self.exec_ns * 1e-9
+        if self.dispatch_depth <= 1:
+            return (self.exec_ns + self.device_ns) * 1e-9
+        return max(self.exec_ns, self.device_ns / self.dispatch_depth) * 1e-9
 
 
 @dataclasses.dataclass

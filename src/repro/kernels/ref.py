@@ -83,6 +83,21 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def mlp_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tanh-MLP scoring head: L layers of ``tanh(y @ w[i])`` then a
+    feature-sum score.  x: (B, D); w: (L, D, D). Returns (B,).
+
+    The oracle for the ``streaming_inference`` app's device predictor
+    (``repro.streaming.apps``): the streaming operator runs exactly
+    ``jax.jit(mlp_ref)``, so its end-to-end outputs are testable against
+    this un-jitted reference.
+    """
+    y = x.astype(jnp.float32)
+    for i in range(w.shape[0]):
+        y = jnp.tanh(y @ w[i].astype(jnp.float32))
+    return y.sum(axis=1).astype(x.dtype)
+
+
 def mamba_scan_ref(u: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
                    C: jax.Array, D: jax.Array,
                    h0: Optional[jax.Array] = None):

@@ -79,6 +79,12 @@ class StreamingApp:
         return {op: sp.window for op, sp in self.state.items()
                 if sp.window is not None and sp.window.time}
 
+    def device_ops(self) -> Dict[str, int]:
+        """Declared device operators -> their dispatch depth (the async
+        in-flight window; 1 == synchronous)."""
+        return {n: sp.dispatch_depth
+                for n, sp in self.graph.operators.items() if sp.device}
+
     def source_for(self, spout: str) -> Callable[[int, int], np.ndarray]:
         fn = self.sources.get(spout, self.make_source)
         if fn is None:
@@ -204,7 +210,9 @@ class Topology:
            mem_bytes: Optional[float] = None, selectivity: float = 1.0,
            partition: PartitionDecl = "shuffle",
            key_by: Optional[KeyBy] = None,
-           state: Optional[StateSpec] = None) -> "Topology":
+           state: Optional[StateSpec] = None,
+           device: bool = False, device_ns: float = 0.0,
+           dispatch_depth: int = 1) -> "Topology":
         """Declare an operator.  ``kernel(batch, state) -> [out_batch, ...]``
         emits one array per declared *downstream* stream, in the order the
         consumers were declared.  ``partition`` is how *this* operator's
@@ -221,7 +229,20 @@ class Topology:
         ``mem_bytes = tuple_bytes + state.bytes_per_tuple()`` from it, and
         ``Plan.replan`` can migrate it to a new replica set.  Declaring both
         ``state`` and a hand-tuned ``mem_bytes`` is an error — the point of
-        the declaration is that the constant is derived, not asserted."""
+        the declaration is that the constant is derived, not asserted.
+
+        ``device=True`` marks the kernel as a jitted JAX computation the
+        Executor dispatches asynchronously: up to ``dispatch_depth`` batches
+        (default 1 == synchronous) are in flight on the device while the
+        host continues ingesting, and results retire strictly FIFO so
+        outputs and watermark order are byte-identical to the synchronous
+        path.  ``device_ns`` is the profiled per-tuple *device* compute
+        time; ``exec_ns`` keeps its host-side meaning, and the planner/DES
+        charge ``max(exec_ns, device_ns/dispatch_depth)`` at depth >= 2
+        (overlap) instead of the serial sum.  Device operators cannot also
+        be windowed/segmented-pane kernels in v1 — pane firing happens
+        inside the watermark path, which must retire the in-flight window
+        first."""
         try:
             validate_partition_decl(name, partition)
             if key_by is not None:
@@ -256,6 +277,40 @@ class Topology:
                         f"panes but partition={partition!r}: pane groups "
                         "shard by the operator's compiled keyed route "
                         "(partition='key')")
+            if isinstance(dispatch_depth, bool) or \
+                    not isinstance(dispatch_depth, int) or dispatch_depth < 1:
+                raise ValueError(
+                    f"operator {name!r}: dispatch_depth must be an int >= 1,"
+                    f" got {dispatch_depth!r}")
+            if not device:
+                if device_ns:
+                    raise ValueError(
+                        f"operator {name!r} declares device_ns="
+                        f"{device_ns!r} without device=True (host operators"
+                        " have no device compute to price)")
+                if dispatch_depth != 1:
+                    raise ValueError(
+                        f"operator {name!r} declares dispatch_depth="
+                        f"{dispatch_depth!r} without device=True (only "
+                        "device kernels dispatch asynchronously)")
+            else:
+                if device_ns < 0:
+                    raise ValueError(
+                        f"operator {name!r}: device_ns must be >= 0, got "
+                        f"{device_ns!r}")
+                if state is not None and state.window is not None:
+                    raise ValueError(
+                        f"operator {name!r} declares device=True with a "
+                        "windowed state: device operators cannot be "
+                        "segmented-pane kernels in v1 (panes fire inside "
+                        "the watermark path, which must drain the "
+                        "in-flight dispatch window first)")
+                if kernel is not None and getattr(kernel, "segmented",
+                                                  False):
+                    raise ValueError(
+                        f"operator {name!r} declares device=True with a "
+                        "@segmented kernel: device operators cannot be "
+                        "segmented-pane kernels in v1")
         except ValueError as e:
             raise TopologyError(str(e)) from None
         state_bytes = state.bytes_per_tuple() if state is not None else 0.0
@@ -273,7 +328,9 @@ class Topology:
             OperatorSpec(name, exec_ns, tuple_bytes, mem, selectivity,
                          state_bytes=state_bytes,
                          state_resident_tuples=resident,
-                         state_resident_shared=shared),
+                         state_resident_shared=shared,
+                         device=device, device_ns=float(device_ns),
+                         dispatch_depth=dispatch_depth),
             inputs=names, edge_selectivity=esel, partition=partition,
             source=None, key_by=key_by, state=state))
         return self
@@ -874,7 +931,9 @@ class Plan:
                 initial_states: Optional[Dict[str, list]] = None,
                 backend: str = "threads", faithful: bool = True,
                 env: Optional[Dict[str, str]] = None,
-                timeout: Optional[float] = None) -> Metrics:
+                timeout: Optional[float] = None,
+                dispatch_depth: Optional[int] = None,
+                initial_offsets: Optional[Dict[str, int]] = None) -> Metrics:
         """Run the plan on this host's real runtime.
 
         ``backend`` selects the execution substrate from the
@@ -909,6 +968,12 @@ class Plan:
         state-migration conservation checks); ``initial_states`` seeds
         per-replica operator state, typically from
         :func:`repro.streaming.state.migrate_states` after a ``replan``.
+
+        ``dispatch_depth`` overrides every device operator's declared async
+        in-flight window (1 = synchronous, the A/B flag);
+        ``initial_offsets`` resumes spouts from a previous run's
+        ``RuntimeResult.spout_offsets`` counters (prefix-continuation of
+        duration-mode runs).
         """
         from .procexec import get_backend
         run_backend = get_backend(backend)
@@ -949,7 +1014,9 @@ class Plan:
                          duration=duration, jumbo=jumbo, queue_cap=queue_cap,
                          partition=partition, seed=seed,
                          vectorized=vectorized, max_batches=batches,
-                         initial_states=initial_states, **kw)
+                         initial_states=initial_states,
+                         dispatch_depth=dispatch_depth,
+                         initial_offsets=initial_offsets, **kw)
         return Metrics("runtime", rt.throughput, rt.latency_p50,
                        rt.latency_p99, raw=rt)
 

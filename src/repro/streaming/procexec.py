@@ -64,6 +64,7 @@ import os
 import pickle
 import queue
 import struct
+import sys
 import threading
 import time
 import traceback
@@ -625,7 +626,10 @@ def run_app_processes(app: StreamingApp,
                       slot_bytes: int = _SLOT_BYTES,
                       ring_slots: int = _RING_SLOTS,
                       ring_format: str = "raw",
-                      timeout: Optional[float] = None) -> RuntimeResult:
+                      timeout: Optional[float] = None,
+                      dispatch_depth: Optional[int] = None,
+                      initial_offsets: Optional[Dict[str, int]] = None
+                      ) -> RuntimeResult:
     """Execute ``app`` on forked worker processes (see module docstring).
 
     Accepts the full ``run_app`` surface plus: ``groups`` (replica/operator
@@ -655,6 +659,22 @@ def run_app_processes(app: StreamingApp,
                                for i in range(par[name])]
     group_of = _normalize_groups(groups, replicas)
     gids = list(dict.fromkeys(group_of.values()))      # first-appearance order
+    if getattr(app, "device_ops", None) and app.device_ops():
+        # forking after the parent has initialized JAX/XLA deadlocks the
+        # child's first jit call (multithreaded runtime + fork) — fail fast
+        # with the workaround instead of hanging the run
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "backend='processes' with device operators requires a "
+                "JAX-clean parent: jax is already imported (forked workers "
+                "inherit XLA's thread state and deadlock on first jit "
+                "call). Run device apps from a fresh process, or use "
+                "backend='threads'")
+        # first real kernel user of the host-device plumbing: each worker
+        # group gets an XLA host device unless the caller already set one
+        if not any("--xla_force_host_platform_device_count" in v
+                   for v in (env or {}).values()):
+            env = host_device_env(max(1, len(gids)), base=env)
     members: Dict[object, List[Replica]] = {g: [] for g in gids}
     for rep in replicas:
         members[group_of[rep]].append(rep)
@@ -722,7 +742,8 @@ def run_app_processes(app: StreamingApp,
                 add_spout_count=lambda n: counts.__setitem__(
                     0, counts[0] + n),
                 in_q_of=in_q_of, out_q_of=out_q_of,
-                only=set(members[gid]))
+                only=set(members[gid]), dispatch_depth=dispatch_depth,
+                initial_offsets=initial_offsets)
             for t in tasks:
                 t.start()
             for s in spouts:
@@ -745,7 +766,9 @@ def run_app_processes(app: StreamingApp,
                 "states": {rep: _state_payload(prep.states[rep[0]][rep[1]])
                            for rep in members[gid]},
                 "latencies": latencies,
-                "spout_tuples": counts[0]}
+                "spout_tuples": counts[0],
+                "spout_offsets": {s.name: s.emitted_batches
+                                  for s in spouts}}
             conn.send(("ok", payload))
             conn.close()
         except BaseException:
@@ -762,6 +785,7 @@ def run_app_processes(app: StreamingApp,
     t_start = time.perf_counter()
     wall = 0.0
     spout_total = 0
+    spout_offsets: Dict[str, int] = {}
     latencies: List[float] = []
     deadline = time.monotonic() + (
         timeout if timeout is not None
@@ -802,6 +826,7 @@ def run_app_processes(app: StreamingApp,
                     _restore_state(prep.states[rep[0]][rep[1]], sp)
                 latencies.extend(payload["latencies"])
                 spout_total += payload["spout_tuples"]
+                spout_offsets.update(payload.get("spout_offsets", {}))
             # a silent crash (SIGKILL, segfault) leaves no pipe message
             for c, (gid, p) in list(pending.items()):
                 if not p.is_alive() and not c.poll():
@@ -827,7 +852,8 @@ def run_app_processes(app: StreamingApp,
             ctrl.unlink()
         except FileNotFoundError:
             pass
-    return collect_result(prep, spout_total, latencies, wall)
+    return collect_result(prep, spout_total, latencies, wall,
+                          spout_offsets=spout_offsets)
 
 
 def _run_app_threads(app: StreamingApp, **kw) -> RuntimeResult:

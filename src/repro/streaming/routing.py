@@ -193,16 +193,21 @@ class WatermarkMerger:
         return self._lanes.get(name, -math.inf)
 
 
-#: calibrated crossover for the keyed-split implementation, from the
-#: ``BENCH_streaming.json`` micro grid (rows x k, us/call): the per-mask
-#: path is k linear scans and stays cache-friendly while k is small, the
-#: radix argsort+gather is one O(n) pass whose setup only amortizes once
-#: k**2 is large enough — ``rows * k**2 > 16384`` classifies 8 of the 9
-#: measured grid points correctly.  Points ON the boundary (LR's 1024-row
-#: k=4 edge, 256-row k=8) are within end-to-end noise either way (~5%
-#: run-to-run); the threshold's job is the clear regions of the grid,
-#: where forcing the wrong path costs 1.5-3x per split.
-VEC_CROSSOVER = 16384
+#: calibrated crossover for the keyed-split implementation, refit from a
+#: dense best-of-3 micro grid (rows in {128..10240} x k in {2,4,8},
+#: us/call): the per-mask path is k linear scans and stays cache-friendly
+#: while k is small; the radix argsort+gather is one O(n) pass whose setup
+#: amortizes quickly as fan-out grows.  The measured crossover falls much
+#: faster in k than the previous ``rows * k**2`` fit assumed (k=2 flips
+#: near 5120 rows, k=4 by 256 rows, k=8 always prefers vectorized — the
+#: old rule misclassified the small-row k>=4 points, where vectorized
+#: wins 1.1-1.6x): ``rows * k**3 > 8192`` leaves at most two near-tie
+#: misses on the fresh 21-point grid ((128, 4) and (2560, 2), both within
+#: 4% of best), versus 11-12% regret at the k=4 mid-rows under any larger
+#: threshold.  Boundary points are within run-to-run noise either way;
+#: the threshold's job is the clear regions, where forcing the wrong path
+#: costs 1.5-3x per split.
+VEC_CROSSOVER = 8192
 
 
 def auto_vectorized(rows: int, k: int) -> bool:
@@ -212,7 +217,7 @@ def auto_vectorized(rows: int, k: int) -> bool:
     made from the calibrated :data:`VEC_CROSSOVER` threshold instead of a
     global flag (``vectorized=`` on ``run_app``/``Plan.execute`` remains
     the override)."""
-    return rows * k * k > VEC_CROSSOVER
+    return rows * k * k * k > VEC_CROSSOVER
 
 
 def split_by_key(arr: np.ndarray, keys: np.ndarray,

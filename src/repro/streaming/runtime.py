@@ -21,6 +21,7 @@ container has a single socket — see DESIGN.md §6).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import queue
@@ -62,6 +63,11 @@ class RuntimeResult:
     #  ValueStore instances — see repro.streaming.state)
     late_drops: int = 0             # event-time tuples past their last pane
     panes_fired: int = 0            # event-time panes emitted
+    #: per-spout-replica emitted batch counters ("spout#0" -> batches ever
+    #: emitted, including any initial_offsets base).  Feed them back as
+    #: ``run_app(initial_offsets=)`` and the resumed run continues the
+    #: deterministic source sequence exactly where this one stopped.
+    spout_offsets: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class _Lease:
@@ -266,7 +272,9 @@ class Executor(threading.Thread):
                  max_batches: Optional[int] = None,
                  event_time=None,
                  wm_every: int = 1,
-                 wm_interval: Optional[float] = None):
+                 wm_interval: Optional[float] = None,
+                 device_depth: int = 0,
+                 start_batch: int = 0):
         super().__init__(daemon=True, name=name)
         self.ports = ports
         self.batch = batch
@@ -297,6 +305,20 @@ class Executor(threading.Thread):
         self._wm_fwd = -math.inf
         win = getattr(state, "window", None)
         self._et_win = win if isinstance(win, EventTimeWindowState) else None
+        # device operator: the kernel is an async (jitted) computation and
+        # up to device_depth results stay in flight before the oldest is
+        # materialized + dispatched (0 = host op, 1 = device but synchronous)
+        self.device_depth = device_depth
+        if device_depth and self._et_win is not None:
+            raise ValueError(
+                f"{name}: device operators cannot drive event-time window "
+                "panes (v1 exclusion — see Topology.op(device=))")
+        self._inflight: collections.deque = collections.deque()
+        # spout resume point: the source sequence continues at this batch
+        # index (seeds seed+start_batch ..), making a resumed duration run
+        # a prefix-continuation of the original
+        self.start_batch = start_batch
+        self.emitted_batches = start_batch
 
     @property
     def is_spout(self) -> bool:
@@ -309,11 +331,13 @@ class Executor(threading.Thread):
             self._run_task()
 
     def _run_spout(self):
-        b = 0
+        b = self.start_batch
         while not self.stop_event.is_set() and \
-                (self.max_batches is None or b < self.max_batches):
+                (self.max_batches is None or
+                 b - self.start_batch < self.max_batches):
             arr = self.source(self.batch, self.seed + b)
             b += 1
+            self.emitted_batches = b
             t0 = time.perf_counter()
             # logical fan-out: every output stream carries the same batch
             self._dispatch([arr] * len(self.ports), t0)
@@ -372,11 +396,40 @@ class Executor(threading.Thread):
                     lease.release()
                 self._et_win.insert(arr, t0)
                 continue
+            if self.device_depth:
+                # async device dispatch: enqueue the (lazy) kernel result
+                # and only materialize the oldest once the bounded window
+                # is full — host-side route/split/emit of batch N overlaps
+                # the device computing batch N+1.  The input lease is held
+                # until retirement so the pooled buffer cannot recycle
+                # while the device may still read it.
+                self._inflight.append((self.kernel(arr, self.state),
+                                       t0, lease))
+                while len(self._inflight) >= self.device_depth:
+                    self._retire_one()
+                continue
             try:
                 self._dispatch(self.kernel(arr, self.state), t0, lease)
             finally:
                 if lease is not None:
                     lease.release()
+
+    def _retire_one(self) -> None:
+        """Materialize + dispatch the oldest in-flight device result (FIFO
+        — output order and watermark order are identical to the synchronous
+        path by construction)."""
+        outs, t0, lease = self._inflight.popleft()
+        try:
+            self._dispatch(
+                [None if o is None else np.asarray(o) for o in outs],
+                t0, lease)
+        finally:
+            if lease is not None:
+                lease.release()
+
+    def _retire_all(self) -> None:
+        while self._inflight:
+            self._retire_one()
 
     def _on_watermark(self, msg: _Watermark) -> None:
         """Merge one lane's watermark; on advance, fire panes and forward.
@@ -390,6 +443,9 @@ class Executor(threading.Thread):
         shim over the same buffer).  Either way there is one batched
         dispatch per watermark, and the advanced watermark is forwarded
         along every compiled route *after* the panes it released."""
+        # a mark trails the batches before it in queue order: retire every
+        # in-flight device result first so outputs never follow their mark
+        self._retire_all()
         merged = self._wm_merge.update(msg.lane, msg.value)
         if not merged > self._wm_fwd:
             return
@@ -537,6 +593,7 @@ class Executor(threading.Thread):
         port.delivered[j] += len(arr)
 
     def _shutdown(self):
+        self._retire_all()
         self._drain()
         self._poison()
 
@@ -702,12 +759,46 @@ def prepare_app(app: StreamingApp,
     return PreparedApp(lg, parallelism, routes, states, win_key_by, wm_every)
 
 
+def resolve_offsets(lg, parallelism: Dict[str, int],
+                    initial_offsets: Optional[Dict[str, int]]
+                    ) -> Dict[Tuple[str, int], int]:
+    """Expand ``initial_offsets`` (spout operator names or replica uids
+    like ``"spout#0"`` -> emitted-batch counter) to per-replica start
+    batches, validating every key against the graph's spouts."""
+    out: Dict[Tuple[str, int], int] = {}
+    if not initial_offsets:
+        return out
+    spouts = set(lg.spouts())
+    for key, off in initial_offsets.items():
+        if isinstance(off, bool) or not isinstance(off, int) or off < 0:
+            raise ValueError(
+                f"initial_offsets[{key!r}] must be an int >= 0, got {off!r}")
+        name, _, idx = key.partition("#")
+        if name not in spouts:
+            raise ValueError(
+                f"initial_offsets names {key!r}, which is not a spout "
+                f"(spouts: {sorted(spouts)})")
+        if idx:
+            i = int(idx)
+            if not 0 <= i < parallelism[name]:
+                raise ValueError(
+                    f"initial_offsets names replica {key!r} but {name!r} "
+                    f"has parallelism {parallelism[name]}")
+            out[(name, i)] = off
+        else:
+            for i in range(parallelism[name]):
+                out.setdefault((name, i), off)
+    return out
+
+
 def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
                     jumbo: bool, vectorized: Optional[bool], seed: int,
                     max_batches: Optional[int], stop, latencies: List[float],
                     add_spout_count: Callable[[int], None],
                     in_q_of: Callable, out_q_of: Callable,
-                    only=None) -> Tuple[List[Executor], List[Executor]]:
+                    only=None, dispatch_depth: Optional[int] = None,
+                    initial_offsets: Optional[Dict[str, int]] = None
+                    ) -> Tuple[List[Executor], List[Executor]]:
     """Instantiate the executors of a prepared app (the run phase's cast).
 
     ``in_q_of(name, i)`` returns the input endpoint of a task replica;
@@ -717,8 +808,14 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
     ``put``, ``put(timeout=)`` raising ``queue.Full``) — threads pass real
     queues, the process backend passes shared-memory rings.  ``only``
     restricts construction to a replica subset (one worker's share).
+
+    ``dispatch_depth`` overrides every device operator's declared in-flight
+    window (the sync-vs-async A/B flag); ``initial_offsets`` resumes spout
+    replicas at recorded emitted-batch counters (see
+    :func:`resolve_offsets`).
     """
     lg, parallelism = prep.lg, prep.parallelism
+    offsets = resolve_offsets(lg, parallelism, initial_offsets)
     spouts: List[Executor] = []
     tasks: List[Executor] = []
     for name, spec in lg.operators.items():
@@ -741,19 +838,27 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
                     event_time=getattr(app, "event_time", {}).get(name),
                     wm_every=prep.wm_every.get(name, 1),
                     wm_interval=getattr(app, "watermark_interval",
-                                        {}).get(name)))
+                                        {}).get(name),
+                    start_batch=offsets.get((name, i), 0)))
             else:
+                depth = 0
+                if getattr(spec, "device", False):
+                    depth = dispatch_depth if dispatch_depth is not None \
+                        else spec.dispatch_depth
                 tasks.append(Executor(
                     f"{name}#{i}", ports, batch, jumbo,
                     prep.states[name][i], kernel=app.kernels[name],
                     in_q=in_q_of(name, i),
                     expected_poisons=max(n_producer_units, 1),
-                    lat_sink=latencies if is_sink else None))
+                    lat_sink=latencies if is_sink else None,
+                    device_depth=depth))
     return spouts, tasks
 
 
 def collect_result(prep: PreparedApp, spout_tuples: int,
-                   latencies: List[float], wall: float) -> RuntimeResult:
+                   latencies: List[float], wall: float,
+                   spout_offsets: Optional[Dict[str, int]] = None
+                   ) -> RuntimeResult:
     """Assemble the common :class:`RuntimeResult` from final states —
     shared by the threaded and process backends."""
     lg, states = prep.lg, prep.states
@@ -774,7 +879,8 @@ def collect_result(prep: PreparedApp, spout_tuples: int,
         throughput=sink_tuples / max(wall, 1e-9),
         latency_p50=float(np.percentile(lat, 50)),
         latency_p99=float(np.percentile(lat, 99)),
-        states=states, late_drops=late, panes_fired=panes)
+        states=states, late_drops=late, panes_fired=panes,
+        spout_offsets=dict(spout_offsets or {}))
 
 
 def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
@@ -782,7 +888,9 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             queue_cap: int = 32, partition: Optional[Dict[str, str]] = None,
             seed: int = 0, vectorized: Optional[bool] = None,
             max_batches: Optional[int] = None,
-            initial_states: Optional[Dict[str, List[dict]]] = None
+            initial_states: Optional[Dict[str, List[dict]]] = None,
+            dispatch_depth: Optional[int] = None,
+            initial_offsets: Optional[Dict[str, int]] = None
             ) -> RuntimeResult:
     """Execute ``app`` for ``duration`` seconds and return measured stats.
 
@@ -805,6 +913,14 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     state byte-reproducible across replica counts.  ``initial_states`` seeds
     per-replica state (one entry per replica, e.g. from
     :func:`repro.streaming.state.migrate_states` after a replan).
+
+    ``dispatch_depth`` overrides every declared device operator's async
+    in-flight window (1 forces the synchronous path — the A/B flag; the
+    outputs are byte-identical either way, only the overlap changes).
+    ``initial_offsets`` resumes each spout's deterministic source sequence
+    at a recorded emitted-batch counter (``RuntimeResult.spout_offsets``
+    from a previous run): the resumed run emits the batches the original
+    would have emitted next, making duration-mode runs prefix-continuable.
     """
     prep = prepare_app(app, parallelism, partition, initial_states,
                        batch=batch)
@@ -832,7 +948,8 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         add_spout_count=add_spout_count,
         in_q_of=lambda name, i: in_qs[(name, i)],
         out_q_of=lambda name, i, cop: [in_qs[(cop, j)]
-                                       for j in range(parallelism[cop])])
+                                       for j in range(parallelism[cop])],
+        dispatch_depth=dispatch_depth, initial_offsets=initial_offsets)
 
     for t in tasks:
         t.start()
@@ -853,4 +970,6 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     for t in tasks:
         t.join(timeout=join_timeout)
     wall = time.perf_counter() - t_start
-    return collect_result(prep, spout_counts[0], latencies, wall)
+    return collect_result(prep, spout_counts[0], latencies, wall,
+                          spout_offsets={s.name: s.emitted_batches
+                                         for s in spouts})

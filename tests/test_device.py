@@ -1,0 +1,319 @@
+"""Async device-dispatch pipeline (ISSUE 8).
+
+The contract: ``device=True`` operators enqueue their (lazy) kernel result
+into a bounded in-flight window of ``dispatch_depth`` and materialize
+results FIFO — overlapping host ingest with device compute — while staying
+*invisible to results*: depth 1 and depth N are byte-identical under
+deterministic replay, watermarks never overtake the batches they trail
+(retire-before-mark), and the planner/DES price the overlap as
+``max(host, device/depth)`` so modeled throughput moves with depth in the
+measured direction.  The jitted-predictor end-to-end tests run on CPU-only
+hosts (XLA host platform) and skip cleanly without jax.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import ExecutionGraph, server_a
+from repro.streaming.api import Topology, TopologyError
+from repro.streaming.apps import inf_model_weights, streaming_inference
+from repro.streaming.runtime import resolve_offsets, run_app
+from repro.streaming.simulator import des_simulate, fluid_solve
+from repro.streaming.state import StateSpec, WindowSpec, segmented
+
+
+def _src(batch, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(batch, 4))
+
+
+# ---------------------------------------------------------------------------
+# declaration + validation
+# ---------------------------------------------------------------------------
+
+def _topo(**op_kw):
+    return (Topology("t")
+            .spout("s", _src, exec_ns=100.0)
+            .op("d", lambda b, st: [b], exec_ns=500.0, **op_kw)
+            .sink("k", lambda b, st: [], exec_ns=100.0)
+            .build())
+
+
+def test_device_op_declaration_carries_through():
+    app = _topo(device=True, device_ns=4000.0, dispatch_depth=3)
+    sp = app.graph.operators["d"]
+    assert sp.device and sp.device_ns == 4000.0 and sp.dispatch_depth == 3
+    assert app.device_ops() == {"d": 3}
+    assert _topo().device_ops() == {}
+
+
+def test_device_validation_rejects_bad_declarations():
+    with pytest.raises(TopologyError, match="dispatch_depth"):
+        _topo(device=True, dispatch_depth=0)
+    with pytest.raises(TopologyError, match="dispatch_depth"):
+        _topo(device=True, dispatch_depth=2.5)
+    with pytest.raises(TopologyError, match="dispatch_depth"):
+        _topo(device=True, dispatch_depth=True)
+    # device knobs without device=True are declaration bugs, not defaults
+    with pytest.raises(TopologyError, match="device"):
+        _topo(device_ns=1000.0)
+    with pytest.raises(TopologyError, match="device"):
+        _topo(dispatch_depth=2)
+    with pytest.raises(TopologyError, match="device_ns"):
+        _topo(device=True, device_ns=-1.0)
+
+
+def test_device_excludes_windowed_and_segmented_kernels():
+    win_state = StateSpec("value", item_bytes=16.0,
+                          window=WindowSpec.time_sliding(16.0, 8.0,
+                                                         time_by=0))
+    with pytest.raises(TopologyError, match="window"):
+        (Topology("t")
+         .spout("s", _src, exec_ns=100.0, event_time=0, watermark_every=2)
+         .op("d", lambda b, st: [b], exec_ns=500.0, device=True,
+             state=win_state)
+         .sink("k", lambda b, st: [], exec_ns=100.0).build())
+
+    @segmented
+    def k_seg(stack, state):
+        return [stack]
+
+    with pytest.raises(TopologyError, match="segmented"):
+        (Topology("t")
+         .spout("s", _src, exec_ns=100.0)
+         .op("d", k_seg, exec_ns=500.0, device=True)
+         .sink("k", lambda b, st: [], exec_ns=100.0).build())
+
+
+# ---------------------------------------------------------------------------
+# planner/DES pricing: exec_s = max(host, device/depth)
+# ---------------------------------------------------------------------------
+
+def test_exec_s_prices_the_overlap_window():
+    sync = _topo(device=True, device_ns=4000.0).graph.operators["d"]
+    assert sync.exec_s == pytest.approx((500.0 + 4000.0) * 1e-9)
+    d4 = _topo(device=True, device_ns=4000.0,
+               dispatch_depth=4).graph.operators["d"]
+    assert d4.exec_s == pytest.approx(max(500.0, 4000.0 / 4) * 1e-9)
+    host_bound = _topo(device=True, device_ns=400.0,
+                       dispatch_depth=8).graph.operators["d"]
+    assert host_bound.exec_s == pytest.approx(500.0 * 1e-9)
+    assert _topo().graph.operators["d"].exec_s == pytest.approx(500e-9)
+
+
+@pytest.mark.parametrize("oracle", ["fluid", "des"])
+def test_modeled_throughput_moves_with_dispatch_depth(oracle):
+    """The measured direction: deeper dispatch windows raise the device
+    operator's service rate, so modeled saturation throughput rises."""
+    def capacity(depth):
+        app = _topo(device=True, device_ns=4000.0, dispatch_depth=depth)
+        g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators})
+        if oracle == "fluid":
+            return fluid_solve(g, server_a(), [0] * g.n_units,
+                               input_rate=None).R
+        return des_simulate(g, server_a(), [0] * g.n_units,
+                            input_rate=2e6, horizon=0.02).R
+
+    r1, r4 = capacity(1), capacity(4)
+    assert r4 > r1 * 1.5, (r1, r4)
+
+
+def test_des_depth_direction_on_inference_app():
+    def cap(depth):
+        app = streaming_inference(dispatch_depth=depth)
+        g = ExecutionGraph(app.graph, {n: 1 for n in app.graph.operators})
+        return des_simulate(g, server_a(), [0] * g.n_units,
+                            input_rate={"spout": 1e6, "model_spout": 10.0},
+                            horizon=0.02).R
+
+    assert cap(4) > cap(1) * 1.2
+
+
+# ---------------------------------------------------------------------------
+# executor semantics (no jax needed: device flag == async window + FIFO
+# materialization; a numpy kernel exercises the exact same code path)
+# ---------------------------------------------------------------------------
+
+def _fingerprint(res):
+    sink = res.states["k"][0]
+    return (res.spout_tuples, res.sink_tuples,
+            {k: v for k, v in sink.items() if np.isscalar(v)})
+
+
+def test_depth_is_invisible_to_results():
+    def make(depth):
+        return (Topology("t")
+                .spout("s", _src, exec_ns=100.0)
+                .op("d", lambda b, st: [b * 2.0], exec_ns=500.0,
+                    device=True, device_ns=2000.0, dispatch_depth=depth)
+                .sink("k", lambda b, st: st.__setitem__(
+                    "sum", st.get("sum", 0.0) + float(b.sum())) or [],
+                    exec_ns=100.0)
+                .build())
+
+    fps = [_fingerprint(run_app(make(d), {}, batch=32, max_batches=25))
+           for d in (1, 2, 5)]
+    assert fps[0] == fps[1] == fps[2]
+    # the run_app override wins over the declared depth
+    fp = _fingerprint(run_app(make(1), {}, batch=32, max_batches=25,
+                              dispatch_depth=4))
+    assert fp == fps[0]
+
+
+def test_watermarks_never_overtake_inflight_batches():
+    """Retire-before-mark: a device op upstream of an event-time window
+    must flush its in-flight window before forwarding a watermark, or
+    panes would see their tuples arrive 'late'.  Pane contents and late
+    drops must be depth-invariant."""
+    def source(batch, seed):
+        ets = np.abs(seed) * batch + np.arange(batch, dtype=np.float64)
+        vals = np.full(batch, float(seed % 7))
+        return np.stack([ets, vals], axis=1)
+
+    @segmented
+    def k_panes(stack, state):
+        seg = state.segments
+        tot = np.add.reduceat(stack[:, 1], seg.starts)
+        return [np.stack([seg.spans[:, 1], tot], axis=1)]
+
+    def make(depth):
+        return (Topology("t")
+                .spout("s", source, exec_ns=100.0, event_time=0,
+                       watermark_every=2)
+                .op("d", lambda b, st: [b], exec_ns=300.0, device=True,
+                    device_ns=1500.0, dispatch_depth=depth)
+                .op("w", k_panes, exec_ns=500.0,
+                    state=StateSpec("value", item_bytes=16.0,
+                                    window=WindowSpec.time_sliding(
+                                        32.0, 16.0, time_by=0)))
+                .sink("k", lambda b, st: st.__setitem__(
+                    "tot", st.get("tot", 0.0) + float(b[:, 1].sum())) or [],
+                    exec_ns=100.0)
+                .build())
+
+    runs = [run_app(make(d), {}, batch=16, max_batches=30) for d in (1, 4)]
+    assert runs[0].late_drops == runs[1].late_drops == 0
+    assert runs[0].panes_fired == runs[1].panes_fired > 0
+    assert _fingerprint(runs[0]) == _fingerprint(runs[1])
+
+
+# ---------------------------------------------------------------------------
+# jitted predictor end to end (CPU-only XLA host platform)
+# ---------------------------------------------------------------------------
+
+def test_inference_depth_parity_and_oracle():
+    pytest.importorskip("jax")
+    from repro.kernels.ref import mlp_ref
+
+    app = streaming_inference(model_versions=1)
+    r1 = run_app(app, {}, batch=16, max_batches=25, dispatch_depth=1)
+    r3 = run_app(app, {}, batch=16, max_batches=25, dispatch_depth=3)
+    s1, s3 = r1.states["sink"][0], r3.states["sink"][0]
+    assert s1["seen"] == s3["seen"] == 25 * 16
+    assert s1["score"] == s3["score"]          # byte-identical accumulation
+    assert r1.spout_offsets == {"spout#0": 25, "model_spout#0": 25}
+
+    # oracle: recompute every deterministic sensor batch through the
+    # *un-jitted* reference the predictor jits
+    w = inf_model_weights(0)
+    total = 0.0
+    for b in range(25):
+        rng = np.random.default_rng(b)
+        x = rng.normal(size=(16, 32)).astype(np.float32)
+        total += float(np.asarray(mlp_ref(x, w), np.float64).sum())
+    assert s1["score"] == pytest.approx(total, rel=1e-9)
+
+
+def test_process_backend_requires_jax_clean_parent():
+    pytest.importorskip("jax")            # this import *is* the hazard
+    from repro.streaming.procexec import run_app_processes
+    with pytest.raises(RuntimeError, match="[Jj][Aa][Xx]"):
+        run_app_processes(streaming_inference(model_versions=1), {},
+                          batch=16, max_batches=2)
+
+
+def test_process_backend_device_parity_in_clean_subprocess():
+    pytest.importorskip("jax")
+    child = (
+        "import json, sys\n"
+        "from repro.streaming.apps import streaming_inference\n"
+        "from repro.streaming.procexec import run_app_processes\n"
+        "from repro.streaming.runtime import run_app\n"
+        "out = []\n"
+        "# processes first: the guard demands a jax-clean parent, and the\n"
+        "# threads run imports jax into this process\n"
+        "for runner, depth in [(run_app_processes, 2), (run_app, 1)]:\n"
+        "    r = runner(streaming_inference(model_versions=1), {},\n"
+        "               batch=16, max_batches=10, dispatch_depth=depth)\n"
+        "    s = r.states['sink'][0]\n"
+        "    out.append([r.spout_tuples, r.sink_tuples, int(s['seen']),\n"
+        "                float(s['score']).hex()])\n"
+        "print(json.dumps(out))\n")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    cp = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                        text=True, env=env, timeout=240)
+    assert cp.returncode == 0, cp.stderr[-2000:]
+    import json
+    threads, procs = json.loads(cp.stdout.strip().splitlines()[-1])
+    assert threads == procs
+
+
+# ---------------------------------------------------------------------------
+# spout offset hand-off (ROADMAP 1b)
+# ---------------------------------------------------------------------------
+
+def test_spout_offsets_resume_prefix_continuation():
+    """run(10) then resume run(5) from its offsets+states == run(15)."""
+    from repro.streaming.apps import word_count
+    from repro.streaming.state import KeyedStore, merge_keyed
+
+    par = {"splitter": 2, "counter": 4}
+
+    def counter_bytes(res):
+        return merge_keyed([s.managed for s in res.states["counter"]
+                            if isinstance(s.managed, KeyedStore)]).tobytes()
+
+    first = run_app(word_count(), par, batch=64, max_batches=10)
+    assert first.spout_offsets == {"spout#0": 10}
+    # hand the first run's replica states straight in (the migrate_states
+    # path would re-shard them; here parallelism is unchanged)
+    resumed = run_app(word_count(), par, batch=64, max_batches=5,
+                      initial_offsets=first.spout_offsets,
+                      initial_states=first.states)
+    whole = run_app(word_count(), par, batch=64, max_batches=15)
+    assert resumed.spout_offsets == whole.spout_offsets == {"spout#0": 15}
+    assert counter_bytes(resumed) == counter_bytes(whole)
+    assert first.spout_tuples + resumed.spout_tuples == whole.spout_tuples
+
+
+def test_resolve_offsets_accepts_names_and_replica_uids():
+    lg = streaming_inference().graph
+    par = {n: 1 for n in lg.operators}
+    par["spout"] = 2
+    out = resolve_offsets(lg, par, {"spout": 7, "model_spout#0": 3})
+    assert out == {("spout", 0): 7, ("spout", 1): 7, ("model_spout", 0): 3}
+    # replica uid overrides the operator-wide default
+    out = resolve_offsets(lg, par, {"spout": 7, "spout#1": 2})
+    assert out == {("spout", 0): 7, ("spout", 1): 2}
+    assert resolve_offsets(lg, par, None) == {}
+
+
+def test_resolve_offsets_validation():
+    lg = streaming_inference().graph
+    par = {n: 1 for n in lg.operators}
+    with pytest.raises(ValueError, match="not a spout"):
+        resolve_offsets(lg, par, {"predictor": 1})
+    with pytest.raises(ValueError, match="not a spout"):
+        resolve_offsets(lg, par, {"nope": 1})
+    with pytest.raises(ValueError, match="int >= 0"):
+        resolve_offsets(lg, par, {"spout": -1})
+    with pytest.raises(ValueError, match="int >= 0"):
+        resolve_offsets(lg, par, {"spout": True})
+    with pytest.raises(ValueError, match="parallelism"):
+        resolve_offsets(lg, par, {"spout#1": 4})

@@ -447,17 +447,20 @@ def test_watermark_cadence_validation():
 # ---------------------------------------------------------------------------
 
 def test_auto_vectorized_calibration():
-    """The calibrated threshold reproduces the BENCH micro grid's winners:
-    per-mask at small rows x k**2, vectorized once the radix sort
-    amortizes — and LR's 1024-row k=4 edge lands on masks."""
+    """The recalibrated threshold reproduces the BENCH micro grid's
+    winners: per-mask only at small rows x low fan-out, vectorized once
+    the radix sort amortizes.  The refit (rows * k**3 > 8192) moved the
+    k=4 crossover down to ~256 rows — the old fit kept LR's 1024-row k=4
+    edge on masks, where the fresh grid shows vectorized wins 1.3x."""
     assert not auto_vectorized(256, 2)
-    assert not auto_vectorized(2560, 2)
+    assert not auto_vectorized(1024, 2)
     assert auto_vectorized(10240, 2)
-    assert not auto_vectorized(256, 4)
-    assert auto_vectorized(2560, 4)
-    assert not auto_vectorized(1024, 4)          # the LR regression case
+    assert not auto_vectorized(128, 4)           # near-tie, masks by default
+    assert auto_vectorized(256, 4)
+    assert auto_vectorized(1024, 4)              # old rule's LR miss: vec wins 1.3x
     assert auto_vectorized(2048, 8)
-    assert VEC_CROSSOVER == 16384
+    assert auto_vectorized(128, 8)               # old rule misclassified this
+    assert VEC_CROSSOVER == 8192
 
 
 def test_route_auto_split_matches_both_overrides():
