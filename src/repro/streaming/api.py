@@ -72,6 +72,7 @@ class StreamingApp:
     watermark_every: Dict[str, int] = dataclasses.field(default_factory=dict)
     watermark_interval: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    checkpoint_every: Optional[int] = None   # declared barrier cadence
 
     def time_windows(self) -> Dict[str, WindowSpec]:
         """Declared event-time windows (operator -> WindowSpec) — what
@@ -129,8 +130,16 @@ class Topology:
     Forward references are allowed — validation happens in ``build()``.
     """
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, *, checkpoint_every: Optional[int] = None):
         self.name = name
+        if checkpoint_every is not None and (
+                isinstance(checkpoint_every, bool)
+                or not isinstance(checkpoint_every, int)
+                or checkpoint_every < 1):
+            raise TopologyError(
+                f"topology {name!r}: checkpoint_every must be an int >= 1 "
+                f"(batches between barriers), got {checkpoint_every!r}")
+        self.checkpoint_every = checkpoint_every
         self._decls: Dict[str, _OpDecl] = {}
         self._last: Optional[str] = None
 
@@ -529,7 +538,8 @@ class Topology:
                             key_by=self.key_by, state=self.state,
                             event_time=self.event_time,
                             watermark_every=self.watermark_every,
-                            watermark_interval=self.watermark_interval)
+                            watermark_interval=self.watermark_interval,
+                            checkpoint_every=self.checkpoint_every)
 
 
 # ---------------------------------------------------------------------------
@@ -933,7 +943,11 @@ class Plan:
                 env: Optional[Dict[str, str]] = None,
                 timeout: Optional[float] = None,
                 dispatch_depth: Optional[int] = None,
-                initial_offsets: Optional[Dict[str, int]] = None) -> Metrics:
+                initial_offsets: Optional[Dict[str, int]] = None,
+                checkpoint_every: Optional[int] = None,
+                checkpoint_dir: Optional[str] = None,
+                from_checkpoint: Optional[object] = None,
+                final_watermark: bool = True) -> Metrics:
         """Run the plan on this host's real runtime.
 
         ``backend`` selects the execution substrate from the
@@ -974,6 +988,16 @@ class Plan:
         ``initial_offsets`` resumes spouts from a previous run's
         ``RuntimeResult.spout_offsets`` counters (prefix-continuation of
         duration-mode runs).
+
+        ``checkpoint_every`` (or ``Topology(checkpoint_every=)``) turns on
+        aligned-barrier checkpointing on either backend; completed
+        snapshots land in ``Metrics.raw.checkpoints`` and, with
+        ``checkpoint_dir``, on disk.  ``from_checkpoint`` resumes from a
+        snapshot (byte-identical continuation — see ``docs/API.md`` §3d);
+        note it pins parallelism to the checkpoint's, overriding the
+        plan's scaling.  ``final_watermark=False`` suspends an event-time
+        run instead of draining it, keeping pane buffers resident for
+        ``migrate_states``.
         """
         from .procexec import get_backend
         run_backend = get_backend(backend)
@@ -981,6 +1005,10 @@ class Plan:
             raise TopologyError(
                 f"job {self.job.name!r} is planning-only (no kernels); "
                 "build the topology with kernels and sources to execute")
+        if from_checkpoint is not None and parallelism is None:
+            # snapshots are per-replica: the resumed run must re-create the
+            # checkpoint's replica layout, not the plan's scaled one
+            parallelism = dict(getattr(from_checkpoint, "parallelism", {}))
         if parallelism is None:
             budget = max_threads if max_threads is not None else \
                 2 * (os.cpu_count() or 2)
@@ -1016,7 +1044,11 @@ class Plan:
                          vectorized=vectorized, max_batches=batches,
                          initial_states=initial_states,
                          dispatch_depth=dispatch_depth,
-                         initial_offsets=initial_offsets, **kw)
+                         initial_offsets=initial_offsets,
+                         checkpoint_every=checkpoint_every,
+                         checkpoint_dir=checkpoint_dir,
+                         from_checkpoint=from_checkpoint,
+                         final_watermark=final_watermark, **kw)
         return Metrics("runtime", rt.throughput, rt.latency_p50,
                        rt.latency_p99, raw=rt)
 

@@ -76,10 +76,14 @@ from typing import Callable, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from .apps import StreamingApp
-from .runtime import (RuntimeResult, _POISON, _Watermark, build_executors,
-                      collect_result, prepare_app)
+from .checkpoint import Checkpoint, CheckpointCoordinator
+from .runtime import (RuntimeResult, _Barrier, _POISON, _Watermark,
+                      build_executors, collect_result, install_checkpoint,
+                      prepare_app, resolve_checkpoint_every,
+                      validate_from_checkpoint)
 from .state import (BroadcastTable, EventTimeWindowState, KeyedStore,
-                    OperatorState, ValueStore, WindowState)
+                    OperatorState, ValueStore, WindowState,
+                    restore_state, state_payload)
 
 __all__ = ["ShmRing", "register_ring_dtype", "run_app_processes",
            "plan_placement", "socket_core_map", "host_device_env",
@@ -101,13 +105,18 @@ _SPIN = 128                  # bounded busy-spin tries before the first
 
 # -- raw slot format --------------------------------------------------------
 # slot := tag u8, then per tag:
-#   RAW    @1 dtype-id u8, @2 ndim u8, @8 t0 f64, @16 shape ndim*i64,
-#          @16+8*ndim raw row bytes (8-aligned: slots start 8-aligned and
-#          the header is a multiple of 8)
-#   PICKLE @1 blob-length u32, @5 pickled ("d", array, t0) payload
-#   WM     @1 lane-length u32, @5 lane utf-8, then value f64
-#   POISON tag only
-_TAG_RAW, _TAG_PICKLE, _TAG_WM, _TAG_POISON = 0, 1, 2, 3
+#   RAW     @1 dtype-id u8, @2 ndim u8, @3 lane-length u8 (0 = untagged),
+#           @8 t0 f64, @16 shape ndim*i64, @16+8*ndim raw row bytes
+#           (8-aligned: slots start 8-aligned and the header is a multiple
+#           of 8), then lane utf-8 after the rows
+#   PICKLE  @1 blob-length u32, @5 pickled ("d", array, t0[, lane]) payload
+#   WM      @1 lane-length u32, @5 lane utf-8, then value f64
+#   POISON  tag only
+#   BARRIER @1 lane-length u32, @5 lane utf-8, then ckpt_id i64
+# Lane tags ride only under checkpointing — the runtime emits 4-tuple
+# items then, and the consumer-side barrier aligner needs the producer
+# lane to hold the right inputs back.
+_TAG_RAW, _TAG_PICKLE, _TAG_WM, _TAG_POISON, _TAG_BARRIER = 0, 1, 2, 3, 4
 _RAW_HDR = 16
 _RAW_MAX_DIMS = 4
 
@@ -244,16 +253,28 @@ class ShmRing:
             tag = _TAG_WM
             lane = item.lane.encode()
             need = 5 + len(lane) + 8
-        else:                           # (arr, t0[, lease]) data jumbo
+        elif isinstance(item, _Barrier):
+            tag = _TAG_BARRIER
+            lane = item.lane.encode()
+            need = 5 + len(lane) + 8
+        else:                   # (arr, t0[, lease[, lane]]) data jumbo
             arr, t0 = item[0], item[1]
+            if len(item) >= 4 and item[3] is not None:
+                lane = item[3].encode()
+                if len(lane) > 255:
+                    raise ValueError(f"operator name {item[3]!r} exceeds "
+                                     "the 255-byte ring lane tag")
             did = _DTYPE_IDS.get(arr.dtype) if self.raw else None
             if did is not None and 1 <= arr.ndim <= _RAW_MAX_DIMS:
                 tag = _TAG_RAW
                 arr = np.ascontiguousarray(arr)
-                need = _RAW_HDR + 8 * arr.ndim + arr.nbytes
+                need = (_RAW_HDR + 8 * arr.ndim + arr.nbytes
+                        + (len(lane) if lane else 0))
             else:                       # unregistered dtype: tagged fallback
                 tag = _TAG_PICKLE
-                blob = pickle.dumps(("d", np.ascontiguousarray(arr), t0),
+                payload = (("d", np.ascontiguousarray(arr), t0) if lane is None
+                           else ("d", np.ascontiguousarray(arr), t0, item[3]))
+                blob = pickle.dumps(payload,
                                     protocol=pickle.HIGHEST_PROTOCOL)
                 need = 5 + len(blob)
         if need > self.slot_bytes:
@@ -272,7 +293,10 @@ class ShmRing:
             sleep = min(sleep * 2, _POLL_MAX)
         off = _CTRL + (tail % self.capacity) * self.slot_bytes
         if tag == _TAG_RAW:
-            struct.pack_into("<BBB", self._buf, off, tag, did, arr.ndim)
+            # lane-length is always written: slots are reused without
+            # zeroing, so byte 3 would otherwise carry a stale tag
+            struct.pack_into("<BBBB", self._buf, off, tag, did, arr.ndim,
+                             len(lane) if lane else 0)
             struct.pack_into("<d", self._buf, off + 8, float(t0))
             struct.pack_into(f"<{arr.ndim}q", self._buf, off + _RAW_HDR,
                              *arr.shape)
@@ -280,6 +304,9 @@ class ShmRing:
                 dst = np.ndarray(arr.shape, arr.dtype, buffer=self._buf,
                                  offset=off + _RAW_HDR + 8 * arr.ndim)
                 dst[...] = arr        # the one producer-side copy, into shm
+            if lane:
+                end = off + _RAW_HDR + 8 * arr.ndim + arr.nbytes
+                self._buf[end:end + len(lane)] = lane
             self.put_tuples += len(arr)
             self.put_bytes += arr.nbytes
         elif tag == _TAG_PICKLE:
@@ -292,6 +319,11 @@ class ShmRing:
             self._buf[off + 5:off + 5 + len(lane)] = lane
             struct.pack_into("<d", self._buf, off + 5 + len(lane),
                              item.value)
+        elif tag == _TAG_BARRIER:
+            struct.pack_into("<BI", self._buf, off, tag, len(lane))
+            self._buf[off + 5:off + 5 + len(lane)] = lane
+            struct.pack_into("<q", self._buf, off + 5 + len(lane),
+                             item.ckpt_id)
         else:
             self._buf[off] = _TAG_POISON
         self.put_slots += 1
@@ -306,6 +338,7 @@ class ShmRing:
         tag = self._buf[off]
         if tag == _TAG_RAW:
             did, ndim = self._buf[off + 1], self._buf[off + 2]
+            lane_len = self._buf[off + 3]
             (t0,) = struct.unpack_from("<d", self._buf, off + 8)
             shape = struct.unpack_from(f"<{ndim}q", self._buf,
                                        off + _RAW_HDR)
@@ -318,20 +351,32 @@ class ShmRing:
                 arr = np.empty(shape, dt)
             self.get_tuples += len(arr)
             self.get_bytes += arr.nbytes
-            item = (arr, t0, None)
+            if lane_len:
+                end = off + _RAW_HDR + 8 * ndim + arr.nbytes
+                lane = bytes(self._buf[end:end + lane_len]).decode()
+                item = (arr, t0, None, lane)
+            else:
+                item = (arr, t0, None)
         elif tag == _TAG_PICKLE:
             (length,) = struct.unpack_from("<I", self._buf, off + 1)
             payload = pickle.loads(self._buf[off + 5:off + 5 + length])
             arr = payload[1]
             self.get_tuples += len(arr)
             self.get_bytes += arr.nbytes
-            item = (arr, payload[2], None)
+            item = ((arr, payload[2], None, payload[3])
+                    if len(payload) >= 4 else (arr, payload[2], None))
         elif tag == _TAG_WM:
             (length,) = struct.unpack_from("<I", self._buf, off + 1)
             lane = bytes(self._buf[off + 5:off + 5 + length]).decode()
             (value,) = struct.unpack_from("<d", self._buf,
                                           off + 5 + length)
             item = _Watermark(lane, value)
+        elif tag == _TAG_BARRIER:
+            (length,) = struct.unpack_from("<I", self._buf, off + 1)
+            lane = bytes(self._buf[off + 5:off + 5 + length]).decode()
+            (ckpt_id,) = struct.unpack_from("<q", self._buf,
+                                            off + 5 + length)
+            item = _Barrier(lane, ckpt_id)
         else:
             item = _POISON
         self.get_slots += 1
@@ -415,63 +460,43 @@ class _ShmEvent:
         self.shm.buf[self._off] = 1
 
 
+class _CkptProxy:
+    """Worker-side stand-in for the parent's
+    :class:`~.checkpoint.CheckpointCoordinator`.
+
+    Executors call the same ``deposit`` surface; the proxy forwards each
+    snapshot over the worker's result pipe as an in-band ``("ckpt", ...)``
+    message, so alignment bookkeeping and completed-round assembly live
+    only in the parent — which persists finished checkpoints mid-run and
+    therefore survives worker kills.  The pipe lock is shared with the
+    end-of-run ``("ok", ...)`` send: several executor threads per worker
+    deposit concurrently and ``Connection.send`` is not thread-safe."""
+
+    __slots__ = ("every", "_conn", "_lock")
+
+    def __init__(self, conn, lock: threading.Lock, every: int):
+        self.every = every
+        self._conn = conn
+        self._lock = lock
+
+    def deposit(self, ckpt_id: int, uid: str, *, payload: dict,
+                aux: Optional[dict] = None,
+                offset: Optional[int] = None) -> None:
+        with self._lock:
+            self._conn.send(("ckpt", ckpt_id, uid, payload, aux, offset))
+
+
 # ---------------------------------------------------------------------------
 # State payloads: what crosses the pipe back to the parent
 # ---------------------------------------------------------------------------
 
 
-def _state_payload(st: OperatorState) -> dict:
-    """Reduce one replica's state handle to plain picklable data.
-
-    Ships arrays and scalars only — managed store tables, window buffers
-    (compacted), scratch dict entries, the late/pane counters — never the
-    stores themselves (their specs can hold closure ``init`` factories,
-    which fork inherits but pickle rejects)."""
-    p: dict = {"scratch": dict(st)}
-    m = st.managed
-    if isinstance(m, KeyedStore):
-        p["managed"] = ("keyed", m.table)
-    elif isinstance(m, BroadcastTable):
-        p["managed"] = ("broadcast", m.data, m.version)
-    elif isinstance(m, ValueStore):
-        p["managed"] = ("value", m.value)
-    w = st.window
-    if isinstance(w, EventTimeWindowState):
-        w._compact()
-        p["window"] = ("et", w._ets, w._rows, w._t0s, w._keys,
-                       w._fired_bound, w.late_drops, w.panes_fired)
-    elif isinstance(w, WindowState):
-        p["window"] = ("count", w._hist, w._buf, w._base)
-    return p
-
-
-def _restore_state(st: OperatorState, payload: dict) -> None:
-    """Install a worker's payload onto the parent's matching handle, in
-    place — the handle keeps its spec, shard identity and key extractor, so
-    ``migrate_states`` and the result assembly read it exactly as if the
-    run had been threaded."""
-    st.clear()
-    st.update(payload["scratch"])
-    m = payload.get("managed")
-    if m is not None:
-        kind = m[0]
-        if kind == "keyed":
-            st.managed.table = m[1]
-        elif kind == "broadcast":
-            st.managed.data = m[1]
-            st.managed.version = m[2]
-        else:
-            st.managed.value = m[1]
-    w = payload.get("window")
-    if w is not None:
-        if w[0] == "et":
-            win = st.window
-            win._pending = []
-            (win._ets, win._rows, win._t0s, win._keys,
-             win._fired_bound, win.late_drops, win.panes_fired) = w[1:]
-        else:
-            win = st.window
-            win._hist, win._buf, win._base = w[1:]
+# Grown into public repro.streaming.state.state_payload / restore_state
+# when checkpointing needed the same reduction for live snapshots (with
+# copy=True); the worker pipe hand-off keeps using them under the old
+# names.
+_state_payload = state_payload
+_restore_state = restore_state
 
 
 # ---------------------------------------------------------------------------
@@ -628,7 +653,11 @@ def run_app_processes(app: StreamingApp,
                       ring_format: str = "raw",
                       timeout: Optional[float] = None,
                       dispatch_depth: Optional[int] = None,
-                      initial_offsets: Optional[Dict[str, int]] = None
+                      initial_offsets: Optional[Dict[str, int]] = None,
+                      checkpoint_every: Optional[int] = None,
+                      checkpoint_dir: Optional[str] = None,
+                      from_checkpoint: Optional[Checkpoint] = None,
+                      final_watermark: bool = True
                       ) -> RuntimeResult:
     """Execute ``app`` on forked worker processes (see module docstring).
 
@@ -648,12 +677,34 @@ def run_app_processes(app: StreamingApp,
     drops — is byte-identical to ``run_app``'s for any grouping, because
     both backends run the same executors over the same compiled routes and
     only the transport differs.
+
+    Checkpointing (``checkpoint_every`` / ``checkpoint_dir`` /
+    ``from_checkpoint`` / ``final_watermark``) matches ``run_app``:
+    barriers travel cross-process as in-band tagged ring slots, data
+    slots carry their producer lane for the consumer-side aligner, and
+    workers stream every aligned snapshot back over their result pipe —
+    the parent assembles and persists completed checkpoints *mid-run*,
+    so a SIGKILL-ed run restores from the last completed cut.
     """
     if ring_format not in ("raw", "pickle"):
         raise ValueError(f"ring_format must be 'raw' or 'pickle', "
                          f"got {ring_format!r}")
+    every = resolve_checkpoint_every(app, checkpoint_every)
+    if from_checkpoint is not None:
+        parallelism, initial_offsets = validate_from_checkpoint(
+            app, from_checkpoint, batch=batch, seed=seed,
+            parallelism=parallelism, initial_states=initial_states,
+            initial_offsets=initial_offsets)
+        if every is None:
+            every = from_checkpoint.checkpoint_every
     prep = prepare_app(app, parallelism, partition, initial_states,
                        batch=batch)
+    # restore *before* the fork: workers inherit the restored states
+    initial_aux = install_checkpoint(prep, from_checkpoint) \
+        if from_checkpoint is not None else None
+    coordinator = CheckpointCoordinator(
+        app, prep.parallelism, batch=batch, seed=seed, every=every,
+        directory=checkpoint_dir) if every else None
     lg, par = prep.lg, prep.parallelism
     replicas: List[Replica] = [(name, i) for name in lg.operators
                                for i in range(par[name])]
@@ -718,6 +769,7 @@ def run_app_processes(app: StreamingApp,
                 else local_qs[(cop, j)] for j in range(par[cop])]
 
     def _worker(gid, conn) -> None:
+        send_lock = threading.Lock()
         try:
             if env:
                 os.environ.update(env)
@@ -735,6 +787,7 @@ def run_app_processes(app: StreamingApp,
                                            a.exc_traceback)))
             latencies: List[float] = []
             counts = [0]
+            proxy = _CkptProxy(conn, send_lock, every) if every else None
             spouts, tasks = build_executors(
                 app, prep, batch=batch, jumbo=jumbo, vectorized=vectorized,
                 seed=seed, max_batches=max_batches, stop=stop,
@@ -743,7 +796,9 @@ def run_app_processes(app: StreamingApp,
                     0, counts[0] + n),
                 in_q_of=in_q_of, out_q_of=out_q_of,
                 only=set(members[gid]), dispatch_depth=dispatch_depth,
-                initial_offsets=initial_offsets)
+                initial_offsets=initial_offsets,
+                coordinator=proxy, final_watermark=final_watermark,
+                initial_aux=initial_aux)
             for t in tasks:
                 t.start()
             for s in spouts:
@@ -769,12 +824,14 @@ def run_app_processes(app: StreamingApp,
                 "spout_tuples": counts[0],
                 "spout_offsets": {s.name: s.emitted_batches
                                   for s in spouts}}
-            conn.send(("ok", payload))
+            with send_lock:
+                conn.send(("ok", payload))
             conn.close()
         except BaseException:
             try:
-                conn.send(("error", f"worker {gid!r}:\n"
-                           + traceback.format_exc()))
+                with send_lock:
+                    conn.send(("error", f"worker {gid!r}:\n"
+                               + traceback.format_exc()))
                 conn.close()
             finally:
                 os._exit(1)
@@ -812,13 +869,23 @@ def run_app_processes(app: StreamingApp,
                     f"({sorted(str(g) for _, (g, _) in pending.items())}); "
                     "workers terminated, shared memory unlinked")
             for c in conn_wait(list(pending), timeout=min(remaining, 0.25)):
-                gid, p = pending.pop(c)
+                gid, p = pending[c]
                 try:
-                    status, payload = c.recv()
+                    msg = c.recv()
                 except EOFError:
+                    pending.pop(c)
                     raise RuntimeError(
                         f"worker {gid!r} died without reporting "
                         f"(exitcode {p.exitcode})") from None
+                if msg[0] == "ckpt":
+                    # in-band snapshot deposit: the conn stays pending —
+                    # the worker keeps running, its "ok" comes later
+                    if coordinator is not None:
+                        coordinator.deposit(msg[1], msg[2], payload=msg[3],
+                                            aux=msg[4], offset=msg[5])
+                    continue
+                pending.pop(c)
+                status, payload = msg
                 if status == "error":
                     raise RuntimeError(
                         "process backend worker failed — " + payload)
@@ -853,7 +920,9 @@ def run_app_processes(app: StreamingApp,
         except FileNotFoundError:
             pass
     return collect_result(prep, spout_total, latencies, wall,
-                          spout_offsets=spout_offsets)
+                          spout_offsets=spout_offsets,
+                          checkpoints=coordinator.completed
+                          if coordinator else None)
 
 
 def _run_app_threads(app: StreamingApp, **kw) -> RuntimeResult:

@@ -193,6 +193,62 @@ class WatermarkMerger:
         return self._lanes.get(name, -math.inf)
 
 
+class BarrierAligner:
+    """Per-consumer checkpoint-barrier alignment (the Chandy-Lamport cut).
+
+    The watermark idiom, one notch stricter: a checkpoint barrier is a
+    second kind of mark that rides every route a watermark rides, but
+    where watermarks *min-merge* (a stale lane just holds the merged value
+    back), barriers must **align** — the consumer snapshots its state only
+    once barrier *n* has arrived on *every* producer lane, and everything
+    a fast lane sends after its barrier is held back until then (otherwise
+    post-barrier effects leak into the snapshot and replay double-applies
+    them).  One aligner per executor, ``expected`` producer lanes, exactly
+    like the poison count.
+
+    Rounds are strictly sequential by construction: a lane that has
+    delivered barrier ``n`` is *holding* — the executor queues that lane's
+    subsequent items (data, watermarks, even barrier ``n+1``) instead of
+    processing them — so a barrier for a different round while one is
+    active is a protocol violation, not a case to handle.
+    """
+
+    __slots__ = ("expected", "active", "_arrived")
+
+    def __init__(self, expected: int):
+        self.expected = expected
+        self.active: Optional[int] = None     # ckpt id being aligned
+        self._arrived: set = set()
+
+    def arrive(self, lane: str, ckpt_id: int) -> bool:
+        """Record barrier ``ckpt_id`` from ``lane``; True when this
+        completes the round (all expected lanes aligned)."""
+        if self.active is None:
+            self.active = ckpt_id
+            self._arrived = set()
+        elif ckpt_id != self.active:
+            raise RuntimeError(
+                f"barrier {ckpt_id} from lane {lane!r} while round "
+                f"{self.active} is still aligning")
+        self._arrived.add(lane)
+        if len(self._arrived) >= self.expected:
+            self.active = None
+            self._arrived = set()
+            return True
+        return False
+
+    def holding(self, lane: str) -> bool:
+        """True while ``lane`` has aligned the active round and its
+        subsequent items must be held back."""
+        return self.active is not None and lane in self._arrived
+
+    def reset(self) -> None:
+        """Abandon the active round (end of stream reached before every
+        lane's barrier arrived — the round can never complete)."""
+        self.active = None
+        self._arrived = set()
+
+
 #: calibrated crossover for the keyed-split implementation, refit from a
 #: dense best-of-3 micro grid (rows in {128..10240} x k in {2,4,8},
 #: us/call): the per-mask path is k linear scans and stays cache-friendly

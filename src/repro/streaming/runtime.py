@@ -32,9 +32,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .apps import StreamingApp
-from .routing import (Route, WatermarkMerger, compile_routes,
+from .checkpoint import Checkpoint, CheckpointCoordinator
+from .routing import (BarrierAligner, Route, WatermarkMerger, compile_routes,
                       extract_event_times, validate_operator_names)
-from .state import EventTimeWindowState, OperatorState, make_operator_state
+from .state import (EventTimeWindowState, OperatorState, make_operator_state,
+                    restore_state, state_payload)
 
 _POISON = object()
 
@@ -48,6 +50,23 @@ class _Watermark:
     def __init__(self, lane: str, value: float):
         self.lane = lane
         self.value = value
+
+
+class _Barrier:
+    """In-band checkpoint barrier: the second kind of mark.
+
+    Rides exactly the lanes a watermark rides (``Route.watermark_lanes``,
+    in-band tagged ring slots across processes), but consumers *align*
+    instead of min-merging: state snapshots only once barrier ``ckpt_id``
+    has arrived on every producer lane — see
+    :class:`~.routing.BarrierAligner`.
+    """
+
+    __slots__ = ("lane", "ckpt_id")
+
+    def __init__(self, lane: str, ckpt_id: int):
+        self.lane = lane
+        self.ckpt_id = ckpt_id
 
 
 @dataclasses.dataclass
@@ -68,6 +87,11 @@ class RuntimeResult:
     #: ``run_app(initial_offsets=)`` and the resumed run continues the
     #: deterministic source sequence exactly where this one stopped.
     spout_offsets: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: completed aligned checkpoints, in id order (empty unless the run had
+    #: ``checkpoint_every`` set).  Each is a
+    #: :class:`repro.streaming.checkpoint.Checkpoint` — feed one back as
+    #: ``run_app(from_checkpoint=)`` to resume from that cut.
+    checkpoints: List[Checkpoint] = dataclasses.field(default_factory=list)
 
 
 class _Lease:
@@ -110,9 +134,17 @@ class _Arena:
     of buffers instead of allocating one per flush and copying on every
     hand-off.  Buffers whose shape/dtype no longer match, or beyond the
     pool bound, are simply dropped to the garbage collector.
+
+    ``outstanding_total()`` counts leased-out buffers across every arena
+    (acquire +1, last release -1): a drained run — even one that died on a
+    kernel exception — must return it to its pre-run baseline, or a lease
+    leaked (the regression the per-item release guards exist to prevent).
     """
 
     __slots__ = ("cap", "max_pooled", "_free", "_lock")
+
+    _outstanding = 0                       # leased-out buffers, all arenas
+    _class_lock = threading.Lock()
 
     def __init__(self, cap: int, max_pooled: int = 8):
         self.cap = cap
@@ -120,8 +152,15 @@ class _Arena:
         self._free: List[np.ndarray] = []
         self._lock = threading.Lock()
 
+    @classmethod
+    def outstanding_total(cls) -> int:
+        with cls._class_lock:
+            return cls._outstanding
+
     def acquire(self, row_shape: Tuple[int, ...],
                 dtype: np.dtype) -> Tuple[np.ndarray, _Lease]:
+        with _Arena._class_lock:
+            _Arena._outstanding += 1
         with self._lock:
             for i in range(len(self._free) - 1, -1, -1):
                 buf = self._free[i]
@@ -132,6 +171,8 @@ class _Arena:
         return buf, _Lease(buf, self)
 
     def recycle(self, buf: np.ndarray) -> None:
+        with _Arena._class_lock:
+            _Arena._outstanding -= 1
         with self._lock:
             if len(self._free) < self.max_pooled:
                 self._free.append(buf)
@@ -274,7 +315,10 @@ class Executor(threading.Thread):
                  wm_every: int = 1,
                  wm_interval: Optional[float] = None,
                  device_depth: int = 0,
-                 start_batch: int = 0):
+                 start_batch: int = 0,
+                 ckpt: Optional[CheckpointCoordinator] = None,
+                 final_watermark: bool = True,
+                 initial_aux: Optional[dict] = None):
         super().__init__(daemon=True, name=name)
         self.ports = ports
         self.batch = batch
@@ -319,6 +363,42 @@ class Executor(threading.Thread):
         # a prefix-continuation of the original
         self.start_batch = start_batch
         self.emitted_batches = start_batch
+        # checkpointing: spouts inject numbered barriers every
+        # ckpt.every batches; tasks align them per producer lane and
+        # snapshot state at the aligned cut.  While a lane has aligned the
+        # active round, its subsequent items are *held* (the Chandy-
+        # Lamport discipline) — data items therefore carry their producer
+        # lane as a 4th tuple element whenever checkpointing is on.
+        self.ckpt = ckpt
+        self.final_watermark = final_watermark
+        self._aligner = BarrierAligner(max(expected_poisons, 1)) \
+            if ckpt is not None else None
+        self._held: List[object] = []
+        if initial_aux:
+            self._apply_aux(initial_aux)
+
+    def _apply_aux(self, aux: dict) -> None:
+        """Install checkpointed watermark bookkeeping: spout mark cadence
+        counters and the task-side merged-lane map + forwarded frontier.
+        Without these a resumed run would re-merge lanes from -inf and
+        advance the fired frontier on a different schedule than the
+        uninterrupted run — same panes eventually, but a *different* late
+        classification for tuples racing the frontier."""
+        if "wm" in aux:
+            self._wm = aux["wm"]
+            self._wm_sent = aux["wm_sent"]
+            self._wm_batches = aux["wm_batches"]
+        if "wm_lanes" in aux:
+            for lane, value in aux["wm_lanes"].items():
+                self._wm_merge.update(lane, value)
+            self._wm_fwd = aux["wm_fwd"]
+
+    def _aux_payload(self) -> dict:
+        if self.is_spout:
+            return {"wm": self._wm, "wm_sent": self._wm_sent,
+                    "wm_batches": self._wm_batches}
+        return {"wm_lanes": dict(self._wm_merge._lanes),
+                "wm_fwd": self._wm_fwd}
 
     @property
     def is_spout(self) -> bool:
@@ -354,9 +434,14 @@ class Executor(threading.Thread):
                     self._wm_sent = self._wm
                     self._wm_batches = 0
                     self._emit_watermark(self._wm)
+            if self.ckpt is not None and b % self.ckpt.every == 0:
+                self._emit_barrier(b)
         self._drain()
-        if self.event_time is not None:
-            # end of stream: +inf flushes every buffered pane downstream
+        if self.event_time is not None and self.final_watermark:
+            # end of stream: +inf flushes every buffered pane downstream.
+            # final_watermark=False suspends instead: pane buffers stay
+            # resident for migrate_states / a later resume (the +inf mark
+            # would close the frontier and leave nothing to carry)
             self._emit_watermark(math.inf)
         if self.on_delivered is not None:
             # tuples that entered the dataflow: max over streams — fan-out
@@ -369,6 +454,45 @@ class Executor(threading.Thread):
         self._poison()
 
     def _run_task(self):
+        try:
+            self._task_loop()
+        except BaseException:
+            # the executor is dying (a kernel raised mid-batch): release
+            # every in-flight device lease so the pooled buffers recycle —
+            # the exception path must not strand arena buffers
+            self._release_inflight()
+            raise
+
+    def _release_inflight(self) -> None:
+        while self._inflight:
+            _, _, lease = self._inflight.popleft()
+            if lease is not None:
+                lease.release()
+
+    def _lane_of(self, item) -> Optional[str]:
+        """Producer lane of an in-band item, when it carries one: marks
+        and barriers always do; data items only when checkpointing tagged
+        them (4-tuples).  Poisons never — they are not held back (FIFO per
+        lane puts a lane's barrier before its poison, so alignment cannot
+        be waiting on a poisoned lane's barrier)."""
+        if isinstance(item, (_Watermark, _Barrier)):
+            return item.lane
+        if type(item) is tuple and len(item) == 4:
+            return item[3]
+        return None
+
+    def _run_task_loop_item(self, item) -> None:
+        lane = self._lane_of(item)
+        if self._aligner is not None and lane is not None \
+                and self._aligner.holding(lane):
+            self._held.append(item)      # post-barrier: wait for the cut
+            return
+        if isinstance(item, _Barrier):
+            self._on_barrier(item)
+            return
+        self._handle(item)
+
+    def _task_loop(self):
         poisons = 0
         while True:
             item = self.in_q.get()
@@ -376,43 +500,125 @@ class Executor(threading.Thread):
                 poisons += 1
                 if poisons < self.expected_poisons:
                     continue         # wait for every producer replica to end
+                self._flush_held()   # abandoned barrier round at stream end
                 self._shutdown()
                 return
-            if isinstance(item, _Watermark):
-                self._on_watermark(item)
-                continue
-            arr, t0, lease = item
-            if self.lat_sink is not None:
-                self.lat_sink.append(time.perf_counter() - t0)
-            if self._et_win is not None:
-                # event-time windowed operator: arriving batches only fill
-                # the buffer; the kernel runs per fired pane on watermark
-                # passage (complete panes in, whatever the batch cut was).
-                # The window retains rows past this item's release point,
-                # so a pooled view is privatized first (the only consumer
-                # that holds input rows beyond the batch boundary).
-                if lease is not None:
-                    arr = arr.copy()
-                    lease.release()
-                self._et_win.insert(arr, t0)
-                continue
-            if self.device_depth:
-                # async device dispatch: enqueue the (lazy) kernel result
-                # and only materialize the oldest once the bounded window
-                # is full — host-side route/split/emit of batch N overlaps
-                # the device computing batch N+1.  The input lease is held
-                # until retirement so the pooled buffer cannot recycle
-                # while the device may still read it.
-                self._inflight.append((self.kernel(arr, self.state),
-                                       t0, lease))
-                while len(self._inflight) >= self.device_depth:
-                    self._retire_one()
-                continue
+            self._run_task_loop_item(item)
+
+    def _handle(self, item) -> None:
+        if isinstance(item, _Watermark):
+            self._on_watermark(item)
+            return
+        arr, t0, lease = item[0], item[1], item[2]
+        if self.lat_sink is not None:
+            self.lat_sink.append(time.perf_counter() - t0)
+        if self._et_win is not None:
+            # event-time windowed operator: arriving batches only fill
+            # the buffer; the kernel runs per fired pane on watermark
+            # passage (complete panes in, whatever the batch cut was).
+            # The window retains rows past this item's release point,
+            # so a pooled view is privatized first (the only consumer
+            # that holds input rows beyond the batch boundary).
+            if lease is not None:
+                arr = arr.copy()
+                lease.release()
+            self._et_win.insert(arr, t0)
+            return
+        if self.device_depth:
+            # async device dispatch: enqueue the (lazy) kernel result
+            # and only materialize the oldest once the bounded window
+            # is full — host-side route/split/emit of batch N overlaps
+            # the device computing batch N+1.  The input lease is held
+            # until retirement so the pooled buffer cannot recycle
+            # while the device may still read it.
             try:
-                self._dispatch(self.kernel(arr, self.state), t0, lease)
-            finally:
+                lazy = self.kernel(arr, self.state)
+            except BaseException:
                 if lease is not None:
                     lease.release()
+                raise
+            self._inflight.append((lazy, t0, lease))
+            while len(self._inflight) >= self.device_depth:
+                self._retire_one()
+            return
+        try:
+            self._dispatch(self.kernel(arr, self.state), t0, lease)
+        finally:
+            if lease is not None:
+                lease.release()
+
+    # -- checkpoint barriers ----------------------------------------------
+    def _emit_barrier(self, b: int) -> None:
+        """Spout side of a checkpoint: retire offset ``b`` into the
+        snapshot (every emitted batch is flushed first — drain-on-snapshot,
+        so the recorded offset never includes a batch whose rows are still
+        buffered on this side of the cut) and forward the numbered barrier
+        on every lane a watermark would ride."""
+        ckpt_id = b // self.ckpt.every
+        self._drain()
+        self.ckpt.deposit(
+            ckpt_id, self.name,
+            payload=state_payload(self.state, copy=True),
+            aux=self._aux_payload(), offset=b)
+        for port in self.ports:
+            for j in port.route.watermark_lanes():
+                self._put_wm(port.queues[j], _Barrier(self.name, ckpt_id))
+
+    def _on_barrier(self, msg: _Barrier) -> None:
+        """Align one lane's barrier; on the last lane, cut.
+
+        The cut: retire the whole device dispatch window (in-flight lazy
+        results belong before the barrier), deposit a deep-copied state
+        payload, forward the barrier downstream (after draining buffered
+        jumbos, which logically precede it), then re-process the items
+        held back during alignment — a held barrier can immediately open
+        (or even complete) the next round, re-holding its lane, so this
+        loops until no held item is processable."""
+        if not self._aligner.arrive(msg.lane, msg.ckpt_id):
+            return
+        self._cut(msg.ckpt_id)
+        while self._held:
+            pending, self._held = self._held, []
+            progressed = False
+            for item in pending:
+                lane = self._lane_of(item)
+                if lane is not None and self._aligner.holding(lane):
+                    self._held.append(item)
+                    continue
+                progressed = True
+                if isinstance(item, _Barrier):
+                    if self._aligner.arrive(item.lane, item.ckpt_id):
+                        self._cut(item.ckpt_id)
+                else:
+                    self._handle(item)
+            if not progressed:
+                return   # the rest waits on a still-incomplete round
+
+    def _cut(self, ckpt_id: int) -> None:
+        self._retire_all()
+        self.ckpt.deposit(
+            ckpt_id, self.name,
+            payload=state_payload(self.state, copy=True),
+            aux=self._aux_payload())
+        self._drain()
+        for port in self.ports:
+            for j in port.route.watermark_lanes():
+                self._put_wm(port.queues[j], _Barrier(self.name, ckpt_id))
+
+    def _flush_held(self) -> None:
+        """End of stream with an incomplete barrier round (duration cut
+        dropped a barrier, or the stream simply drained between barriers):
+        the round can never complete, so abandon it — process the held
+        data and marks in arrival order, dropping the orphaned barriers.
+        Recovery only ever reads *completed* checkpoints, so an abandoned
+        round is invisible to it."""
+        if self._aligner is None or not self._held:
+            return
+        self._aligner.reset()
+        held, self._held = self._held, []
+        for item in held:
+            if not isinstance(item, _Barrier):
+                self._handle(item)
 
     def _retire_one(self) -> None:
         """Materialize + dispatch the oldest in-flight device result (FIFO
@@ -572,7 +778,11 @@ class Executor(threading.Thread):
     def _put(self, port: _OutPort, j: int, arr: np.ndarray,
              t0: float, lease: Optional[_Lease] = None) -> None:
         q = port.queues[j]
-        item = (arr, t0, lease)
+        # checkpointing lane-tags data items: a consumer's single FIFO
+        # input interleaves producer lanes, and alignment must know which
+        # lane each item came from to hold back post-barrier items
+        item = (arr, t0, lease, self.name) if self.ckpt is not None \
+            else (arr, t0, lease)
         if self.is_spout:                # interruptible put: stop wins
             while True:
                 try:
@@ -797,7 +1007,10 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
                     add_spout_count: Callable[[int], None],
                     in_q_of: Callable, out_q_of: Callable,
                     only=None, dispatch_depth: Optional[int] = None,
-                    initial_offsets: Optional[Dict[str, int]] = None
+                    initial_offsets: Optional[Dict[str, int]] = None,
+                    coordinator: Optional[CheckpointCoordinator] = None,
+                    final_watermark: bool = True,
+                    initial_aux: Optional[Dict[Tuple[str, int], dict]] = None
                     ) -> Tuple[List[Executor], List[Executor]]:
     """Instantiate the executors of a prepared app (the run phase's cast).
 
@@ -813,9 +1026,17 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
     window (the sync-vs-async A/B flag); ``initial_offsets`` resumes spout
     replicas at recorded emitted-batch counters (see
     :func:`resolve_offsets`).
+
+    ``coordinator`` enables aligned-barrier checkpointing (spouts inject
+    barriers every ``coordinator.every`` batches, every executor deposits
+    its aligned snapshot into it); ``initial_aux`` restores per-replica
+    watermark bookkeeping from a checkpoint; ``final_watermark=False``
+    suspends instead of draining — spouts skip the end-of-stream ``+inf``
+    mark so event-time pane buffers stay resident for migration/resume.
     """
     lg, parallelism = prep.lg, prep.parallelism
     offsets = resolve_offsets(lg, parallelism, initial_offsets)
+    aux = initial_aux or {}
     spouts: List[Executor] = []
     tasks: List[Executor] = []
     for name, spec in lg.operators.items():
@@ -839,7 +1060,9 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
                     wm_every=prep.wm_every.get(name, 1),
                     wm_interval=getattr(app, "watermark_interval",
                                         {}).get(name),
-                    start_batch=offsets.get((name, i), 0)))
+                    start_batch=offsets.get((name, i), 0),
+                    ckpt=coordinator, final_watermark=final_watermark,
+                    initial_aux=aux.get((name, i))))
             else:
                 depth = 0
                 if getattr(spec, "device", False):
@@ -851,13 +1074,15 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
                     in_q=in_q_of(name, i),
                     expected_poisons=max(n_producer_units, 1),
                     lat_sink=latencies if is_sink else None,
-                    device_depth=depth))
+                    device_depth=depth,
+                    ckpt=coordinator, initial_aux=aux.get((name, i))))
     return spouts, tasks
 
 
 def collect_result(prep: PreparedApp, spout_tuples: int,
                    latencies: List[float], wall: float,
-                   spout_offsets: Optional[Dict[str, int]] = None
+                   spout_offsets: Optional[Dict[str, int]] = None,
+                   checkpoints: Optional[List[Checkpoint]] = None
                    ) -> RuntimeResult:
     """Assemble the common :class:`RuntimeResult` from final states —
     shared by the threaded and process backends."""
@@ -880,7 +1105,77 @@ def collect_result(prep: PreparedApp, spout_tuples: int,
         latency_p50=float(np.percentile(lat, 50)),
         latency_p99=float(np.percentile(lat, 99)),
         states=states, late_drops=late, panes_fired=panes,
-        spout_offsets=dict(spout_offsets or {}))
+        spout_offsets=dict(spout_offsets or {}),
+        checkpoints=list(checkpoints or []))
+
+
+def resolve_checkpoint_every(app: StreamingApp, checkpoint_every) -> \
+        Optional[int]:
+    """The effective barrier cadence: the ``run_app`` argument wins, else
+    the Topology declaration (``Topology(checkpoint_every=)``)."""
+    every = checkpoint_every if checkpoint_every is not None \
+        else getattr(app, "checkpoint_every", None)
+    if every is None:
+        return None
+    if isinstance(every, bool) or not isinstance(every, int) or every < 1:
+        raise ValueError(
+            f"checkpoint_every must be an int >= 1 (batches between "
+            f"barriers), got {every!r}")
+    return every
+
+
+def validate_from_checkpoint(app: StreamingApp, ckpt: Checkpoint, *,
+                             batch: int, seed: int,
+                             parallelism: Optional[Dict[str, int]],
+                             initial_states, initial_offsets
+                             ) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Validate a resume request against its checkpoint and derive the
+    effective (parallelism, initial_offsets).  Replay determinism requires
+    the same app/seed/batch; the snapshot payloads are per-replica, so the
+    checkpoint's parallelism is adopted (an explicit conflicting one is
+    an error — resharding snapshots is ``migrate_states``' job, not a
+    resume's)."""
+    if not isinstance(ckpt, Checkpoint):
+        raise ValueError(
+            "from_checkpoint expects a Checkpoint (restore_checkpoint() "
+            f"or RuntimeResult.checkpoints[-1]), got {type(ckpt).__name__}")
+    if initial_states is not None or initial_offsets is not None:
+        raise ValueError(
+            "from_checkpoint conflicts with explicit initial_states/"
+            "initial_offsets: the checkpoint carries both halves of the "
+            "cut — passing either separately would tear it")
+    if ckpt.app != app.name:
+        raise ValueError(
+            f"checkpoint belongs to app {ckpt.app!r}, not {app.name!r}")
+    if ckpt.seed != seed:
+        raise ValueError(
+            f"checkpoint was taken at seed {ckpt.seed}, resume requested "
+            f"seed {seed}: offset replay would produce different batches")
+    if ckpt.batch != batch:
+        raise ValueError(
+            f"checkpoint was taken at batch={ckpt.batch}, resume requested "
+            f"batch={batch}: the deterministic source sequence differs")
+    if parallelism:
+        for name, k in ckpt.parallelism.items():
+            if parallelism.get(name, 1) != k:
+                raise ValueError(
+                    f"checkpoint holds {k} replica snapshots for "
+                    f"{name!r} but parallelism requests "
+                    f"{parallelism.get(name, 1)} — snapshots are "
+                    "per-replica (use migrate_states to reshard)")
+    return dict(ckpt.parallelism), dict(ckpt.spout_offsets)
+
+
+def install_checkpoint(prep: PreparedApp, ckpt: Checkpoint
+                       ) -> Dict[Tuple[str, int], dict]:
+    """Restore every snapshot payload onto the prepared per-replica
+    states (in place, pre-start — workers fork after this in the process
+    backend) and return the ``initial_aux`` watermark bookkeeping map."""
+    for uid, payload in ckpt.states.items():
+        name, _, idx = uid.partition("#")
+        restore_state(prep.states[name][int(idx)], payload)
+    return {(uid.partition("#")[0], int(uid.partition("#")[2])): aux
+            for uid, aux in ckpt.aux.items()}
 
 
 def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
@@ -890,7 +1185,11 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             max_batches: Optional[int] = None,
             initial_states: Optional[Dict[str, List[dict]]] = None,
             dispatch_depth: Optional[int] = None,
-            initial_offsets: Optional[Dict[str, int]] = None
+            initial_offsets: Optional[Dict[str, int]] = None,
+            checkpoint_every: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            from_checkpoint: Optional[Checkpoint] = None,
+            final_watermark: bool = True
             ) -> RuntimeResult:
     """Execute ``app`` for ``duration`` seconds and return measured stats.
 
@@ -921,9 +1220,35 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     at a recorded emitted-batch counter (``RuntimeResult.spout_offsets``
     from a previous run): the resumed run emits the batches the original
     would have emitted next, making duration-mode runs prefix-continuable.
+
+    ``checkpoint_every`` (or ``Topology(checkpoint_every=)``) turns on
+    aligned-barrier checkpointing: every spout injects a numbered barrier
+    after each ``checkpoint_every``-th batch, every executor snapshots its
+    state at the aligned cut, and each completed checkpoint lands in
+    ``RuntimeResult.checkpoints`` (and, with ``checkpoint_dir``, on disk —
+    atomically, so a kill mid-run leaves only complete files).
+    ``from_checkpoint`` resumes from such a snapshot: states, offsets and
+    watermark bookkeeping restore to the cut, and the resumed run's
+    output (sink counters, keyed stores, pane multiset, late drops) is
+    byte-identical to never having stopped.  ``final_watermark=False``
+    suspends an event-time run instead of draining it (no end-of-stream
+    ``+inf`` mark), keeping pane buffers resident for ``migrate_states``.
     """
+    every = resolve_checkpoint_every(app, checkpoint_every)
+    if from_checkpoint is not None:
+        parallelism, initial_offsets = validate_from_checkpoint(
+            app, from_checkpoint, batch=batch, seed=seed,
+            parallelism=parallelism, initial_states=initial_states,
+            initial_offsets=initial_offsets)
+        if every is None:
+            every = from_checkpoint.checkpoint_every
     prep = prepare_app(app, parallelism, partition, initial_states,
                        batch=batch)
+    initial_aux = install_checkpoint(prep, from_checkpoint) \
+        if from_checkpoint is not None else None
+    coordinator = CheckpointCoordinator(
+        app, prep.parallelism, batch=batch, seed=seed, every=every,
+        directory=checkpoint_dir) if every else None
     lg, parallelism = prep.lg, prep.parallelism
 
     # one input queue per non-spout replica
@@ -949,7 +1274,9 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         in_q_of=lambda name, i: in_qs[(name, i)],
         out_q_of=lambda name, i, cop: [in_qs[(cop, j)]
                                        for j in range(parallelism[cop])],
-        dispatch_depth=dispatch_depth, initial_offsets=initial_offsets)
+        dispatch_depth=dispatch_depth, initial_offsets=initial_offsets,
+        coordinator=coordinator, final_watermark=final_watermark,
+        initial_aux=initial_aux)
 
     for t in tasks:
         t.start()
@@ -972,4 +1299,6 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     wall = time.perf_counter() - t_start
     return collect_result(prep, spout_counts[0], latencies, wall,
                           spout_offsets={s.name: s.emitted_batches
-                                         for s in spouts})
+                                         for s in spouts},
+                          checkpoints=coordinator.completed
+                          if coordinator else None)

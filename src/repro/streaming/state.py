@@ -76,6 +76,7 @@ artefact that every layer shares:
 """
 from __future__ import annotations
 
+import copy as _copylib
 import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -893,6 +894,83 @@ def repartition_keyed(spec: StateSpec, merged: np.ndarray,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Snapshot payloads: one replica's state as plain picklable data
+# ---------------------------------------------------------------------------
+
+
+def state_payload(st: OperatorState, *, copy: bool = False) -> dict:
+    """Reduce one replica's state handle to plain picklable data.
+
+    Ships arrays and scalars only — managed store tables, window buffers
+    (compacted), scratch dict entries, the late/pane counters — never the
+    stores themselves (their specs can hold closure ``init`` factories,
+    which fork inherits but pickle rejects).
+
+    ``copy=True`` deep-copies every array and scratch value: required for
+    *live* snapshots (checkpoint barriers), where the run keeps mutating
+    tables and buffers after the payload is taken.  The process backend's
+    end-of-run hand-off keeps ``copy=False`` — the worker is done with the
+    state, so aliasing is safe and cheaper.
+    """
+    scratch = dict(st)
+    if copy:
+        scratch = _copylib.deepcopy(scratch)
+    p: dict = {"scratch": scratch}
+
+    def _arr(a):
+        if copy and isinstance(a, np.ndarray):
+            return a.copy()
+        return a
+
+    m = st.managed
+    if isinstance(m, KeyedStore):
+        p["managed"] = ("keyed", _arr(m.table))
+    elif isinstance(m, BroadcastTable):
+        p["managed"] = ("broadcast", _arr(m.data), m.version)
+    elif isinstance(m, ValueStore):
+        p["managed"] = ("value",
+                        _copylib.deepcopy(m.value) if copy else m.value)
+    w = st.window
+    if isinstance(w, EventTimeWindowState):
+        w._compact()
+        p["window"] = ("et", _arr(w._ets), _arr(w._rows), _arr(w._t0s),
+                       _arr(w._keys), w._fired_bound, w.late_drops,
+                       w.panes_fired)
+    elif isinstance(w, WindowState):
+        p["window"] = ("count", _arr(w._hist), _arr(w._buf), w._base)
+    return p
+
+
+def restore_state(st: OperatorState, payload: dict) -> None:
+    """Install a payload onto a matching handle, in place — the handle
+    keeps its spec, shard identity and key extractor, so
+    ``migrate_states`` and the result assembly read it exactly as if the
+    snapshot had never crossed a process (or checkpoint) boundary."""
+    st.clear()
+    st.update(payload["scratch"])
+    m = payload.get("managed")
+    if m is not None:
+        kind = m[0]
+        if kind == "keyed":
+            st.managed.table = m[1]
+        elif kind == "broadcast":
+            st.managed.data = m[1]
+            st.managed.version = m[2]
+        else:
+            st.managed.value = m[1]
+    w = payload.get("window")
+    if w is not None:
+        if w[0] == "et":
+            win = st.window
+            win._pending = []
+            (win._ets, win._rows, win._t0s, win._keys,
+             win._fired_bound, win.late_drops, win.panes_fired) = w[1:]
+        else:
+            win = st.window
+            win._hist, win._buf, win._base = w[1:]
+
+
 class UndeclaredStateError(RuntimeError):
     """``migrate_states(audit=True)`` found non-empty undeclared scratch
     state that would be silently left behind by the migration."""
@@ -971,14 +1049,90 @@ def migrate_states(app, states: Dict[str, List[OperatorState]],
                 fresh[j].managed = old[j].managed
                 if not isinstance(old[j].window, EventTimeWindowState):
                     fresh[j].window = old[j].window
-                # event-time buffers do NOT carry: a drained run's +inf
-                # watermark already fired every pane and closed the
-                # frontier (fired_bound = inf), so a carried buffer would
-                # classify the entire resumed stream as late — and a
-                # replica-index-wise carry would break keyed pane
-                # ownership under a parallelism change.  Fresh buffers
-                # (run_app re-attaches the compiled route's key extractor)
-                # restart the pane grid from the resumed stream, matching
-                # the stop-the-world replay contract.
+        if spec.window is not None and spec.window.time:
+            _carry_event_windows(old, fresh)
         out[name] = fresh
     return out
+
+
+def _carry_event_windows(old: List[OperatorState],
+                         fresh: List[OperatorState]) -> None:
+    """Carry event-time pane buffers and the watermark frontier across a
+    migration.
+
+    Buffered (not-yet-fired) rows, the fired frontier and the late/pane
+    counters are state exactly like a keyed table: dropping them loses
+    every out-of-order tuple still waiting inside its lateness bound, so a
+    migrated run would fire a different pane multiset than an
+    uninterrupted one.  Keyed pane groups merge all old replicas' buffers
+    and reshard rows by ``key % k_new`` (the compiled keyed route's
+    ownership); unkeyed windows carry index-wise at equal fan-out and
+    collapse onto replica 0 otherwise.  The frontier carries as the max
+    over replicas — under quiesced migration every replica saw the same
+    merged watermark, so the max equals each.  Suspend the old run with
+    ``final_watermark=False`` (otherwise the end-of-stream ``+inf`` mark
+    has already fired every pane and there is nothing left to carry).
+    """
+    wins = [st.window for st in old
+            if isinstance(st.window, EventTimeWindowState)]
+    if not wins:
+        return
+    for w in wins:
+        w._compact()
+    fired = max(w._fired_bound for w in wins)
+    if fired == math.inf:
+        # fully drained run: the end-of-stream +inf mark already fired
+        # every pane and emptied the buffers — nothing to carry, and a
+        # carried +inf frontier would classify the entire next stream as
+        # late.  Migrated windows start fresh (the pre-suspend contract).
+        return
+    total_late = sum(w.late_drops for w in wins)
+    total_panes = sum(w.panes_fired for w in wins)
+    keyed = wins[0].spec.keyed
+    chunks = [(w._ets, w._rows, w._t0s, w._keys) for w in wins
+              if w._ets is not None and len(w._ets)]
+    if chunks:
+        ets = np.concatenate([c[0] for c in chunks])
+        rows = np.concatenate([c[1] for c in chunks])
+        t0s = np.concatenate([c[2] for c in chunks])
+        keys = np.concatenate([c[3] for c in chunks]) if keyed else None
+    else:
+        ets = rows = t0s = keys = None
+    k_new = len(fresh)
+    index_wise = not keyed and k_new == len(old) and len(wins) == len(old)
+    for j, st in enumerate(fresh):
+        win = st.window
+        if not isinstance(win, EventTimeWindowState):
+            continue
+        win._fired_bound = fired
+        if index_wise:
+            src = old[j].window
+            win._fired_bound = src._fired_bound
+            if src._ets is not None and len(src._ets):
+                win._ets = src._ets.copy()
+                win._rows = src._rows.copy()
+                win._t0s = src._t0s.copy()
+                win._keys = src._keys.copy() if src._keys is not None \
+                    else None
+            win.late_drops = src.late_drops
+            win.panes_fired = src.panes_fired
+            continue
+        if ets is None:
+            continue
+        if keyed and k_new > 1:
+            mask = keys % k_new == j
+            win._ets = ets[mask].copy()
+            win._rows = rows[mask].copy()
+            win._t0s = t0s[mask].copy()
+            win._keys = keys[mask].copy()
+        elif j == 0:
+            win._ets = ets.copy()
+            win._rows = rows.copy()
+            win._t0s = t0s.copy()
+            win._keys = keys.copy() if keys is not None else None
+    if not index_wise:
+        # counters live on replica 0: RuntimeResult sums over replicas
+        w0 = fresh[0].window
+        if isinstance(w0, EventTimeWindowState):
+            w0.late_drops = total_late
+            w0.panes_fired = total_panes

@@ -317,10 +317,11 @@ def test_run_app_rejects_keyed_panes_on_shuffled_route():
 
 
 def test_migrated_event_time_windows_start_fresh():
-    """A drained run's +inf flush closed every window frontier; carrying
-    the buffer through migrate_states would mark the whole resumed stream
-    late (and replica-index carry would break keyed pane ownership under
-    a parallelism change) — migrated event-time windows start fresh."""
+    """A *drained* run's +inf flush closed every window frontier and fired
+    every pane; carrying that frontier through migrate_states would mark
+    the whole resumed stream late — so fully-drained event-time windows
+    still start fresh.  (Suspended runs — ``final_watermark=False`` — do
+    carry their buffers and frontier now; see test_checkpoint.py.)"""
     from repro.streaming.state import migrate_states
     app = spike_detection_keyed()
     par1 = {n: 1 for n in app.graph.operators}
