@@ -10,6 +10,13 @@ whose counter mutates a bare dict-held array, at identical profile.
 Results append to the CSV row protocol (``name,us_per_call,derived``) and
 are recorded in ``BENCH_streaming.json`` for the perf trajectory.
 
+The ``fusion`` section (ISSUE 10) A/Bs operator fusion on the chain-heavy
+1:1 pipeline (``chain_pipeline``): every-hop-a-queue vs ``fuse="auto"``
+compiling the whole segment into one executor per replica, on the threaded
+backend (plus the process backend with ``--backend processes``), with a
+byte-parity replay asserted and the ``fused_vs_unfused >= 1.0`` floor
+gated on exit.
+
 The ``inference`` section (ISSUE 8) A/Bs the async device-dispatch
 pipeline: ``streaming_inference`` ingest at ``dispatch_depth`` 1 vs 2 vs 4,
 every data point in a fresh interpreter (jax-clean parents for the process
@@ -475,6 +482,64 @@ def bench_checkpoint(batch: int, duration: float, repeat: int) -> dict:
     return out
 
 
+def bench_fusion(batch: int, duration: float, repeat: int, batches: int,
+                 with_processes: bool) -> dict:
+    """Operator fusion A/B (ISSUE 10): the chain-heavy 1:1 pipeline where
+    every hop is a queue crossing vs ``fuse="auto"`` compiling the whole
+    f1..f4+sink segment into one ``FusedExecutor`` per replica.
+
+    The stage kernels are light affine arithmetic, so the unfused run is
+    dominated by exactly what fusion deletes: per-hop enqueue/dequeue,
+    fan-in polling, watermark min-merge and an arena lease per stage.
+    ``replay_parity`` replays a deterministic budget fused and unfused
+    (and through the process backend when enabled) and byte-compares
+    every replica's state — the speedup must not buy a single changed
+    byte."""
+    from repro.streaming.apps import chain_pipeline
+    from repro.streaming.state import state_payload
+
+    runners = [("threads", run_app)]
+    if with_processes:
+        from repro.streaming.procexec import run_app_processes
+        runners.append(("processes", run_app_processes))
+
+    out = {"batch": batch, "stages": 4}
+    for bname, runner in runners:
+        row = {}
+        for label, fuse in [("unfused", None), ("fused", "auto")]:
+            ingest = []
+            for r in range(repeat):
+                res = runner(chain_pipeline(), {}, batch=batch,
+                             duration=duration, seed=300 + r, fuse=fuse)
+                ingest.append(res.spout_tuples / res.duration)
+            row[label] = {"ingest": round(statistics.median(ingest), 1)}
+            emit(f"fusion_chain_{bname}_{label}_b{batch}", duration * 1e6,
+                 f"{row[label]['ingest']:.0f}tps_in")
+        row["fused_vs_unfused"] = round(
+            row["fused"]["ingest"] / max(row["unfused"]["ingest"], 1e-9), 3)
+        emit(f"fusion_chain_{bname}_speedup_b{batch}", 0.0,
+             f"{row['fused_vs_unfused']:.3f}x")
+        out[bname] = row
+
+    def fp(res):
+        return {op: [repr(state_payload(s)) for s in sts]
+                for op, sts in sorted(res.states.items())}
+
+    base = run_app(chain_pipeline(), {}, batch=batch, max_batches=batches,
+                   seed=11)
+    fused = run_app(chain_pipeline(), {}, batch=batch, max_batches=batches,
+                    seed=11, fuse="auto")
+    parity = fp(fused) == fp(base)
+    if with_processes:
+        proc = run_app_processes(chain_pipeline(), {}, batch=batch,
+                                 max_batches=batches, seed=11, fuse="auto")
+        parity = parity and fp(proc) == fp(base)
+    out["replay_parity"] = parity
+    out["fused_vs_unfused"] = out["threads"]["fused_vs_unfused"]
+    emit(f"fusion_chain_replay_parity_b{batch}", 0.0, str(parity))
+    return out
+
+
 #: run one streaming_inference measurement in a *fresh* interpreter: the
 #: process backend demands a JAX-clean parent (jax's fork-unsafe runtime
 #: deadlocks a forked child's jit call once the parent touched XLA), and a
@@ -641,6 +706,11 @@ def main(argv=None) -> dict:
         # thread startup doesn't drown the barrier cost it prices
         report["checkpoint"] = bench_checkpoint(256, max(duration, 0.4),
                                                 max(repeat, 3))
+        # small batches put the per-hop overhead fusion deletes in the
+        # numerator; medians over >=3 runs keep the gate off the noise
+        report["fusion"] = bench_fusion(
+            64, max(duration, 0.4), max(repeat, 3), batches=20,
+            with_processes=args.backend == "processes")
     inf_repeat = 1 if args.smoke else max(3, min(repeat, 5))
     inf_batches = 20 if args.smoke else 60
     if not procexec_only:
@@ -679,6 +749,35 @@ def main(argv=None) -> dict:
             failures.append(f"checkpoint overhead_ratio {ratio:.3f} > 1.10 "
                             "(barrier/snapshot path costs more than 10% "
                             "ingest at the default 64-batch cadence)")
+        # every cadence row carries an explicit floor.  every16 aligns 4x
+        # as many barriers as the acceptance cadence and measured 0.797x
+        # on the reference host — its 0.75 floor is a documented waiver
+        # that holds the line against FURTHER regression rather than
+        # asserting the 64-cadence bound at 4x the barrier frequency.
+        for row, floor in (("every16", 0.75), ("every64", 0.85),
+                           ("every256", 0.90)):
+            vs = report["checkpoint"][row]["vs_off"]
+            if single_cpu and vs < floor:
+                skipped.append({"gate": f"checkpoint_{row}", "ratio": vs,
+                                "reason": "single-CPU host; snapshots and "
+                                          "ingest share one core"})
+                print(f"# checkpoint {row} vs_off {vs:.3f} — {floor:.2f} "
+                      "floor skipped (single-CPU host)")
+            elif vs < floor:
+                failures.append(
+                    f"checkpoint {row} vs_off {vs:.3f} < {floor:.2f} "
+                    "(cadence row regressed past its documented floor)")
+    if "fusion" in report:
+        if not report["fusion"]["replay_parity"]:
+            failures.append("fusion replay_parity is False (the fused "
+                            "chain changed replayed results)")
+        fr = report["fusion"]["fused_vs_unfused"]
+        # deleting queue hops must never cost throughput: the fused
+        # executor is gated at >= 1.0x the unfused pipeline
+        if fr < 1.0:
+            failures.append(f"fusion fused_vs_unfused {fr:.3f} < 1.00 "
+                            "(FusedExecutor slower than the queue-hop "
+                            "pipeline it replaces)")
     if "apps" in report:
         worst_auto = min(s["auto_vs_best"] for s in report["apps"].values())
         report["meta"]["auto_vs_best_worst"] = worst_auto

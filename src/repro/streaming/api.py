@@ -73,6 +73,9 @@ class StreamingApp:
     watermark_interval: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     checkpoint_every: Optional[int] = None   # declared barrier cadence
+    #: operators that opted out of operator fusion (``op(fuse=False)``) —
+    #: chain detection never fuses an edge touching one of these
+    no_fuse: frozenset = frozenset()
 
     def time_windows(self) -> Dict[str, WindowSpec]:
         """Declared event-time windows (operator -> WindowSpec) — what
@@ -112,6 +115,7 @@ class _OpDecl:
     event_time: Optional[KeyBy] = None      # spouts: event-time extractor
     watermark_every: int = 1                # spouts: mark every N batches
     watermark_interval: Optional[float] = None   # ... or every T et units
+    fuse: bool = True                       # eligible for operator fusion
 
 
 class Topology:
@@ -221,7 +225,7 @@ class Topology:
            key_by: Optional[KeyBy] = None,
            state: Optional[StateSpec] = None,
            device: bool = False, device_ns: float = 0.0,
-           dispatch_depth: int = 1) -> "Topology":
+           dispatch_depth: int = 1, fuse: bool = True) -> "Topology":
         """Declare an operator.  ``kernel(batch, state) -> [out_batch, ...]``
         emits one array per declared *downstream* stream, in the order the
         consumers were declared.  ``partition`` is how *this* operator's
@@ -251,9 +255,16 @@ class Topology:
         (overlap) instead of the serial sum.  Device operators cannot also
         be windowed/segmented-pane kernels in v1 — pane firing happens
         inside the watermark path, which must retire the in-flight window
-        first."""
+        first.
+
+        ``fuse=False`` opts this operator out of operator fusion (see
+        ``docs/API.md`` §3e): no chain detected by ``Job.plan(fuse="auto")``
+        or the backends' ``fuse="auto"`` will include it."""
         try:
             validate_partition_decl(name, partition)
+            if not isinstance(fuse, bool):
+                raise ValueError(
+                    f"operator {name!r}: fuse must be a bool, got {fuse!r}")
             if key_by is not None:
                 if not declares_key(partition):
                     raise ValueError(
@@ -341,7 +352,7 @@ class Topology:
                          device=device, device_ns=float(device_ns),
                          dispatch_depth=dispatch_depth),
             inputs=names, edge_selectivity=esel, partition=partition,
-            source=None, key_by=key_by, state=state))
+            source=None, key_by=key_by, state=state, fuse=fuse))
         return self
 
     def sink(self, name: str, kernel: Optional[Callable] = None,
@@ -419,6 +430,11 @@ class Topology:
         """Declared event-time watermark cadences (spout -> T units)."""
         return {n: d.watermark_interval for n, d in self._decls.items()
                 if d.watermark_interval is not None}
+
+    @property
+    def no_fuse(self) -> frozenset:
+        """Operators that opted out of fusion (``op(fuse=False)``)."""
+        return frozenset(n for n, d in self._decls.items() if not d.fuse)
 
     @property
     def is_executable(self) -> bool:
@@ -539,7 +555,8 @@ class Topology:
                             event_time=self.event_time,
                             watermark_every=self.watermark_every,
                             watermark_interval=self.watermark_interval,
-                            checkpoint_every=self.checkpoint_every)
+                            checkpoint_every=self.checkpoint_every,
+                            no_fuse=self.no_fuse)
 
 
 # ---------------------------------------------------------------------------
@@ -598,6 +615,7 @@ class Job:
         declared_partition: Dict[str, str] = {}
         declared_key_by: Dict[str, KeyBy] = {}
         declared_state: Dict[str, StateSpec] = {}
+        declared_no_fuse: frozenset = frozenset()
         if isinstance(source, Topology):
             if source.is_executable:
                 self.app: Optional[StreamingApp] = source.build()
@@ -610,6 +628,7 @@ class Job:
                 declared_partition = source.partition
                 declared_key_by = source.key_by
                 declared_state = source.state
+                declared_no_fuse = source.no_fuse
             self.name = source.name
         elif isinstance(source, StreamingApp):
             self.app = source
@@ -627,8 +646,10 @@ class Job:
             self.app if self.app is not None else self.graph,
             partition=declared_partition, key_by=declared_key_by)
         if self.app is not None:
+            self.no_fuse = frozenset(getattr(self.app, "no_fuse", ()))
             self.time_windows = self.app.time_windows()
         else:
+            self.no_fuse = declared_no_fuse
             self.time_windows = {
                 op: sp.window for op, sp in declared_state.items()
                 if sp.window is not None and sp.window.time}
@@ -676,7 +697,7 @@ class Job:
              input_rate: Optional[float] = None,
              parallelism: Optional[Dict[str, int]] = None,
              compress_ratio: int = 1, seed: int = 0,
-             cache: bool = True, **kw) -> "Plan":
+             cache: bool = True, fuse: object = "off", **kw) -> "Plan":
         """Produce an execution plan (replication + placement).
 
         ``optimizer``: "rlas" (joint scaling + B&B placement, the paper),
@@ -684,6 +705,17 @@ class Job:
         baselines at fixed ``parallelism``), "random" (Fig. 14 sample;
         honours ``rng=`` for reproducible Monte-Carlo sweeps), or "manual"
         (caller-supplied ``placement=`` list, one socket per unit).
+
+        ``fuse`` prices operator fusion (docs/API.md §3e): "off" (default)
+        plans the graph as declared; "auto" detects maximal 1:1
+        shuffle-routed chains and plans each as a single operator with
+        summed service time and zero intra-chain comm cost — letting the
+        optimizer trade fusion against replication; an explicit list of
+        chains (e.g. ``[["parser", "filter"]]``) fuses exactly those,
+        raising on ineligible edges.  The resulting plan's
+        ``parallelism`` is expanded back to member names and its
+        ``chains`` are handed to ``execute()`` so the runtime realizes
+        the same fused pipeline the planner priced.
 
         Identical requests return the cached :class:`Plan` (pass
         ``cache=False`` to force a fresh search); "random" plans and
@@ -698,25 +730,61 @@ class Job:
                    for k, v in dict(kw, input_rate=input_rate,
                                     parallelism=parallelism,
                                     compress_ratio=compress_ratio,
-                                    seed=seed).items()}
+                                    seed=seed, fuse=fuse).items()}
         key = None if not cache or optimizer == "random" else \
             _plan_cache_key(machine, optimizer, options)
         if key is not None and key in self._plan_cache:
             return self._plan_cache[key]
         plan = self._plan(machine, optimizer, input_rate, parallelism,
-                          compress_ratio, seed, kw)
+                          compress_ratio, seed, fuse, kw)
         plan.options = options
         if key is not None:
             self._plan_cache[key] = plan
         return plan
 
     def _plan(self, machine, optimizer, input_rate, parallelism,
-              compress_ratio, seed, kw) -> "Plan":
+              compress_ratio, seed, fuse, kw) -> "Plan":
+        chains: List[List[str]] = []
+        graph_l, routes = self.graph, self.routes
+        if fuse is not None and fuse != "off":
+            from .fusion import (detect_chains, expand_parallelism,
+                                 fuse_graph, fuse_parallelism,
+                                 validate_chains)
+            if fuse == "auto":
+                chains = detect_chains(
+                    graph_l, routes, no_fuse=self.no_fuse,
+                    time_windows=set(self.time_windows),
+                    parallelism=parallelism)
+            else:
+                chains = validate_chains(
+                    graph_l, routes, fuse, no_fuse=self.no_fuse,
+                    time_windows=set(self.time_windows))
+                if parallelism:
+                    # mismatched replica counts cannot fuse — drop, the
+                    # same forgiveness prepare_app applies at run time
+                    chains = [c for c in chains if len(
+                        {parallelism.get(m, 1) for m in c}) == 1]
+            if chains:
+                graph_l, routes = fuse_graph(graph_l, routes, chains)
+                if parallelism:
+                    parallelism = fuse_parallelism(parallelism, chains)
+        plan = self._plan_graph(graph_l, routes, machine, optimizer,
+                                input_rate, parallelism, compress_ratio,
+                                seed, kw)
+        if chains:
+            # callers (and execute()) speak member names; the fused unit
+            # scales as one, so every member inherits its replica count
+            plan.parallelism = expand_parallelism(plan.parallelism, chains)
+            plan.chains = [list(c) for c in chains]
+        return plan
+
+    def _plan_graph(self, graph_l, routes, machine, optimizer, input_rate,
+                    parallelism, compress_ratio, seed, kw) -> "Plan":
         if optimizer == "rlas":
-            res = rlas_optimize(self.graph, machine, input_rate=input_rate,
+            res = rlas_optimize(graph_l, machine, input_rate=input_rate,
                                 compress_ratio=compress_ratio,
                                 initial_parallelism=parallelism,
-                                routes=self.routes, **kw)
+                                routes=routes, **kw)
             return Plan(self, machine, res.graph,
                         list(res.placement.placement),
                         dict(res.parallelism), "rlas", input_rate,
@@ -734,15 +802,15 @@ class Job:
                 raise TypeError(f"unexpected arguments for optimizer="
                                 f"'random': {sorted(kw)}")
             graph, placement, ev = random_plan(
-                self.graph, machine, rng, input_rate=input_rate,
-                compress_ratio=compress_ratio, routes=self.routes)
+                graph_l, machine, rng, input_rate=input_rate,
+                compress_ratio=compress_ratio, routes=routes)
             return Plan(self, machine, graph, list(placement),
                         dict(graph.parallelism), "random", input_rate,
                         ev, None)
-        par = {name: 1 for name in self.graph.operators}
+        par = {name: 1 for name in graph_l.operators}
         par.update(parallelism or {})
-        graph = ExecutionGraph(self.graph, par, compress_ratio,
-                               routes=self.routes)
+        graph = ExecutionGraph(graph_l, par, compress_ratio,
+                               routes=routes)
         if optimizer == "manual":
             if "placement" not in kw:
                 raise TypeError("optimizer='manual' requires a placement= "
@@ -818,6 +886,11 @@ class Plan:
     eval: object                        # PlanEval from planning, if any
     result: object                      # optimizer-specific result
     options: Dict = dataclasses.field(default_factory=dict)
+    #: fusion chains the plan was priced with (``plan(fuse=...)``); the
+    #: fused names live in ``graph``/``placement`` while ``parallelism``
+    #: is expanded back to member names, and ``execute()`` forwards the
+    #: chains so the runtime realizes the same fused pipeline
+    chains: List[List[str]] = dataclasses.field(default_factory=list)
 
     @property
     def feasible(self) -> bool:
@@ -855,7 +928,7 @@ class Plan:
         placed = {}
         for idx, rep in enumerate(self.graph.replicas):
             placed.setdefault(rep.op, []).append(self.placement[idx])
-        rows = [f"  {op:<16} x{self.parallelism.get(op, 1):<4} "
+        rows = [f"  {op:<16} x{self.graph.parallelism.get(op, 1):<4} "
                 f"sockets={sorted(set(s))}" for op, s in placed.items()]
         return (f"Plan[{self.optimizer}] for {self.job.name!r} on "
                 f"{self.machine.name} ({self.total_threads} threads, "
@@ -1012,8 +1085,18 @@ class Plan:
         if parallelism is None:
             budget = max_threads if max_threads is not None else \
                 2 * (os.cpu_count() or 2)
-            parallelism = _scale_parallelism(self.parallelism, budget,
-                                             self.eval, self.graph)
+            if self.chains:
+                # scale on fused names (one demand share per fused unit,
+                # matching the plan evaluation) and expand after, so every
+                # chain member keeps an equal replica count — a mismatched
+                # down-scaling would silently unfuse the chain at prepare
+                from .fusion import expand_parallelism
+                scaled = _scale_parallelism(dict(self.graph.parallelism),
+                                            budget, self.eval, self.graph)
+                parallelism = expand_parallelism(scaled, self.chains)
+            else:
+                parallelism = _scale_parallelism(self.parallelism, budget,
+                                                 self.eval, self.graph)
             # auto-derived plans clamp non-keyed event-time windowed ops
             # to one replica (run_app rejects them outright): panes fire
             # per replica, so a shuffle split would shatter every pane.
@@ -1028,6 +1111,10 @@ class Plan:
                 if not keyed:
                     parallelism[op] = 1
         kw: Dict[str, object] = {}
+        if self.chains:
+            # only forwarded when the plan priced fusion, so custom
+            # registered backends without a fuse= parameter keep working
+            kw["fuse"] = [list(c) for c in self.chains]
         if backend != "threads":
             kw.update(env=env, timeout=timeout)
             if faithful:

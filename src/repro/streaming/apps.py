@@ -38,7 +38,7 @@ from .state import StateSpec, WindowSpec, segmented
 __all__ = ["ALL_APPS", "StreamingApp", "word_count", "fraud_detection",
            "spike_detection", "spike_detection_eventtime",
            "spike_detection_keyed", "linear_road", "shuffle_within_skew",
-           "streaming_inference", "inf_model_weights"]
+           "streaming_inference", "inf_model_weights", "chain_pipeline"]
 
 
 # ---------------------------------------------------------------------------
@@ -609,7 +609,49 @@ def streaming_inference(model_versions: int = 8,
         .build())
 
 
+# ---------------------------------------------------------------------------
+# Chain pipeline: spout -> f1 -> ... -> fN -> sink, every hop 1:1 shuffle.
+# The worst case for per-hop runtime overhead (queue, fan-in poll, watermark
+# merge, arena lease per stage) and therefore the showcase for operator
+# fusion: with fuse="auto" the whole f1..fN+sink segment collapses into one
+# executor.  Stage kernels are light affine arithmetic so the hop overhead
+# dominates; the sink keeps a float fingerprint so fused and unfused runs
+# can be compared byte-for-byte.
+# ---------------------------------------------------------------------------
+
+
+def chain_pipeline(stages: int = 4) -> StreamingApp:
+    def source(batch, seed):
+        rng = np.random.default_rng(seed)
+        return rng.normal(loc=1.0, scale=0.5, size=batch)
+
+    def make_stage(j):
+        a = 1.0 + 0.01 * j
+        b = 0.1 * j
+
+        def k_stage(batch, state):
+            return [batch * a + b]
+        return k_stage
+
+    def k_sink(batch, state):
+        state["seen"] = state.get("seen", 0) + len(batch)
+        state["total"] = state.get("total", 0.0) + float(
+            np.asarray(batch, np.float64).sum())
+        return []
+
+    t = Topology("chain").spout("spout", source, exec_ns=400.0,
+                                tuple_bytes=8.0)
+    prev = "spout"
+    for j in range(1, stages + 1):
+        name = f"f{j}"
+        t = t.op(name, make_stage(j), inputs=prev, exec_ns=300.0,
+                 tuple_bytes=8.0)
+        prev = name
+    return t.sink("sink", k_sink, inputs=prev, exec_ns=100.0,
+                  tuple_bytes=8.0).build()
+
+
 ALL_APPS = {"wc": word_count, "fd": fraud_detection, "sd": spike_detection,
             "sd_et": spike_detection_eventtime,
             "sd_key": spike_detection_keyed, "lr": linear_road,
-            "inference": streaming_inference}
+            "inference": streaming_inference, "chain": chain_pipeline}

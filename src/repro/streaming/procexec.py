@@ -419,15 +419,30 @@ class _FanIn:
     starve another (the threaded backend's single shared queue has the
     same no-starvation property by FIFO interleaving)."""
 
-    __slots__ = ("sources", "_i")
+    __slots__ = ("sources", "_i", "_solo")
 
     def __init__(self, sources: List[object]):
         self.sources = sources
         self._i = 0
+        # single-lane fast path: one producer endpoint means no fan-in
+        # bookkeeping at all — poll it directly
+        self._solo = sources[0] if len(sources) == 1 else None
 
     def get(self):
         spins = _SPIN
         sleep = _POLL
+        if self._solo is not None:
+            src = self._solo
+            while True:
+                try:
+                    return src.get_nowait()
+                except queue.Empty:
+                    pass
+                if spins:
+                    spins -= 1
+                    continue
+                time.sleep(sleep)
+                sleep = min(sleep * 2, _POLL_MAX)
         while True:
             for _ in range(len(self.sources)):
                 src = self.sources[self._i]
@@ -604,9 +619,15 @@ def plan_placement(plan, parallelism: Dict[str, int]
     socks: Dict[str, List[int]] = {}
     for idx, rep in enumerate(plan.graph.replicas):
         socks.setdefault(rep.op, []).append(plan.placement[idx])
+    # fused plans place whole chains as single units: every member
+    # inherits the fused unit's sockets (chain replicas share a worker)
+    alias = {m: "+".join(c) for c in getattr(plan, "chains", []) for m in c}
     groups: Dict[Replica, int] = {}
     for op, k in parallelism.items():
-        s = sorted(max(0, x) for x in socks.get(op, [0]))  # UNPLACED -> 0
+        placed = socks.get(op)
+        if placed is None and op in alias:
+            placed = socks.get(alias[op])
+        s = sorted(max(0, x) for x in (placed or [0]))  # UNPLACED -> 0
         for j in range(k):
             groups[(op, j)] = s[j % len(s)]
     pins = socket_core_map(plan.machine.n_sockets)
@@ -657,7 +678,8 @@ def run_app_processes(app: StreamingApp,
                       checkpoint_every: Optional[int] = None,
                       checkpoint_dir: Optional[str] = None,
                       from_checkpoint: Optional[Checkpoint] = None,
-                      final_watermark: bool = True
+                      final_watermark: bool = True,
+                      fuse=None
                       ) -> RuntimeResult:
     """Execute ``app`` on forked worker processes (see module docstring).
 
@@ -698,7 +720,7 @@ def run_app_processes(app: StreamingApp,
         if every is None:
             every = from_checkpoint.checkpoint_every
     prep = prepare_app(app, parallelism, partition, initial_states,
-                       batch=batch)
+                       batch=batch, fuse=fuse)
     # restore *before* the fork: workers inherit the restored states
     initial_aux = install_checkpoint(prep, from_checkpoint) \
         if from_checkpoint is not None else None
@@ -709,6 +731,14 @@ def run_app_processes(app: StreamingApp,
     replicas: List[Replica] = [(name, i) for name in lg.operators
                                for i in range(par[name])]
     group_of = _normalize_groups(groups, replicas)
+    # a fused chain replica is one executor: every member replica lands in
+    # the head replica's group (overriding any requested split — fusion
+    # already collapsed those edges to function calls)
+    for chain in prep.chains:
+        head = chain[0]
+        for m in chain[1:]:
+            for i in range(par[head]):
+                group_of[(m, i)] = group_of[(head, i)]
     gids = list(dict.fromkeys(group_of.values()))      # first-appearance order
     if getattr(app, "device_ops", None) and app.device_ops():
         # forking after the parent has initialized JAX/XLA deadlocks the
@@ -734,11 +764,15 @@ def run_app_processes(app: StreamingApp,
     local_qs: Dict[Replica, queue.Queue] = {}
     rings: Dict[Tuple[Replica, Replica], ShmRing] = {}
     ring_cap = max(2, min(queue_cap, ring_slots))
+    intra = {(u, v) for chain in prep.chains
+             for u, v in zip(chain, chain[1:])}
     for v in lg.operators:
         if lg.operators[v].is_spout:
             continue
         for j in range(par[v]):
             for u in lg.producers(v):
+                if (u, v) in intra:
+                    continue       # fused away: no queue, no ring
                 for i in range(par[u]):
                     pr, cr = (u, i), (v, j)
                     if group_of[pr] == group_of[cr]:
@@ -823,7 +857,9 @@ def run_app_processes(app: StreamingApp,
                 "latencies": latencies,
                 "spout_tuples": counts[0],
                 "spout_offsets": {s.name: s.emitted_batches
-                                  for s in spouts}}
+                                  for s in spouts},
+                "exec_stats": {uid: st for x in spouts + tasks
+                               for uid, st in x.stats_payload().items()}}
             with send_lock:
                 conn.send(("ok", payload))
             conn.close()
@@ -844,6 +880,7 @@ def run_app_processes(app: StreamingApp,
     spout_total = 0
     spout_offsets: Dict[str, int] = {}
     latencies: List[float] = []
+    exec_stats: Dict[str, dict] = {}
     deadline = time.monotonic() + (
         timeout if timeout is not None
         else 120.0 + (duration if max_batches is None else 0.0))
@@ -894,6 +931,7 @@ def run_app_processes(app: StreamingApp,
                 latencies.extend(payload["latencies"])
                 spout_total += payload["spout_tuples"]
                 spout_offsets.update(payload.get("spout_offsets", {}))
+                exec_stats.update(payload.get("exec_stats", {}))
             # a silent crash (SIGKILL, segfault) leaves no pipe message
             for c, (gid, p) in list(pending.items()):
                 if not p.is_alive() and not c.poll():
@@ -922,7 +960,8 @@ def run_app_processes(app: StreamingApp,
     return collect_result(prep, spout_total, latencies, wall,
                           spout_offsets=spout_offsets,
                           checkpoints=coordinator.completed
-                          if coordinator else None)
+                          if coordinator else None,
+                          exec_stats=exec_stats)
 
 
 def _run_app_threads(app: StreamingApp, **kw) -> RuntimeResult:

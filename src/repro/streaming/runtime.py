@@ -92,6 +92,14 @@ class RuntimeResult:
     #: :class:`repro.streaming.checkpoint.Checkpoint` — feed one back as
     #: ``run_app(from_checkpoint=)`` to resume from that cut.
     checkpoints: List[Checkpoint] = dataclasses.field(default_factory=list)
+    #: per-replica runtime counters, keyed by executor uid ("op#i"):
+    #: ``batches`` / ``tuples_in`` processed, ``tuples_out`` enqueued
+    #: (summed over output streams), ``queue_wait_s`` blocked on the input
+    #: queue, ``kernel_s`` inside the operator kernel.  Fused chain members
+    #: report under their own uids (queue wait lands on the chain head).
+    #: Fusion wins — and placement decisions — are measurable from a run
+    #: instead of only from the bench harness.
+    exec_stats: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
 
 class _Lease:
@@ -320,6 +328,12 @@ class Executor(threading.Thread):
                  final_watermark: bool = True,
                  initial_aux: Optional[dict] = None):
         super().__init__(daemon=True, name=name)
+        # the merge-lane identity this executor stamps on everything it
+        # emits (marks, barriers, checkpoint-tagged data items).  Equal to
+        # the executor name except for fused chains, which emit as their
+        # *tail* member — downstream lane bookkeeping is identical to the
+        # unfused plan's.
+        self.lane = name
         self.ports = ports
         self.batch = batch
         self.jumbo = jumbo
@@ -347,6 +361,13 @@ class Executor(threading.Thread):
         self._wm_batches = 0
         self._wm_merge = WatermarkMerger(max(expected_poisons, 1))
         self._wm_fwd = -math.inf
+        # single-lane fast path: with exactly one producer lane the merged
+        # watermark IS the lane's value — skip the min-merge bookkeeping
+        # (LR's dispatcher edge and every fused chain's inbound edge)
+        self._single_lane = source is None and max(expected_poisons, 1) == 1
+        self._wm_lane: Optional[str] = None
+        self._stats = {"batches": 0, "tuples_in": 0, "tuples_out": 0,
+                       "queue_wait_s": 0.0, "kernel_s": 0.0}
         win = getattr(state, "window", None)
         self._et_win = win if isinstance(win, EventTimeWindowState) else None
         # device operator: the kernel is an async (jitted) computation and
@@ -391,14 +412,29 @@ class Executor(threading.Thread):
         if "wm_lanes" in aux:
             for lane, value in aux["wm_lanes"].items():
                 self._wm_merge.update(lane, value)
+                self._wm_lane = lane
             self._wm_fwd = aux["wm_fwd"]
 
     def _aux_payload(self) -> dict:
         if self.is_spout:
             return {"wm": self._wm, "wm_sent": self._wm_sent,
                     "wm_batches": self._wm_batches}
+        if self._single_lane:
+            # the lane frontier equals the forwarded frontier (one lane,
+            # monotone) — synthesize the map the merger would have held
+            lanes = {} if self._wm_lane is None \
+                else {self._wm_lane: self._wm_fwd}
+            return {"wm_lanes": lanes, "wm_fwd": self._wm_fwd}
         return {"wm_lanes": dict(self._wm_merge._lanes),
                 "wm_fwd": self._wm_fwd}
+
+    def stats_payload(self) -> Dict[str, dict]:
+        """Per-uid runtime counters for :attr:`RuntimeResult.exec_stats`.
+        ``tuples_out`` counts tuples entering each output stream, summed
+        over streams (fan-out counts once per stream, like the routes)."""
+        s = dict(self._stats)
+        s["tuples_out"] = int(sum(p.tuples_entered() for p in self.ports))
+        return {self.name: s}
 
     @property
     def is_spout(self) -> bool:
@@ -415,10 +451,13 @@ class Executor(threading.Thread):
         while not self.stop_event.is_set() and \
                 (self.max_batches is None or
                  b - self.start_batch < self.max_batches):
+            tk = time.perf_counter()
             arr = self.source(self.batch, self.seed + b)
+            t0 = time.perf_counter()
+            self._stats["kernel_s"] += t0 - tk
+            self._stats["batches"] += 1
             b += 1
             self.emitted_batches = b
-            t0 = time.perf_counter()
             # logical fan-out: every output stream carries the same batch
             self._dispatch([arr] * len(self.ports), t0)
             if self.event_time is not None and len(arr):
@@ -495,7 +534,9 @@ class Executor(threading.Thread):
     def _task_loop(self):
         poisons = 0
         while True:
+            tw = time.perf_counter()
             item = self.in_q.get()
+            self._stats["queue_wait_s"] += time.perf_counter() - tw
             if item is _POISON:
                 poisons += 1
                 if poisons < self.expected_poisons:
@@ -505,11 +546,20 @@ class Executor(threading.Thread):
                 return
             self._run_task_loop_item(item)
 
+    def _call_kernel(self, arr, state):
+        tk = time.perf_counter()
+        try:
+            return self.kernel(arr, state)
+        finally:
+            self._stats["kernel_s"] += time.perf_counter() - tk
+
     def _handle(self, item) -> None:
         if isinstance(item, _Watermark):
             self._on_watermark(item)
             return
         arr, t0, lease = item[0], item[1], item[2]
+        self._stats["batches"] += 1
+        self._stats["tuples_in"] += len(arr)
         if self.lat_sink is not None:
             self.lat_sink.append(time.perf_counter() - t0)
         if self._et_win is not None:
@@ -532,7 +582,7 @@ class Executor(threading.Thread):
             # until retirement so the pooled buffer cannot recycle
             # while the device may still read it.
             try:
-                lazy = self.kernel(arr, self.state)
+                lazy = self._call_kernel(arr, self.state)
             except BaseException:
                 if lease is not None:
                     lease.release()
@@ -542,7 +592,7 @@ class Executor(threading.Thread):
                 self._retire_one()
             return
         try:
-            self._dispatch(self.kernel(arr, self.state), t0, lease)
+            self._dispatch(self._call_kernel(arr, self.state), t0, lease)
         finally:
             if lease is not None:
                 lease.release()
@@ -562,7 +612,7 @@ class Executor(threading.Thread):
             aux=self._aux_payload(), offset=b)
         for port in self.ports:
             for j in port.route.watermark_lanes():
-                self._put_wm(port.queues[j], _Barrier(self.name, ckpt_id))
+                self._put_wm(port.queues[j], _Barrier(self.lane, ckpt_id))
 
     def _on_barrier(self, msg: _Barrier) -> None:
         """Align one lane's barrier; on the last lane, cut.
@@ -603,7 +653,7 @@ class Executor(threading.Thread):
         self._drain()
         for port in self.ports:
             for j in port.route.watermark_lanes():
-                self._put_wm(port.queues[j], _Barrier(self.name, ckpt_id))
+                self._put_wm(port.queues[j], _Barrier(self.lane, ckpt_id))
 
     def _flush_held(self) -> None:
         """End of stream with an incomplete barrier round (duration cut
@@ -637,6 +687,16 @@ class Executor(threading.Thread):
         while self._inflight:
             self._retire_one()
 
+    def _merged_watermark(self, msg: _Watermark) -> float:
+        """Merged frontier after one lane's mark.  With a single producer
+        lane the merged value IS the lane's value (regressions are caught
+        by the caller's frontier check), so the min-merge bookkeeping is
+        skipped entirely."""
+        if self._single_lane:
+            self._wm_lane = msg.lane
+            return msg.value
+        return self._wm_merge.update(msg.lane, msg.value)
+
     def _on_watermark(self, msg: _Watermark) -> None:
         """Merge one lane's watermark; on advance, fire panes and forward.
 
@@ -652,7 +712,7 @@ class Executor(threading.Thread):
         # a mark trails the batches before it in queue order: retire every
         # in-flight device result first so outputs never follow their mark
         self._retire_all()
-        merged = self._wm_merge.update(msg.lane, msg.value)
+        merged = self._merged_watermark(msg)
         if not merged > self._wm_fwd:
             return
         self._wm_fwd = merged
@@ -664,7 +724,7 @@ class Executor(threading.Thread):
                     self.state.pane = batch.segments.span(0) \
                         if batch.n == 1 else None
                     try:
-                        outs = self.kernel(batch.rows, self.state)
+                        outs = self._call_kernel(batch.rows, self.state)
                     finally:
                         self.state.segments = None
                         self.state.pane = None
@@ -673,7 +733,7 @@ class Executor(threading.Thread):
                     acc: List[List[np.ndarray]] = [[] for _ in self.ports]
                     for rows, t0, span in batch:
                         self.state.pane = span
-                        outs = self.kernel(rows, self.state)
+                        outs = self._call_kernel(rows, self.state)
                         if len(outs) != len(self.ports):
                             self._dispatch(outs, t0)  # raises the mismatch
                         for i, arr in enumerate(outs):
@@ -694,7 +754,7 @@ class Executor(threading.Thread):
         self._drain()
         for port in self.ports:
             for j in port.route.watermark_lanes():
-                self._put_wm(port.queues[j], _Watermark(self.name, value))
+                self._put_wm(port.queues[j], _Watermark(self.lane, value))
 
     def _put_wm(self, q: queue.Queue, msg: _Watermark) -> None:
         if self.is_spout:                # interruptible put: stop wins
@@ -781,7 +841,7 @@ class Executor(threading.Thread):
         # checkpointing lane-tags data items: a consumer's single FIFO
         # input interleaves producer lanes, and alignment must know which
         # lane each item came from to hold back post-barrier items
-        item = (arr, t0, lease, self.name) if self.ckpt is not None \
+        item = (arr, t0, lease, self.lane) if self.ckpt is not None \
             else (arr, t0, lease)
         if self.is_spout:                # interruptible put: stop wins
             while True:
@@ -829,6 +889,248 @@ class Executor(threading.Thread):
         for port in self.ports:
             for q in port.queues:
                 q.put(_POISON)
+
+
+class _ChainBuffer:
+    """Lease-free jumbo accumulator for one intra-chain hop of a fused
+    executor.
+
+    Replicates :class:`_JumboBuffer`'s flush-boundary semantics exactly —
+    shape-change flush, whole-batch pass-through, overflow concatenate,
+    oldest-tuple timestamp — because downstream kernel-call granularity
+    *is* those boundaries, and stateful count-window kernels make them
+    byte-parity-critical.  No arena/lease: flushed views feed the next
+    member's kernel in the same thread, and a fresh store is allocated
+    per fill cycle since the tail may pass a flushed view straight into
+    an output queue where it lives arbitrarily long.
+    """
+
+    __slots__ = ("cap", "_store", "_n", "_t0")
+
+    def __init__(self, cap: int):
+        self.cap = cap
+        self._store: Optional[np.ndarray] = None
+        self._n = 0
+        self._t0 = 0.0
+
+    def _flush(self) -> Tuple[np.ndarray, float]:
+        view = self._store[: self._n]
+        view.flags.writeable = False
+        self._store = None
+        self._n = 0
+        return view, self._t0
+
+    def add(self, arr: np.ndarray, t0: float) -> List[Tuple[np.ndarray,
+                                                            float]]:
+        out: List[Tuple[np.ndarray, float]] = []
+        store = self._store
+        if self._n and (store.shape[1:] != arr.shape[1:]
+                        or store.dtype != arr.dtype):
+            out.append(self._flush())
+            store = None
+        if self._n == 0 and len(arr) >= self.cap:
+            out.append((arr, t0))                      # pass-through
+            return out
+        if store is None or store.shape[1:] != arr.shape[1:] \
+                or store.dtype != arr.dtype:
+            self._store = store = np.empty((self.cap,) + arr.shape[1:],
+                                           arr.dtype)
+        if self._n == 0:
+            self._t0 = t0
+        end = self._n + len(arr)
+        if end > self.cap:
+            # overflow: concatenate so the boundary lands where the
+            # unfused lane's would (the store stays for the next cycle —
+            # its prefix was copied out)
+            out.append((np.concatenate([store[: self._n], arr]), self._t0))
+            self._n = 0
+        elif end == self.cap:
+            store[self._n:end] = arr
+            self._n = end
+            out.append(self._flush())
+        else:
+            store[self._n:end] = arr
+            self._n = end
+        return out
+
+    def drain(self) -> Optional[Tuple[np.ndarray, float]]:
+        if self._n == 0:
+            return None
+        return self._flush()
+
+
+class _FusedMember:
+    """One operator of a fused chain as one replica executes it."""
+
+    __slots__ = ("op", "uid", "kernel", "state", "stats")
+
+    def __init__(self, op: str, uid: str, kernel: Callable, state):
+        self.op = op
+        self.uid = uid
+        self.kernel = kernel
+        self.state = state
+        self.stats = {"batches": 0, "tuples_in": 0, "tuples_out": 0,
+                      "queue_wait_s": 0.0, "kernel_s": 0.0}
+
+
+class FusedExecutor(Executor):
+    """One replica of a fused operator chain (the tentpole of operator
+    fusion, after Prasaad et al. 1803.11328).
+
+    Member kernels run back-to-back on the same batch in one thread: no
+    intermediate queue, no per-hop watermark min-merge (the head merges
+    once; marks and checkpoint barriers traverse the chain inline), no
+    arena lease per stage.  Inter-member jumbo boundaries are reproduced
+    by :class:`_ChainBuffer` so every member sees byte-identical kernel
+    calls to the unfused plan, and state handles stay per member — so
+    ``migrate_states``, checkpoints and :class:`RuntimeResult`
+    fingerprints are byte-identical to the unfused run.  The executor
+    consumes as the head (its input queue, its expected poisons) and
+    emits as the tail (``self.lane``), which keeps every downstream
+    lane/poison count exactly what the unfused plan produced.
+    """
+
+    def __init__(self, chain: List[str], index: int, replicas: int,
+                 ports: List[_OutPort], batch: int, jumbo: bool,
+                 states: List[object], kernels: List[Callable], **kw):
+        super().__init__(f"{chain[0]}#{index}", ports, batch, jumbo,
+                         states[0], kernel=kernels[0], **kw)
+        self.chain = list(chain)
+        self._replicas = replicas      # uniform member parallelism
+        self.members = [
+            _FusedMember(op, f"{op}#{index}", kernels[j], states[j])
+            for j, op in enumerate(chain)]
+        self.lane = f"{chain[-1]}#{index}"
+        self._accs = [_ChainBuffer(batch) for _ in chain[:-1]]
+        # base-class counters (queue wait from _task_loop) land on the head
+        self._stats = self.members[0].stats
+
+    def stats_payload(self) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        for j, m in enumerate(self.members):
+            s = dict(m.stats)
+            if j == len(self.members) - 1:
+                s["tuples_out"] = int(sum(p.tuples_entered()
+                                          for p in self.ports))
+            out[m.uid] = s
+        return out
+
+    def _handle(self, item) -> None:
+        if isinstance(item, _Watermark):
+            self._on_watermark(item)
+            return
+        arr, t0, lease = item[0], item[1], item[2]
+        try:
+            self._feed(0, arr, t0, lease)
+        finally:
+            if lease is not None:
+                lease.release()
+
+    def _feed(self, j: int, arr: np.ndarray, t0: float,
+              in_lease: Optional[_Lease]) -> None:
+        """Run member ``j`` on one jumbo and push its output down the
+        chain through the member's :class:`_ChainBuffer` (tail output
+        goes out the normal dispatch path; ``in_lease`` rides along so a
+        tail pass-through of the inbound pooled buffer still retains it).
+        """
+        m = self.members[j]
+        m.stats["batches"] += 1
+        m.stats["tuples_in"] += len(arr)
+        last = j == len(self.members) - 1
+        if last and self.lat_sink is not None:
+            # sink receipt latency samples at the same jumbo boundaries
+            # the unfused sink saw
+            self.lat_sink.append(time.perf_counter() - t0)
+        tk = time.perf_counter()
+        try:
+            outs = m.kernel(arr, m.state)
+        finally:
+            m.stats["kernel_s"] += time.perf_counter() - tk
+        if last:
+            self._dispatch(outs, t0, in_lease)
+            return
+        if len(outs) != 1:
+            raise ValueError(
+                f"{self.name}: fused member {m.op!r} returned {len(outs)} "
+                "output streams for its single intra-chain consumer")
+        out = outs[0]
+        if out is None or len(out) == 0:
+            return
+        m.stats["tuples_out"] += len(out)
+        if not self.jumbo:
+            for row in out:              # per-tuple mode (Fig. 16) parity
+                self._feed(j + 1, np.asarray([row]), t0, in_lease)
+            return
+        for jum, jt0 in self._accs[j].add(out, t0):
+            self._feed(j + 1, jum, jt0, in_lease)
+
+    def _flush_chain(self) -> None:
+        """Drain inter-member accumulators head-to-tail: member ``j``'s
+        partial jumbo feeds ``j+1`` before ``j+1``'s own partial flushes —
+        the same cascade order the unfused pipeline's per-hop drains
+        produce at a mark/cut/stream-end.  Accumulator contents are always
+        private copies, so no input lease is involved."""
+        for j in range(1, len(self.members)):
+            out = self._accs[j - 1].drain()
+            if out is not None:
+                self._feed(j, out[0], out[1], None)
+
+    def _on_watermark(self, msg: _Watermark) -> None:
+        """One merge at the head per mark (single-lane fast path applies
+        when the head has one producer lane); on advance the chain's
+        buffered rows flush member-to-member — they logically precede the
+        mark, exactly like the unfused per-hop drains — before the tail
+        forwards it.  Chains contain no device or event-time-window
+        members by eligibility, so the base pane logic never applies."""
+        merged = self._merged_watermark(msg)
+        if not merged > self._wm_fwd:
+            return
+        self._wm_fwd = merged
+        self._flush_chain()
+        if self.ports:
+            self._emit_watermark(merged)
+
+    def _member_aux(self, j: int) -> dict:
+        """Checkpoint aux for member ``j``: the head's is its real merge
+        bookkeeping; downstream members' is synthesized exactly.  Marks
+        ride every lane and each replica of member ``j-1`` forwards the
+        same merged frontier, so at an aligned cut every inbound lane of
+        member ``j`` sits precisely at this executor's forwarded
+        frontier."""
+        if j == 0:
+            return self._aux_payload()
+        fwd = self._wm_fwd
+        if fwd == -math.inf:
+            return {"wm_lanes": {}, "wm_fwd": fwd}
+        prev = self.chain[j - 1]
+        return {"wm_lanes": {f"{prev}#{r}": fwd
+                             for r in range(self._replicas)},
+                "wm_fwd": fwd}
+
+    def _cut(self, ckpt_id: int) -> None:
+        """Aligned snapshot through the chain: drain each hop's
+        accumulator into the next member (buffered rows logically precede
+        the barrier), deposit every member's state under its own uid —
+        byte-identical to the unfused executors' deposits — then forward
+        the barrier as the tail."""
+        for j, m in enumerate(self.members):
+            if j:
+                out = self._accs[j - 1].drain()
+                if out is not None:
+                    self._feed(j, out[0], out[1], None)
+            self.ckpt.deposit(
+                ckpt_id, m.uid,
+                payload=state_payload(m.state, copy=True),
+                aux=self._member_aux(j))
+        self._drain()
+        for port in self.ports:
+            for jj in port.route.watermark_lanes():
+                self._put_wm(port.queues[jj], _Barrier(self.lane, ckpt_id))
+
+    def _shutdown(self):
+        self._flush_chain()
+        self._drain()
+        self._poison()
 
 
 WM_TARGET_PANES = 128   # adaptive cadence: aim for this many released panes
@@ -891,18 +1193,30 @@ class PreparedApp:
     states: Dict[str, List[OperatorState]]
     win_key_by: Dict[str, object]
     wm_every: Dict[str, int]                # resolved per-spout cadence
+    #: fused chains (lists of member operator names) this run realizes:
+    #: :func:`build_executors` compiles each into one
+    #: :class:`FusedExecutor` per replica instead of per-member executors
+    chains: List[List[str]] = dataclasses.field(default_factory=list)
 
 
 def prepare_app(app: StreamingApp,
                 parallelism: Optional[Dict[str, int]] = None,
                 partition: Optional[Dict[str, str]] = None,
                 initial_states: Optional[Dict[str, List[dict]]] = None,
-                batch: int = 256) -> PreparedApp:
+                batch: int = 256, fuse=None) -> PreparedApp:
     """Validate + compile + build state: the serializable construct phase.
 
     Raises exactly what ``run_app`` raised inline before the split; the
     returned :class:`PreparedApp` feeds :func:`build_executors` in any
-    backend."""
+    backend.
+
+    ``fuse`` selects operator fusion: ``None``/``"off"`` (no fusion),
+    ``"auto"`` (fuse every maximal eligible chain — see
+    :mod:`repro.streaming.fusion`), or an explicit list of chains
+    (lists of operator names).  Explicit chains are validated
+    structurally; a chain realized with mismatched member parallelism is
+    dropped, not an error — fusion is an optimization and a plan-derived
+    chain may be invalidated by elastic rescaling."""
     lg = app.graph
     parallelism = dict(parallelism or {})
     validate_operator_names(lg, parallelism, "parallelism")
@@ -966,7 +1280,22 @@ def prepare_app(app: StreamingApp,
         cadence = declared.get(name, 1)
         wm_every[name] = derive_watermark_every(app, name, batch) \
             if cadence == "auto" else cadence
-    return PreparedApp(lg, parallelism, routes, states, win_key_by, wm_every)
+
+    chains: List[List[str]] = []
+    if fuse is not None and fuse != "off":
+        from .fusion import detect_chains, validate_chains
+        no_fuse = frozenset(getattr(app, "no_fuse", ()))
+        tw = frozenset(app.time_windows())
+        if fuse == "auto":
+            chains = detect_chains(lg, routes, no_fuse=no_fuse,
+                                   time_windows=tw, parallelism=parallelism)
+        else:
+            chains = validate_chains(lg, routes, fuse, no_fuse=no_fuse,
+                                     time_windows=tw)
+            chains = [c for c in chains
+                      if len({parallelism[m] for m in c}) == 1]
+    return PreparedApp(lg, parallelism, routes, states, win_key_by,
+                       wm_every, chains)
 
 
 def resolve_offsets(lg, parallelism: Dict[str, int],
@@ -1039,7 +1368,37 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
     aux = initial_aux or {}
     spouts: List[Executor] = []
     tasks: List[Executor] = []
+    chain_of_head = {c[0]: c for c in prep.chains}
+    fused_members = {m for c in prep.chains for m in c[1:]}
     for name, spec in lg.operators.items():
+        if name in fused_members:
+            continue                 # realized inside the head's executor
+        chain = chain_of_head.get(name)
+        if chain is not None:
+            # one FusedExecutor per replica: consumes as the head, emits
+            # as the tail — downstream queues/lanes/poison counts are
+            # exactly the unfused plan's
+            tail = chain[-1]
+            is_sink = not lg.consumers(tail)
+            n_producer_units = sum(parallelism[p]
+                                   for p in lg.producers(name))
+            for i in range(parallelism[name]):
+                if only is not None and (name, i) not in only:
+                    continue
+                ports = [
+                    _OutPort(prep.routes.route(tail, cop).bind(
+                        parallelism[cop], vectorized=vectorized),
+                        out_q_of(tail, i, cop), batch)
+                    for cop in lg.consumers(tail)]
+                tasks.append(FusedExecutor(
+                    chain, i, parallelism[name], ports, batch, jumbo,
+                    [prep.states[m][i] for m in chain],
+                    [app.kernels[m] for m in chain],
+                    in_q=in_q_of(name, i),
+                    expected_poisons=max(n_producer_units, 1),
+                    lat_sink=latencies if is_sink else None,
+                    ckpt=coordinator, initial_aux=aux.get((name, i))))
+            continue
         is_sink = not lg.consumers(name)
         n_producer_units = sum(parallelism[p] for p in lg.producers(name))
         for i in range(parallelism[name]):
@@ -1082,7 +1441,8 @@ def build_executors(app: StreamingApp, prep: PreparedApp, *, batch: int,
 def collect_result(prep: PreparedApp, spout_tuples: int,
                    latencies: List[float], wall: float,
                    spout_offsets: Optional[Dict[str, int]] = None,
-                   checkpoints: Optional[List[Checkpoint]] = None
+                   checkpoints: Optional[List[Checkpoint]] = None,
+                   exec_stats: Optional[Dict[str, dict]] = None
                    ) -> RuntimeResult:
     """Assemble the common :class:`RuntimeResult` from final states —
     shared by the threaded and process backends."""
@@ -1106,7 +1466,8 @@ def collect_result(prep: PreparedApp, spout_tuples: int,
         latency_p99=float(np.percentile(lat, 99)),
         states=states, late_drops=late, panes_fired=panes,
         spout_offsets=dict(spout_offsets or {}),
-        checkpoints=list(checkpoints or []))
+        checkpoints=list(checkpoints or []),
+        exec_stats=dict(exec_stats or {}))
 
 
 def resolve_checkpoint_every(app: StreamingApp, checkpoint_every) -> \
@@ -1189,7 +1550,8 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
             checkpoint_every: Optional[int] = None,
             checkpoint_dir: Optional[str] = None,
             from_checkpoint: Optional[Checkpoint] = None,
-            final_watermark: bool = True
+            final_watermark: bool = True,
+            fuse=None
             ) -> RuntimeResult:
     """Execute ``app`` for ``duration`` seconds and return measured stats.
 
@@ -1233,6 +1595,11 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     byte-identical to never having stopped.  ``final_watermark=False``
     suspends an event-time run instead of draining it (no end-of-stream
     ``+inf`` mark), keeping pane buffers resident for ``migrate_states``.
+
+    ``fuse`` enables operator fusion (``"auto"``, explicit chains, or
+    ``None``/``"off"``): eligible 1:1 shuffle segments execute as single
+    :class:`FusedExecutor` threads with byte-identical results — see
+    :mod:`repro.streaming.fusion` and ``docs/API.md`` §3e.
     """
     every = resolve_checkpoint_every(app, checkpoint_every)
     if from_checkpoint is not None:
@@ -1243,7 +1610,7 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
         if every is None:
             every = from_checkpoint.checkpoint_every
     prep = prepare_app(app, parallelism, partition, initial_states,
-                       batch=batch)
+                       batch=batch, fuse=fuse)
     initial_aux = install_checkpoint(prep, from_checkpoint) \
         if from_checkpoint is not None else None
     coordinator = CheckpointCoordinator(
@@ -1297,8 +1664,12 @@ def run_app(app: StreamingApp, parallelism: Optional[Dict[str, int]] = None,
     for t in tasks:
         t.join(timeout=join_timeout)
     wall = time.perf_counter() - t_start
+    exec_stats: Dict[str, dict] = {}
+    for ex in spouts + tasks:
+        exec_stats.update(ex.stats_payload())
     return collect_result(prep, spout_counts[0], latencies, wall,
                           spout_offsets={s.name: s.emitted_batches
                                          for s in spouts},
                           checkpoints=coordinator.completed
-                          if coordinator else None)
+                          if coordinator else None,
+                          exec_stats=exec_stats)

@@ -1,0 +1,463 @@
+"""Operator fusion: 1:1 pipeline segments compile into single executors.
+
+The contract (ISSUE 10): maximal chains of fusion-eligible edges —
+shuffle-routed, fan-in 1 / fan-out 1, no device or event-time-window
+endpoint, no ``fuse=False`` opt-out, matching replica counts — run as one
+``FusedExecutor`` calling the member kernels back-to-back with no
+intermediate queue, while outputs, managed state, checkpoints and
+``migrate_states`` stay byte-identical to the unfused plan on both
+backends.  The planner prices a fused chain as one operator (summed
+selectivity-weighted service time, zero intra-chain comm), and
+``Plan.execute`` hands the chains to the runtime so what was priced is
+what runs.
+"""
+import queue
+
+import numpy as np
+import pytest
+
+from repro.core import server_b
+from repro.streaming.api import Job, Topology, TopologyError
+from repro.streaming.apps import (ALL_APPS, chain_pipeline, spike_detection,
+                                  spike_detection_eventtime,
+                                  streaming_inference, word_count)
+from repro.streaming.checkpoint import checkpoint_uids
+from repro.streaming.fusion import (detect_chains, expand_parallelism,
+                                    fuse_graph, fuse_parallelism, fused_name,
+                                    validate_chains)
+from repro.streaming.procexec import _FanIn, run_app_processes
+from repro.streaming.runtime import Executor, _Watermark, run_app
+from repro.streaming.state import merge_keyed, migrate_states, state_payload
+
+_RUNNERS = {"threads": run_app, "processes": run_app_processes}
+
+
+def _chains(app, **kw):
+    kw.setdefault("no_fuse", getattr(app, "no_fuse", frozenset()))
+    kw.setdefault("time_windows", set(app.time_windows()))
+    return detect_chains(app.graph, app.routes(), **kw)
+
+
+def _fp(rt):
+    """Byte fingerprint of every replica's state, keyed by operator."""
+    return {op: [repr(state_payload(s)) for s in sts]
+            for op, sts in sorted(rt.states.items())}
+
+
+# ---------------------------------------------------------------------------
+# chain detection
+# ---------------------------------------------------------------------------
+
+def test_detect_full_linear_chain():
+    # sd is one straight 1:1 shuffle pipeline after the spout; the count
+    # window (moving_avg) lives inside the kernel and fuses fine
+    assert _chains(spike_detection()) == [
+        ["parser", "moving_avg", "spike", "sink"]]
+
+
+def test_detect_keyed_edge_breaks_chain():
+    # wc's splitter->counter edge repartitions by key: it must stay a
+    # queue crossing, leaving two chains on either side
+    assert _chains(word_count()) == [["parser", "splitter"],
+                                     ["counter", "sink"]]
+
+
+def test_detect_fan_in_and_broadcast_break_chain():
+    # fd's predictor has two producers (data + broadcast model sync), so
+    # nothing fuses into it; its 1:1 shuffle edge to the sink still does
+    assert _chains(ALL_APPS["fd"]()) == [["predictor", "sink"]]
+
+
+def test_detect_device_operator_excluded():
+    # v1 keeps the async dispatch window at a queue boundary
+    assert _chains(streaming_inference()) == []
+
+
+def test_detect_event_time_window_excluded():
+    # pane firing is driven by the merged watermark at a lane boundary
+    assert _chains(spike_detection_eventtime()) == []
+
+
+def test_detect_parallelism_mismatch_breaks_chain():
+    app = spike_detection()
+    par = {"parser": 2, "moving_avg": 2, "spike": 1, "sink": 1}
+    assert _chains(app, parallelism=par) == [["parser", "moving_avg"],
+                                             ["spike", "sink"]]
+
+
+def test_detect_fuse_false_opt_out():
+    app = spike_detection()
+    assert _chains(app, no_fuse={"spike"}) == [["parser", "moving_avg"]]
+
+
+def test_topology_fuse_flag():
+    def src(batch, seed):
+        return np.zeros(batch)
+
+    t = (Topology("t")
+         .spout("s", src, exec_ns=100.0)
+         .op("a", lambda b, st: [b], exec_ns=100.0)
+         .op("b", lambda b, st: [b], exec_ns=100.0, fuse=False)
+         .sink("k", lambda b, st: [], exec_ns=100.0))
+    assert t.no_fuse == frozenset({"b"})
+    app = t.build()
+    assert app.no_fuse == frozenset({"b"})
+    # a->b and b->k are both poisoned by the opt-out; nothing fuses
+    assert _chains(app) == []
+    with pytest.raises(TopologyError, match="fuse"):
+        Topology("t2").op("x", lambda b, st: [b], exec_ns=1.0, fuse="yes")
+
+
+def test_validate_chains_errors():
+    app = word_count()
+    lg, routes = app.graph, app.routes()
+    with pytest.raises(ValueError, match=">= 2"):
+        validate_chains(lg, routes, [["parser"]])
+    with pytest.raises(ValueError, match="not an operator"):
+        validate_chains(lg, routes, [["parser", "nope"]])
+    with pytest.raises(ValueError, match="more than one"):
+        validate_chains(lg, routes, [["parser", "splitter"],
+                                     ["splitter", "counter"]])
+    with pytest.raises(ValueError, match="not.*edge"):
+        validate_chains(lg, routes, [["parser", "counter"]])
+    with pytest.raises(ValueError, match="not fusion-eligible"):
+        validate_chains(lg, routes, [["splitter", "counter"]])  # keyed
+    with pytest.raises(ValueError, match="not fusion-eligible"):
+        validate_chains(lg, routes, [["spout", "parser"]])      # spout head
+    ok = validate_chains(lg, routes, [["counter", "sink"]])
+    assert ok == [["counter", "sink"]]
+
+
+# ---------------------------------------------------------------------------
+# planner rewrite: fused pricing
+# ---------------------------------------------------------------------------
+
+def test_fuse_graph_pricing():
+    app = word_count()
+    lg, routes = app.graph, app.routes()
+    chains = [["parser", "splitter"], ["counter", "sink"]]
+    flg, froutes = fuse_graph(lg, routes, chains)
+    ps, cs = fused_name(chains[0]), fused_name(chains[1])
+    assert set(flg.operators) == {"spout", ps, cs}
+    assert list(flg.edges) == [("spout", ps), (ps, cs)]
+    # selectivity-weighted service-time sum: parser (sel 1.0) feeds every
+    # tuple to the splitter
+    spec = flg.operators[ps]
+    assert spec.exec_ns == pytest.approx(
+        lg.operators["parser"].exec_ns + lg.operators["splitter"].exec_ns)
+    assert spec.selectivity == pytest.approx(10.0)
+    # counter+sink: the counter sees 10 words per upstream tuple... but
+    # per *its own* input tuple cost is just counter + sink
+    cspec = flg.operators[cs]
+    assert cspec.exec_ns == pytest.approx(
+        lg.operators["counter"].exec_ns + lg.operators["sink"].exec_ns)
+    # the keyed inbound route of the old chain head survives verbatim
+    assert froutes.strategy(ps, cs) == "key"
+    # outbound rate of the fused producer = tail rate x tail edge sel
+    assert flg.sel(ps, cs) == pytest.approx(10.0)
+
+
+def test_parallelism_fuse_expand_roundtrip():
+    chains = [["a", "b"], ["c", "d"]]
+    par = {"s": 1, "a": 3, "b": 3, "c": 2, "d": 2}
+    fused = fuse_parallelism(par, chains)
+    assert fused == {"s": 1, "a+b": 3, "c+d": 2}
+    assert expand_parallelism(fused, chains) == par
+
+
+# ---------------------------------------------------------------------------
+# runtime parity: fused == unfused, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_fused_parity_chain_app(backend):
+    app = chain_pipeline()
+    base = _RUNNERS[backend](app, {}, max_batches=30, batch=64, seed=3)
+    fused = _RUNNERS[backend](chain_pipeline(), {}, max_batches=30, batch=64,
+                              seed=3, fuse="auto")
+    assert _fp(fused) == _fp(base)
+    assert fused.spout_tuples == base.spout_tuples
+
+
+def test_fused_parity_stateful_single_replica():
+    # the count-window moving average is order-sensitive: byte parity at
+    # one replica pins the chain buffer's batch-boundary semantics exactly
+    base = run_app(spike_detection(), {}, max_batches=24, batch=64, seed=5)
+    fused = run_app(spike_detection(), {}, max_batches=24, batch=64, seed=5,
+                    fuse="auto")
+    assert _fp(fused) == _fp(base)
+
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_replicated_chain_forwarding_contract(backend):
+    # a replicated fused chain forwards replica-locally (any distribution
+    # is a valid shuffle): global counts are conserved and the fused plan
+    # is deterministic against itself, but per-replica window contents
+    # are NOT promised to match the unfused round-robin — see fusion.py
+    par = {"spout": 1, "parser": 2, "moving_avg": 2, "spike": 2, "sink": 2}
+    base = _RUNNERS[backend](spike_detection(), par, max_batches=24,
+                             batch=64, seed=5)
+    fused = _RUNNERS[backend](spike_detection(), par, max_batches=24,
+                              batch=64, seed=5, fuse="auto")
+    assert fused.spout_tuples == base.spout_tuples
+    seen = lambda rt: sum(st.get("seen", 0) for st in rt.states["sink"])
+    assert seen(fused) == seen(base)
+    again = _RUNNERS[backend](spike_detection(), par, max_batches=24,
+                              batch=64, seed=5, fuse="auto")
+    assert _fp(again) == _fp(fused)
+
+
+def test_fused_parity_per_tuple_mode():
+    app = chain_pipeline()
+    base = run_app(app, {}, max_batches=10, batch=32, seed=2, jumbo=False)
+    fused = run_app(chain_pipeline(), {}, max_batches=10, batch=32, seed=2,
+                    jumbo=False, fuse="auto")
+    assert _fp(fused) == _fp(base)
+
+
+def test_explicit_chain_and_mismatch_drop():
+    app = chain_pipeline()
+    base = run_app(app, {}, max_batches=10, batch=32, seed=2)
+    part = run_app(chain_pipeline(), {}, max_batches=10, batch=32, seed=2,
+                   fuse=[["f1", "f2"], ["f3", "f4"]])
+    assert _fp(part) == _fp(base)
+    # mismatched replica counts silently unfuse (the chain may come from a
+    # plan that was elastically rescaled since)
+    from repro.streaming.runtime import prepare_app
+    par = dict({n: 1 for n in app.graph.operators}, f2=2)
+    prep = prepare_app(chain_pipeline(), par, fuse=[["f1", "f2"]])
+    assert prep.chains == []
+    prep = prepare_app(chain_pipeline(), par, fuse=[["f3", "f4"]])
+    assert prep.chains == [["f3", "f4"]]
+    # structurally invalid explicit chains still raise
+    with pytest.raises(ValueError, match="not fusion-eligible"):
+        run_app(word_count(), {}, max_batches=2,
+                fuse=[["splitter", "counter"]])
+
+
+def test_fused_keyed_store_parity():
+    # counter+sink fuses with the keyed inbound route intact: each counter
+    # replica receives exactly the unfused shards, so its store is
+    # byte-identical per replica (only the sink's intra-chain distribution
+    # changes, and its total is conserved)
+    app = word_count()
+    par = {"spout": 1, "parser": 1, "splitter": 1, "counter": 2, "sink": 2}
+    base = run_app(app, par, max_batches=12, batch=64, seed=7)
+    fused = run_app(word_count(), par, max_batches=12, batch=64, seed=7,
+                    fuse="auto")
+    assert _fp(fused)["counter"] == _fp(base)["counter"]
+    want = merge_keyed([st.managed for st in base.states["counter"]])
+    got = merge_keyed([st.managed for st in fused.states["counter"]])
+    assert got.tobytes() == want.tobytes()
+    seen = lambda rt: sum(st.get("seen", 0) for st in rt.states["sink"])
+    assert seen(fused) == seen(base)
+
+
+# ---------------------------------------------------------------------------
+# exec_stats (satellite: per-replica runtime counters)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["threads", "processes"])
+def test_exec_stats_counters(backend):
+    rt = _RUNNERS[backend](spike_detection(), {}, max_batches=10, batch=32,
+                           seed=1)
+    st = rt.exec_stats
+    assert set(st) == {"spout#0", "parser#0", "moving_avg#0", "spike#0",
+                       "sink#0"}
+    assert st["spout#0"]["batches"] == 10
+    assert st["spout#0"]["tuples_out"] == 320
+    assert st["parser#0"]["tuples_in"] == 320
+    assert st["parser#0"]["tuples_out"] == 320
+    assert st["sink#0"]["tuples_in"] == 320
+    assert st["sink#0"]["tuples_out"] == 0
+    for uid, s in st.items():
+        assert s["queue_wait_s"] >= 0.0
+        assert s["kernel_s"] > 0.0, uid
+
+
+def test_exec_stats_fused_members():
+    rt = run_app(spike_detection(), {}, max_batches=10, batch=32, seed=1,
+                 fuse="auto")
+    st = rt.exec_stats
+    # every member still reports under its own uid
+    assert set(st) == {"spout#0", "parser#0", "moving_avg#0", "spike#0",
+                       "sink#0"}
+    assert st["parser#0"]["tuples_in"] == 320
+    assert st["sink#0"]["tuples_in"] == 320
+    assert st["sink#0"]["tuples_out"] == 0
+    # queue wait is a chain-level quantity: it lands on the head
+    assert st["moving_avg#0"]["queue_wait_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# single-lane fast path (satellite: skip the merge when there is one lane)
+# ---------------------------------------------------------------------------
+
+def test_single_lane_watermark_fast_path():
+    ex = Executor("v#0", [], 64, True, {}, expected_poisons=1)
+    assert ex._single_lane
+    ex._on_watermark(_Watermark("u#0", 5.0))
+    assert ex._wm_fwd == 5.0
+    # the merger was never touched — the lane value IS the merged value
+    assert ex._wm_merge._lanes == {}
+    assert ex._aux_payload() == {"wm_lanes": {"u#0": 5.0}, "wm_fwd": 5.0}
+    # regressions are caught by the frontier check, like the merged path
+    ex._on_watermark(_Watermark("u#0", 4.0))
+    assert ex._wm_fwd == 5.0
+
+
+def test_multi_lane_still_merges():
+    ex = Executor("v#0", [], 64, True, {}, expected_poisons=2)
+    assert not ex._single_lane
+    ex._on_watermark(_Watermark("u#0", 5.0))
+    # one of two lanes reported: the min-merge cannot advance yet
+    assert ex._wm_fwd == float("-inf")
+    ex._on_watermark(_Watermark("u#1", 3.0))
+    assert ex._wm_fwd == 3.0
+
+
+def test_fanin_solo_fast_path():
+    q1 = queue.Queue()
+    q1.put("a")
+    f = _FanIn([q1])
+    assert f._solo is q1
+    assert f.get() == "a"
+    q2 = queue.Queue()
+    f2 = _FanIn([q1, q2])
+    assert f2._solo is None
+    q2.put("b")
+    assert f2.get() == "b"
+
+
+# ---------------------------------------------------------------------------
+# checkpoints: fused and unfused snapshots are interchangeable
+# ---------------------------------------------------------------------------
+
+def _resume_batches(total, ck):
+    off = set(ck.spout_offsets.values())
+    assert len(off) == 1
+    return total - off.pop()
+
+
+def test_checkpoint_roundtrip_through_fused_chain():
+    app = spike_detection()
+    total = 24
+    base = run_app(app, {}, batch=64, max_batches=total, seed=5)
+    want = _fp(base)
+    fused = run_app(spike_detection(), {}, batch=64, max_batches=total,
+                    seed=5, checkpoint_every=6, fuse="auto")
+    assert [c.ckpt_id for c in fused.checkpoints] == [1, 2, 3, 4]
+    # a fused run deposits per MEMBER uid — the snapshot schema is plan-
+    # agnostic, so an unfused resume reads it directly
+    for ck in fused.checkpoints:
+        assert set(ck.states) == checkpoint_uids(app, {})
+        rt = run_app(spike_detection(), batch=64, seed=5,
+                     max_batches=_resume_batches(total, ck),
+                     from_checkpoint=ck)
+        assert _fp(rt) == want, f"unfused resume from fused ckpt {ck.ckpt_id}"
+    # and the reverse: a fused resume of an unfused snapshot
+    plain = run_app(spike_detection(), {}, batch=64, max_batches=total,
+                    seed=5, checkpoint_every=6)
+    for ck in plain.checkpoints:
+        rt = run_app(spike_detection(), batch=64, seed=5,
+                     max_batches=_resume_batches(total, ck),
+                     from_checkpoint=ck, fuse="auto")
+        assert _fp(rt) == want, f"fused resume from plain ckpt {ck.ckpt_id}"
+
+
+def test_checkpoint_fused_processes_to_threads():
+    total = 16
+    base = run_app(chain_pipeline(), {}, batch=64, max_batches=total, seed=9)
+    fused = run_app_processes(chain_pipeline(), {}, batch=64,
+                              max_batches=total, seed=9, checkpoint_every=4,
+                              fuse="auto")
+    assert fused.checkpoints
+    ck = fused.checkpoints[-1]
+    rt = run_app(chain_pipeline(), batch=64, seed=9,
+                 max_batches=_resume_batches(total, ck), from_checkpoint=ck)
+    assert _fp(rt) == _fp(base)
+
+
+# ---------------------------------------------------------------------------
+# state migration across a fuse/unfuse replan
+# ---------------------------------------------------------------------------
+
+def test_migrate_states_across_fuse_replan():
+    """First half fused, replan to a wider unfused layout, migrate, resume:
+    the keyed store unions to the uninterrupted run's bytes."""
+    total, cut, seed = 8, 3, 42
+    app = word_count()
+    ref = run_app(word_count(), {}, batch=64, max_batches=total, seed=seed)
+    ref_counts = ref.states["counter"][0].managed.table
+
+    r1 = run_app(word_count(), {}, batch=64, max_batches=cut, seed=seed,
+                 fuse="auto")
+    par2 = {"spout": 1, "parser": 1, "splitter": 1, "counter": 2, "sink": 1}
+    seeded = migrate_states(app, r1.states, par2)
+    # counter now runs 2 replicas while sink runs 1: fuse="auto" keeps the
+    # parser+splitter chain and drops counter+sink on its own
+    r2 = run_app(word_count(), par2, batch=64, max_batches=total - cut,
+                 seed=seed, initial_states=seeded,
+                 initial_offsets=r1.spout_offsets, fuse="auto")
+    merged = merge_keyed([st.managed for st in r2.states["counter"]])
+    assert merged.tobytes() == ref_counts.tobytes()
+    assert r1.spout_tuples + r2.spout_tuples == ref.spout_tuples
+
+
+# ---------------------------------------------------------------------------
+# Job.plan / Plan.execute integration
+# ---------------------------------------------------------------------------
+
+def test_plan_fuse_auto_end_to_end():
+    job = Job(spike_detection())
+    m = server_b()
+    # single-replica chain: byte parity with the unfused plan end-to-end
+    par = {"spout": 1, "parser": 1, "moving_avg": 1, "spike": 1, "sink": 1}
+    p_off = job.plan(m, "ff", input_rate=1e6, parallelism=par)
+    p_on = job.plan(m, "bnb", input_rate=1e6, parallelism=par, fuse="auto")
+    assert p_on.chains == [["parser", "moving_avg", "spike", "sink"]]
+    fused = fused_name(p_on.chains[0])
+    assert fused in p_on.graph.parallelism
+    # plan.parallelism speaks member names so execute()/migrate can use it
+    assert p_on.parallelism == par
+    assert p_on.options["fuse"] == "auto"
+    assert p_on.estimate().throughput > 0
+    assert p_on.simulate("des", batch=64, horizon=0.005).throughput > 0
+    assert fused in p_on.describe()
+    r_off = p_off.execute(batches=16, batch=64, seed=3).raw
+    r_on = p_on.execute(batches=16, batch=64, seed=3).raw
+    assert _fp(r_on) == _fp(r_off)
+    r_proc = p_on.execute(batches=16, batch=64, seed=3,
+                          backend="processes").raw
+    assert _fp(r_proc) == _fp(r_off)
+
+
+def test_plan_fuse_explicit_and_validation():
+    job = Job(spike_detection())
+    m = server_b()
+    par = {"spout": 1, "parser": 2, "moving_avg": 2, "spike": 2, "sink": 2}
+    p = job.plan(m, "ff", input_rate=1e6, parallelism=par,
+                 fuse=[["parser", "moving_avg"]])
+    assert p.chains == [["parser", "moving_avg"]]
+    # a parallelism mismatch drops the explicit chain instead of planning
+    # an unrealizable fusion
+    p_mm = job.plan(m, "ff", input_rate=1e6,
+                    parallelism=dict(par, moving_avg=3),
+                    fuse=[["parser", "moving_avg"]])
+    assert p_mm.chains == []
+    with pytest.raises(ValueError, match="not fusion-eligible"):
+        Job(word_count()).plan(m, "ff", input_rate=1e6,
+                               fuse=[["splitter", "counter"]])
+
+
+def test_plan_fuse_rlas_scaling():
+    # the optimizer scales the fused unit as one operator; every member
+    # inherits its replica count, so the chain survives down-scaling
+    job = Job(chain_pipeline())
+    plan = job.plan(server_b(), "rlas", input_rate=2e5, fuse="auto")
+    assert plan.chains == [["f1", "f2", "f3", "f4", "sink"]]
+    ks = {plan.parallelism[m] for m in plan.chains[0]}
+    assert len(ks) == 1
+    r = plan.execute(batches=8, batch=64, seed=1, max_threads=4).raw
+    assert r.spout_tuples == 8 * 64 * sum(
+        plan.parallelism[s] for s in ["spout"])
